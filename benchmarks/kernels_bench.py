@@ -1,0 +1,89 @@
+"""Kernel micro-benchmarks.
+
+Wall-time on this CPU container is NOT a TPU signal, so each kernel reports:
+  * us_per_call of the XLA reference path on CPU (sanity/regression number),
+  * derived TPU-roofline quantities: bytes moved, ideal v5e time at HBM bw,
+    MXU-bound time at int8/bf16 peak, and the VMEM working set implied by
+    the BlockSpec tiling (must be ≪ 16 MiB).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.analysis.roofline import HW_V5E
+from repro.kernels.kv_attention.ref import kv_attention_ref
+from repro.kernels.qmatmul_w8a8.ref import qmatmul_w8a8_ref
+from repro.kernels.qmatmul_w8a16.ref import qmatmul_w8a16_ref
+from repro.kernels.quantize_act.ref import quantize_act_ref
+
+
+def _time(fn, *args, iters=5):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else fn(*args).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+        (out[0] if isinstance(out, tuple) else out).block_until_ready()
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def kernel_rows():
+    rows = []
+    # --- W8A8 prefill-shape GEMM: M=4096 tokens, K=N=4096 -----------------
+    M, K, N = 4096, 4096, 4096
+    ks = jax.random.split(jax.random.PRNGKey(0), 2)
+    a_q = jax.random.randint(ks[0], (M, K), -127, 128, dtype=jnp.int8)
+    w_q = jax.random.randint(ks[1], (K, N), -127, 128, dtype=jnp.int8)
+    f = jax.jit(lambda a, w: qmatmul_w8a8_ref(a, w, 0.01, 0.01))
+    rows.append(("w8a8_4096x4096x4096.cpu_us", _time(f, a_q, w_q)))
+    flops = 2 * M * K * N
+    rows.append(("w8a8.v5e_int8_mxu_bound_us",
+                 flops / HW_V5E["peak_flops_int8"] * 1e6))
+    rows.append(("w8a8.v5e_bf16_equiv_us",
+                 flops / HW_V5E["peak_flops_bf16"] * 1e6))
+    vmem = (128 * 512 + 512 * 128) * 1 + 128 * 128 * (4 + 4)
+    rows.append(("w8a8.vmem_working_set_kib", vmem / 1024))
+
+    # --- W8A16 decode-shape GEMM: M=8 (batch), big K,N ---------------------
+    M, K, N = 8, 8192, 8192
+    a = jax.random.normal(ks[0], (M, K), jnp.bfloat16)
+    w_q = jax.random.randint(ks[1], (K, N), -127, 128, dtype=jnp.int8)
+    f = jax.jit(lambda a, w: qmatmul_w8a16_ref(a, w, 0.01))
+    rows.append(("w8a16_8x8192x8192.cpu_us", _time(f, a, w_q)))
+    hbm_int8 = K * N * 1
+    hbm_bf16 = K * N * 2
+    rows.append(("w8a16.v5e_hbm_bound_us_int8_weights",
+                 hbm_int8 / HW_V5E["hbm_bw"] * 1e6))
+    rows.append(("w8a16.v5e_hbm_bound_us_bf16_weights",
+                 hbm_bf16 / HW_V5E["hbm_bw"] * 1e6))
+    rows.append(("w8a16.decode_weight_bytes_speedup", hbm_bf16 / hbm_int8))
+    vmem = 8 * 1024 * 2 + 1024 * 512 * 1 + 8 * 512 * (4 + 2)
+    rows.append(("w8a16.vmem_working_set_kib", vmem / 1024))
+
+    # --- dynamic activation quantize ---------------------------------------
+    M, K = 4096, 8192
+    x = jax.random.normal(ks[0], (M, K))
+    f = jax.jit(lambda x: quantize_act_ref(x)[0])
+    rows.append(("quantize_act_4096x8192.cpu_us", _time(f, x)))
+    rows.append(("quantize_act.v5e_hbm_bound_us",
+                 (M * K * 4 + M * K * 1) / HW_V5E["hbm_bw"] * 1e6))
+
+    # --- int8-KV decode attention (one 32k-context token, 8 kv heads) ------
+    B, S, H, hd = 8, 32768, 8, 128
+    kq = jax.random.randint(ks[0], (B, S, H, hd), -127, 128, dtype=jnp.int8)
+    ksc = jax.random.uniform(ks[1], (B, S, H), minval=0.01, maxval=0.05)
+    qv = jax.random.normal(ks[0], (B, H, hd))
+    f = jax.jit(lambda q, kq, ksc: kv_attention_ref(q, kq, ksc, kq, ksc))
+    rows.append(("kv_attention_8x32k.cpu_us", _time(f, qv, kq, ksc)))
+    cache_int8 = 2 * B * S * H * (hd * 1 + 4)
+    cache_bf16 = 2 * B * S * H * hd * 2
+    rows.append(("kv_attention.v5e_cache_stream_us_int8",
+                 cache_int8 / HW_V5E["hbm_bw"] * 1e6))
+    rows.append(("kv_attention.v5e_cache_stream_us_bf16",
+                 cache_bf16 / HW_V5E["hbm_bw"] * 1e6))
+    vmem = 2 * 512 * H * hd * 1 + 2 * 512 * H * 4 + H * hd * 4
+    rows.append(("kv_attention.vmem_working_set_kib", vmem / 1024))
+    return rows

@@ -1,0 +1,63 @@
+"""Aggregate results/dryrun/*.json into the §Roofline table (markdown + CSV
+rows for benchmarks.run)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
+
+
+def load_cells(mesh="single", tag=""):
+    cells = {}
+    for path in sorted(glob.glob(os.path.join(RESULTS, f"*__{mesh}{tag}.json"))):
+        name = os.path.basename(path).replace(f"__{mesh}{tag}.json", "")
+        with open(path) as f:
+            cells[name] = json.load(f)
+    return cells
+
+
+def what_moves_it(r, cell):
+    dom = r["dominant"]
+    if dom == "compute":
+        return "cut remat recompute / int8 MXU for the quantized path"
+    if dom == "memory":
+        return "quantize weights+cache (W8A16 halves HBM bytes) / larger per-step batch"
+    return "reduce cross-shard resharding (fix boundary specs) / overlap collectives"
+
+
+def markdown_table(mesh="single", tag=""):
+    cells = load_cells(mesh, tag)
+    lines = [
+        "| arch × shape | compute s | memory s (HLO) | memory s (analytic) | "
+        "collective s | dominant | 6ND/HLO | roofline frac | fits HBM | fix |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for name, c in sorted(cells.items()):
+        if c.get("status") == "skipped":
+            lines.append(f"| {name} | — | — | — | — | skipped | — | — | — | "
+                         f"{c['reason'][:50]} |")
+            continue
+        if c.get("status") != "ok":
+            lines.append(f"| {name} | — | — | — | — | ERROR | — | — | — | |")
+            continue
+        r = c["roofline"]
+        lines.append(
+            f"| {name} | {r['compute_s']:.4f} | {r['memory_s']:.3f} | "
+            f"{r.get('memory_analytic_s', 0):.4f} | {r['collective_s']:.4f} | "
+            f"{r['dominant']} | {r['useful_flops_ratio']:.2f} | "
+            f"{r['roofline_fraction']:.4f} | {c['fits_hbm']} | "
+            f"{what_moves_it(r, c)} |"
+        )
+    return "\n".join(lines)
+
+
+def roofline_rows(mesh="single"):
+    rows = []
+    for name, c in sorted(load_cells(mesh).items()):
+        if c.get("status") == "ok":
+            r = c["roofline"]
+            rows.append((f"{name}.bound_s", r["bound_time_s"]))
+            rows.append((f"{name}.dominant", r["dominant"]))
+    return rows

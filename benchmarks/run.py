@@ -1,0 +1,56 @@
+"""Benchmark harness entry point: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows. Accuracy tables emit their
+metric in the ``derived`` column with us_per_call as the wall time of the
+full table evaluation.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def _emit(name, us, derived):
+    print(f"{name},{us:.1f},{derived}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated benchmark names to run")
+    ap.add_argument("--skip-lm", action="store_true",
+                    help="skip the (slower) LM-family DFQ benchmarks")
+    args, _ = ap.parse_known_args()
+
+    from .kernels_bench import kernel_rows
+    from .roofline_table import roofline_rows
+    from .tables import ALL_TABLES
+
+    benches = dict(ALL_TABLES)
+    benches["kernels"] = kernel_rows
+    benches["roofline"] = roofline_rows
+    if not args.skip_lm:
+        from .lm_dfq import lm_dfq_all
+
+        benches["lm_dfq"] = lm_dfq_all
+
+    selected = benches
+    if args.only:
+        keys = args.only.split(",")
+        selected = {k: benches[k] for k in keys}
+
+    print("name,us_per_call,derived")
+    for bench_name, fn in selected.items():
+        t0 = time.perf_counter()
+        try:
+            rows = fn()
+        except Exception as e:  # noqa: BLE001
+            _emit(f"{bench_name}.ERROR", 0.0, repr(e)[:80])
+            continue
+        dt_us = (time.perf_counter() - t0) * 1e6
+        for row_name, value in rows:
+            _emit(f"{bench_name}.{row_name}", dt_us / max(len(rows), 1), value)
+
+
+if __name__ == "__main__":
+    main()

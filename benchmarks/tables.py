@@ -1,0 +1,251 @@
+"""Paper-table benchmarks on the trained CNN (the faithful-reproduction
+vehicle). One function per paper table/figure; each returns a list of
+(row_name, value) and is registered with benchmarks.run.
+
+Pipeline per variant (paper Fig. 4 order): BN fold → ReLU6→ReLU → CLE →
+high-bias absorption → weight INT-k quant → bias correction → data-free
+activation quant (β ± 6γ).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import QuantSpec, channel_ranges, fake_quant, output_bias_error, sqnr_db
+
+from ._cnn_pipeline import (
+    adversarial_rescale,
+    clip_weights,
+    eval_accuracy,
+    get_trained_cnn,
+)
+
+_STATE = {}
+
+
+def _setup():
+    if "model" in _STATE:
+        return _STATE
+    model, params = get_trained_cnn()
+    folded = model.fold(params)
+    hostile = adversarial_rescale(folded)          # the hard-to-quantize model
+    _STATE.update(model=model, folded=folded, hostile=hostile)
+    return _STATE
+
+
+def _acc(model, folded, act_clip, *, w_bits=None, act_bits=8, act_sym=False,
+         bias_correct=False, per_channel=False, sym_w=False, n_batches=6):
+    spec = QuantSpec(bits=w_bits, symmetric=sym_w,
+                     per_channel_axis=-1 if per_channel else None) if w_bits else None
+    q = model.quantize_weights(folded, spec) if spec else folded
+    if bias_correct and spec:
+        q = model.bias_correct_analytic(folded, q, spec, act_clip=act_clip)
+    return eval_accuracy(model, q, act_clip=act_clip, act_bits=act_bits,
+                         act_symmetric=act_sym, n_batches=n_batches)
+
+
+def table1_cle():
+    """Paper Table 1: original / replace ReLU6 / +equalization / +absorbing
+    bias / per-channel — FP32 and INT8 accuracy."""
+    st = _setup()
+    model, hostile = st["model"], st["hostile"]
+    rows = []
+    rows.append(("original_fp32", eval_accuracy(model, hostile, act_clip=6.0)))
+    rows.append(("original_int8", _acc(model, hostile, 6.0, w_bits=8)))
+    rows.append(("replace_relu6_fp32", eval_accuracy(model, hostile, act_clip=None)))
+    rows.append(("replace_relu6_int8", _acc(model, hostile, None, w_bits=8)))
+    eq = model.equalize(hostile)
+    rows.append(("cle_fp32", eval_accuracy(model, eq, act_clip=None)))
+    rows.append(("cle_int8", _acc(model, eq, None, w_bits=8)))
+    ab = model.absorb_high_bias(eq)
+    rows.append(("cle_absorb_fp32", eval_accuracy(model, ab, act_clip=None)))
+    rows.append(("cle_absorb_int8", _acc(model, ab, None, w_bits=8)))
+    rows.append(("per_channel_int8", _acc(model, hostile, 6.0, w_bits=8,
+                                          per_channel=True)))
+    return rows
+
+
+def table2_bias_correction():
+    """Paper Table 2: bias correction alone / clip@15 (+BC) / CLE+BA (+BC)."""
+    st = _setup()
+    model, hostile = st["model"], st["hostile"]
+    rows = []
+    rows.append(("original_int8", _acc(model, hostile, 6.0, w_bits=8)))
+    rows.append(("bias_corr_int8", _acc(model, hostile, 6.0, w_bits=8,
+                                        bias_correct=True)))
+    clipped = clip_weights(hostile, 15.0)
+    rows.append(("clip15_fp32", eval_accuracy(model, clipped, act_clip=6.0)))
+    rows.append(("clip15_int8", _acc(model, clipped, 6.0, w_bits=8)))
+    rows.append(("clip15_bias_corr_int8", _acc(model, clipped, 6.0, w_bits=8,
+                                               bias_correct=True)))
+    dfq = model.absorb_high_bias(model.equalize(hostile))
+    rows.append(("cle_ba_int8", _acc(model, dfq, None, w_bits=8)))
+    rows.append(("cle_ba_bc_int8 (full DFQ)", _acc(model, dfq, None, w_bits=8,
+                                                   bias_correct=True)))
+    return rows
+
+
+def table5_bitwidths():
+    """Paper Table 5 / Fig. 1: per-layer vs DFQ vs per-channel across INT8 /
+    INT6 (and INT5/INT4 for the Fig. 1 sweep)."""
+    st = _setup()
+    model, hostile = st["model"], st["hostile"]
+    dfq = model.absorb_high_bias(model.equalize(hostile))
+    rows = []
+    for bits in (8, 6, 5, 4):
+        rows.append((f"per_layer_int{bits}", _acc(model, hostile, 6.0, w_bits=bits,
+                                                  act_bits=max(bits, 8))))
+        rows.append((f"dfq_int{bits}", _acc(model, dfq, None, w_bits=bits,
+                                            act_bits=max(bits, 8), bias_correct=True)))
+        rows.append((f"per_channel_int{bits}", _acc(model, hostile, 6.0, w_bits=bits,
+                                                    act_bits=max(bits, 8),
+                                                    per_channel=True)))
+    return rows
+
+
+def table6_analytic_vs_empirical():
+    """Paper Table 6 (appendix D): analytic vs empirical bias correction."""
+    from repro.data import synthetic_image_batch
+
+    st = _setup()
+    model, hostile = st["model"], st["hostile"]
+    dfq = model.absorb_high_bias(model.equalize(hostile))
+    spec = QuantSpec(bits=8)
+    q = model.quantize_weights(dfq, spec)
+    rows = [("no_bias_corr", eval_accuracy(model, q, act_clip=None, act_bits=8))]
+    q_an = model.bias_correct_analytic(dfq, q, spec, act_clip=None)
+    rows.append(("analytic_bc", eval_accuracy(model, q_an, act_clip=None, act_bits=8)))
+
+    # empirical BC (appendix D): measure E[ỹ−y] layer-by-layer on calibration
+    # images and fold into biases
+    import copy
+
+    calib = synthetic_image_batch(7, 0, 256, 32, 3, 8)["x"]
+    q_emp = copy.deepcopy(jax.device_get(q))
+
+    def act(h):
+        return jax.nn.relu(h)
+
+    h_fp = jnp.asarray(calib)
+    h_q = jnp.asarray(calib)
+    from repro.models.cnn import _conv
+
+    def run_layer(folded_layer, h, stride=1, depthwise=False):
+        w = jnp.asarray(folded_layer.w)
+        groups = w.shape[-1] if depthwise else 1
+        return _conv(h, w, stride, groups=groups) + jnp.asarray(folded_layer.b)
+
+    # stem
+    y_fp = run_layer(dfq["stem"], h_fp, 2)
+    y_q = run_layer(q_emp["stem"], h_q, 2)
+    err = jnp.mean(y_q - y_fp, axis=(0, 1, 2))
+    q_emp["stem"] = q_emp["stem"]._replace(b=jnp.asarray(q_emp["stem"].b) - err)
+    h_fp, h_q = act(y_fp), act(y_q - err)
+    for i in range(len(dfq["blocks"])):
+        for part, depthwise in (("expand", False), ("dw", True), ("project", False)):
+            stride = dfq["blocks"][i]["stride"] if part == "dw" else 1
+            y_fp = run_layer(dfq["blocks"][i][part], h_fp, stride, depthwise)
+            y_q = run_layer(q_emp["blocks"][i][part], h_q, stride, depthwise)
+            err = jnp.mean(y_q - y_fp, axis=(0, 1, 2))
+            q_emp["blocks"][i][part] = q_emp["blocks"][i][part]._replace(
+                b=jnp.asarray(q_emp["blocks"][i][part].b) - err)
+            y_q = y_q - err
+            if part == "project":
+                h_fp, h_q = y_fp, y_q
+            else:
+                h_fp, h_q = act(y_fp), act(y_q)
+    rows.append(("empirical_bc", eval_accuracy(model, q_emp, act_clip=None,
+                                               act_bits=8)))
+    return rows
+
+
+def table7_sym_asym():
+    """Paper Table 7 (appendix E): symmetric vs asymmetric after DFQ."""
+    st = _setup()
+    model, hostile = st["model"], st["hostile"]
+    dfq = model.absorb_high_bias(model.equalize(hostile))
+    return [
+        ("dfq_symmetric", _acc(model, dfq, None, w_bits=8, sym_w=True,
+                               act_sym=True, bias_correct=True)),
+        ("dfq_asymmetric", _acc(model, dfq, None, w_bits=8, bias_correct=True)),
+    ]
+
+
+def table8_per_channel_plus_dfq():
+    """Paper Table 8 (appendix E): DFQ components on top of per-channel."""
+    st = _setup()
+    model, hostile = st["model"], st["hostile"]
+    cle = model.equalize(hostile)
+    cle_ba = model.absorb_high_bias(cle)
+    return [
+        ("pc_original", _acc(model, hostile, 6.0, w_bits=8, per_channel=True)),
+        ("pc_bias_corr", _acc(model, hostile, 6.0, w_bits=8, per_channel=True,
+                              bias_correct=True)),
+        ("pc_cle", _acc(model, cle, None, w_bits=8, per_channel=True)),
+        ("pc_cle_ba_bc", _acc(model, cle_ba, None, w_bits=8, per_channel=True,
+                              bias_correct=True)),
+    ]
+
+
+def fig2_channel_ranges():
+    """Figs. 2/6: per-channel weight-range spread before/after CLE."""
+    st = _setup()
+    model, hostile = st["model"], st["hostile"]
+    eq = model.equalize(hostile)
+
+    def spread(folded):
+        vals = []
+        for blk in folded["blocks"]:
+            r = channel_ranges(jnp.asarray(blk["dw"].w), -1)
+            r = jnp.maximum(r, 1e-9)
+            vals.append(float(jnp.max(r) / jnp.median(r)))
+        return float(np.mean(vals))
+
+    return [
+        ("dw_range_spread_before (max/median)", spread(hostile)),
+        ("dw_range_spread_after", spread(eq)),
+    ]
+
+
+def fig3_output_bias():
+    """Fig. 3: per-channel biased output error before/after bias correction."""
+    from repro.data import synthetic_image_batch
+    from repro.models.cnn import _conv
+
+    st = _setup()
+    model, hostile = st["model"], st["hostile"]
+    dfq = model.absorb_high_bias(model.equalize(hostile))
+    spec = QuantSpec(bits=8)
+    q = model.quantize_weights(dfq, spec)
+    q_bc = model.bias_correct_analytic(dfq, q, spec, act_clip=None)
+
+    x = synthetic_image_batch(11, 0, 128, 32, 3, 8)["x"]
+    h = jax.nn.relu(_conv(x, jnp.asarray(dfq["stem"].w), 2) + jnp.asarray(dfq["stem"].b))
+    blk_fp, blk_q, blk_bc = dfq["blocks"][1], q["blocks"][1], q_bc["blocks"][1]
+    h2 = jax.nn.relu(_conv(h, jnp.asarray(dfq["blocks"][0]["expand"].w)) +
+                     jnp.asarray(dfq["blocks"][0]["expand"].b))
+    y_fp = _conv(h2, jnp.asarray(dfq["blocks"][0]["dw"].w), 1,
+                 groups=h2.shape[-1]) + jnp.asarray(dfq["blocks"][0]["dw"].b)
+    y_q = _conv(h2, jnp.asarray(q["blocks"][0]["dw"].w), 1,
+                groups=h2.shape[-1]) + jnp.asarray(q["blocks"][0]["dw"].b)
+    y_bc = _conv(h2, jnp.asarray(q_bc["blocks"][0]["dw"].w), 1,
+                 groups=h2.shape[-1]) + jnp.asarray(q_bc["blocks"][0]["dw"].b)
+    e_before = output_bias_error(y_fp, y_q)
+    e_after = output_bias_error(y_fp, y_bc)
+    return [
+        ("dw_mean_abs_output_bias_before", float(jnp.mean(jnp.abs(e_before)))),
+        ("dw_mean_abs_output_bias_after_bc", float(jnp.mean(jnp.abs(e_after)))),
+    ]
+
+
+ALL_TABLES = {
+    "table1_cle": table1_cle,
+    "table2_bias_correction": table2_bias_correction,
+    "table5_bitwidths": table5_bitwidths,
+    "table6_analytic_vs_empirical": table6_analytic_vs_empirical,
+    "table7_sym_asym": table7_sym_asym,
+    "table8_per_channel_plus_dfq": table8_per_channel_plus_dfq,
+    "fig2_channel_ranges": fig2_channel_ranges,
+    "fig3_output_bias": fig3_output_bias,
+}

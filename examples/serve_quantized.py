@@ -1,0 +1,13 @@
+"""Batched INT8 serving example (wraps the production driver):
+
+    PYTHONPATH=src python examples/serve_quantized.py
+"""
+import sys
+
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    sys.argv = [sys.argv[0], "--arch", "qwen2-0.5b", "--smoke",
+                "--quantize", "w8a16", "--batch", "4",
+                "--prompt-len", "16", "--gen-len", "16"]
+    main()

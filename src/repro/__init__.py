@@ -1,0 +1,6 @@
+"""repro: production-grade JAX framework reproducing
+"Data-Free Quantization Through Weight Equalization and Bias Correction"
+(Nagel et al., ICCV 2019) and extending it to modern LM architectures on TPU.
+"""
+
+__version__ = "1.0.0"

@@ -1,0 +1,6 @@
+from .roofline import (  # noqa: F401
+    HW_V5E,
+    collective_bytes_from_hlo,
+    model_flops,
+    roofline_report,
+)

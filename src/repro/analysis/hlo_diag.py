@@ -1,0 +1,50 @@
+"""HLO collective diagnostics — the dry-run 'profiler' (DESIGN §7).
+
+Groups every collective in an optimized per-device module by (op, shape) and
+ranks by bytes: the hypothesis generator for the perf loop.
+"""
+from __future__ import annotations
+
+import collections
+import re
+
+from .roofline import _DTYPE_BYTES, _SHAPE_RE
+
+
+def shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(",") if dims else []:
+            n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def top_collectives(hlo_text: str, k: int = 15):
+    agg = collections.Counter()
+    count = collections.Counter()
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        m = re.match(
+            r"(?:ROOT\s+)?%?[\w.\-]+\s*=\s*((?:\([^)]*\))|(?:[a-z0-9\[\],{}: ]+?))\s+"
+            r"([a-z\-]+?)(-start|-done)?\(", s)
+        if not m:
+            continue
+        tstr, base, phase = m.groups()
+        if base in ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                    "collective-permute") and phase != "-done":
+            key = (base, tstr[:70])
+            agg[key] += shape_bytes(tstr)
+            count[key] += 1
+    rows = [(b, n, base, t) for (base, t), b in agg.items()
+            for n in [count[(base, t)]]]
+    rows.sort(reverse=True)
+    return rows[:k]
+
+
+def print_top(hlo_text: str, k: int = 15):
+    for b, n, base, t in top_collectives(hlo_text, k):
+        print(f"{b/1e9:9.3f} GB  ×{n:<4d} {base:18s} {t}")

@@ -1,0 +1,148 @@
+"""Fault-tolerant checkpointer: atomic, async, mesh-independent.
+
+Layout per step:
+    <dir>/step_<N>.tmp-<pid>/   (write)  →  atomic rename →  <dir>/step_<N>/
+        manifest.json           pytree structure + shapes/dtypes
+        arr_<i>.npy             one file per leaf (host np arrays)
+
+Properties the runtime relies on:
+  * **atomicity** — a crash mid-write leaves only a .tmp dir, which restore
+    ignores and cleanup removes; a visible step_N dir is always complete,
+  * **async** — save() snapshots leaves to host then writes on a worker
+    thread; training continues (wait() joins before the next save),
+  * **mesh independence** — leaves are stored unsharded; restore device_puts
+    onto ANY target sharding, so an elastic restart on a different mesh/world
+    size is just restore(new_shardings) (runtime/elastic.py).
+  * **retention** — keep the most recent K checkpoints.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten(tree):
+    leaves, treedef = jax.tree.flatten(tree)
+    return leaves, treedef
+
+
+class Checkpointer:
+    def __init__(self, directory: str, keep: int = 3):
+        self.dir = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+        self._thread: Optional[threading.Thread] = None
+        self._cleanup_tmp()
+
+    # ------------------------------------------------------------------ save
+    def save(self, step: int, tree: Any, blocking: bool = False) -> None:
+        self.wait()
+        leaves, treedef = _flatten(tree)
+        host_leaves = [np.asarray(jax.device_get(x)) for x in leaves]
+        spec = {
+            "step": step,
+            # restore() rebuilds structure from its target_tree, so only the
+            # leaf inventory is persisted (proto treedefs reject NamedTuples)
+            "n_leaves": len(host_leaves),
+            "shapes": [list(a.shape) for a in host_leaves],
+            "dtypes": [str(a.dtype) for a in host_leaves],
+        }
+        # structure is also stored as a path skeleton for proto-less restore
+        skeleton = jax.tree.map(lambda _: 0, tree)
+
+        def _write():
+            tmp = os.path.join(self.dir, f"step_{step}.tmp-{os.getpid()}")
+            final = os.path.join(self.dir, f"step_{step}")
+            os.makedirs(tmp, exist_ok=True)
+            for i, a in enumerate(host_leaves):
+                np.save(os.path.join(tmp, f"arr_{i}.npy"), a)
+            with open(os.path.join(tmp, "manifest.json"), "w") as f:
+                json.dump(spec, f)
+            with open(os.path.join(tmp, "skeleton.json"), "w") as f:
+                json.dump(_skeleton_to_json(skeleton), f)
+            if os.path.exists(final):
+                shutil.rmtree(final)
+            os.rename(tmp, final)
+            self._gc()
+
+        if blocking:
+            _write()
+        else:
+            self._thread = threading.Thread(target=_write, daemon=True)
+            self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    # --------------------------------------------------------------- restore
+    def latest_step(self) -> Optional[int]:
+        steps = [
+            int(d.split("_")[1])
+            for d in os.listdir(self.dir)
+            if d.startswith("step_") and ".tmp" not in d
+            and os.path.exists(os.path.join(self.dir, d, "manifest.json"))
+        ]
+        return max(steps) if steps else None
+
+    def restore(
+        self,
+        target_tree: Any,
+        step: Optional[int] = None,
+        shardings: Any = None,
+    ) -> tuple[Any, int]:
+        """Restore into the structure of ``target_tree``. ``shardings`` (a
+        matching pytree of jax.sharding.Sharding or None) re-shards each leaf
+        onto the CURRENT mesh — the elastic-restart path."""
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint in {self.dir}")
+        d = os.path.join(self.dir, f"step_{step}")
+        leaves, treedef = _flatten(target_tree)
+        with open(os.path.join(d, "manifest.json")) as f:
+            spec = json.load(f)
+        assert spec["n_leaves"] == len(leaves), (
+            f"checkpoint has {spec['n_leaves']} leaves, target {len(leaves)}"
+        )
+        loaded = [np.load(os.path.join(d, f"arr_{i}.npy")) for i in range(len(leaves))]
+        for a, ref in zip(loaded, leaves):
+            assert tuple(a.shape) == tuple(ref.shape), (a.shape, ref.shape)
+        if shardings is not None:
+            shard_leaves = jax.tree.flatten(shardings)[0]
+            loaded = [
+                jax.device_put(a, s) if s is not None else jax.numpy.asarray(a)
+                for a, s in zip(loaded, shard_leaves)
+            ]
+        else:
+            loaded = [jax.numpy.asarray(a) for a in loaded]
+        return jax.tree.unflatten(treedef, loaded), step
+
+    # --------------------------------------------------------------- hygiene
+    def _gc(self) -> None:
+        steps = sorted(
+            int(d.split("_")[1])
+            for d in os.listdir(self.dir)
+            if d.startswith("step_") and ".tmp" not in d
+        )
+        for s in steps[: -self.keep]:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s}"), ignore_errors=True)
+
+    def _cleanup_tmp(self) -> None:
+        for d in os.listdir(self.dir):
+            if ".tmp" in d:
+                shutil.rmtree(os.path.join(self.dir, d), ignore_errors=True)
+
+
+def _skeleton_to_json(tree):
+    if isinstance(tree, dict):
+        return {k: _skeleton_to_json(v) for k, v in tree.items()}
+    if isinstance(tree, (list, tuple)):
+        return [_skeleton_to_json(v) for v in tree]
+    return 0

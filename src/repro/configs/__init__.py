@@ -1,0 +1,3 @@
+"""Assigned architecture configs (public literature) + the paper's own CNN."""
+
+from .registry import ARCHS, get_config, list_archs  # noqa: F401

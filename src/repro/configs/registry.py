@@ -1,0 +1,43 @@
+"""Architecture registry: ``--arch <id>`` resolution for launchers/tests."""
+from __future__ import annotations
+
+from ..models.config import ModelConfig
+from . import (  # noqa: E402
+    chameleon_34b,
+    gemma_7b,
+    llama4_scout_17b_a16e,
+    mamba2_2_7b,
+    mistral_nemo_12b,
+    mixtral_8x22b,
+    qwen2_0_5b,
+    whisper_tiny,
+    yi_34b,
+    zamba2_2_7b,
+)
+
+ARCHS: dict[str, ModelConfig] = {
+    m.CONFIG.name: m.CONFIG
+    for m in (
+        qwen2_0_5b,
+        yi_34b,
+        mistral_nemo_12b,
+        gemma_7b,
+        llama4_scout_17b_a16e,
+        mixtral_8x22b,
+        chameleon_34b,
+        whisper_tiny,
+        zamba2_2_7b,
+        mamba2_2_7b,
+    )
+}
+
+
+def list_archs() -> list[str]:
+    return sorted(ARCHS)
+
+
+def get_config(name: str, smoke: bool = False) -> ModelConfig:
+    if name.endswith("-smoke"):
+        name, smoke = name[: -len("-smoke")], True
+    cfg = ARCHS[name]
+    return cfg.smoke() if smoke else cfg

@@ -1,0 +1,58 @@
+"""Core DFQ library — the paper's contribution as composable JAX transforms."""
+
+from .quantizer import (  # noqa: F401
+    QParams,
+    QuantSpec,
+    channel_precision,
+    channel_ranges,
+    compute_qparams,
+    dequantize,
+    fake_quant,
+    fake_quant_with_qparams,
+    qparams_from_range,
+    quantize,
+    sqnr_db,
+    tensor_range,
+)
+from .clipped_normal import (  # noqa: F401
+    clipped_normal_mean,
+    clipped_normal_var,
+    gaussian_expect,
+    relu_normal_mean,
+)
+from .cle import (  # noqa: F401
+    ConvLayer,
+    equalization_scales,
+    equalize_conv_chain,
+    equalize_dense_pair,
+    equalize_qk,
+    equalize_vo,
+    fold_norm,
+)
+from .bias_absorption import (  # noqa: F401
+    absorb_conv,
+    absorb_dense,
+    absorb_v_bias,
+    absorption_amount,
+)
+from .bias_correction import (  # noqa: F401
+    bias_correction_conv,
+    bias_correction_dense,
+    empirical_bias_correction_sequential,
+    expected_input_analytic,
+    output_bias_error,
+    weight_quant_error,
+)
+from .bn_folding import BNParams, FoldedLayer, fold_bn_conv  # noqa: F401
+from .graph import (  # noqa: F401
+    DFQPlan,
+    DensePairOp,
+    HighBiasAbsorbOp,
+    NormFoldOp,
+    QKPairOp,
+    VBiasAbsorbOp,
+    VOPairOp,
+    WeightSite,
+)
+from .dfq import DFQConfig, apply_dfq, bias_correct, dfq_quantize, quantize_weights  # noqa: F401
+from .adversarial import hostile_rescale  # noqa: F401

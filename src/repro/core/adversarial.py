@@ -1,0 +1,32 @@
+"""Adversarial channel rescaling — the inverse of CLE.
+
+Uses the SAME positive-scaling equivariance DFQ exploits to inject random
+per-channel scales into a model's exact equalization pairs: the FP32
+function is unchanged (bit-for-bit up to fp rounding) but per-tensor INT8
+collapses. This reproduces the paper's hard-to-quantize MobileNetV2 starting
+point for models we train/initialize ourselves, making the recovery
+experiments honest: DFQ must undo arbitrary hostile scalings.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .graph import DFQPlan, DensePairOp, VOPairOp
+from .tree import get_path, set_path
+
+
+def hostile_rescale(params, plan: DFQPlan, *, seed: int = 0,
+                    decades: float = 1.5):
+    """Randomly rescale every exact DensePair (up↔down) in the plan.
+    log-normal scales spanning ~`decades` orders of magnitude."""
+    key = jax.random.PRNGKey(seed)
+    for op in plan.ops:
+        if isinstance(op, DensePairOp) and op.exact:
+            w1 = get_path(params, op.w1)
+            w2 = get_path(params, op.w2)
+            key, k = jax.random.split(key)
+            s = jnp.exp(jax.random.normal(k, w1.shape[:-2] + w1.shape[-1:]) * decades)
+            params = set_path(params, op.w1, w1 * s[..., None, :])
+            params = set_path(params, op.w2, w2 / s[..., :, None])
+    return params

@@ -1,0 +1,95 @@
+"""High-bias absorption (paper §4.1.3) + exact value-bias absorption.
+
+After CLE, channels with s_i < 1 get inflated biases b⁽¹⁾, which inflates the
+*activation* quantization range. The paper absorbs c = max(0, β − 3γ) from
+layer 1 into layer 2:
+
+    b⁽¹⁾ ← b⁽¹⁾ − c,     b⁽²⁾ ← b⁽²⁾ + W⁽²⁾ c
+
+exact for inputs where W⁽¹⁾x + b⁽¹⁾ > c (99.865 % under the Gaussian
+assumption with BN statistics β, γ).
+
+Transformer extension (DESIGN §3.1): the value-projection bias passes through
+attention *exactly* (softmax rows sum to 1), so b_v can be absorbed fully into
+the o-projection bias with **zero** approximation — c = b_v, no 3σ rule needed.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax.numpy as jnp
+
+
+def absorption_amount(
+    beta: jnp.ndarray, gamma: jnp.ndarray, n_sigma: float = 3.0
+) -> jnp.ndarray:
+    """c = max(0, β − n·γ) (paper §4.1.3; n = 3 ⇒ exact on 99.865 % of x)."""
+    return jnp.maximum(0.0, beta - n_sigma * jnp.abs(gamma))
+
+
+class AbsorbResult(NamedTuple):
+    b1: jnp.ndarray
+    b2: jnp.ndarray
+    c: jnp.ndarray
+
+
+def absorb_dense(
+    b1: jnp.ndarray,
+    w2: jnp.ndarray,
+    b2: Optional[jnp.ndarray],
+    c: jnp.ndarray,
+) -> AbsorbResult:
+    """Absorb c from a dense layer's bias into the next dense layer.
+    w2: [..., n, d_out]; b1, c: [..., n]."""
+    b1_new = b1 - c
+    shift = jnp.einsum("...n,...no->...o", c, w2)
+    b2_new = shift if b2 is None else b2 + shift
+    return AbsorbResult(b1_new, b2_new, c)
+
+
+def absorb_conv(
+    b1: jnp.ndarray,
+    w2: jnp.ndarray,
+    b2: Optional[jnp.ndarray],
+    c: jnp.ndarray,
+    depthwise: bool = False,
+) -> AbsorbResult:
+    """Conv variant: the absorbed constant is spatially uniform, so it folds
+    through the kernel's spatial sum (exact away from padding borders — same
+    approximation the paper makes). w2 HWIO."""
+    b1_new = b1 - c
+    if depthwise:
+        shift = c * jnp.sum(w2[..., 0, :], axis=(0, 1))
+    else:
+        shift = jnp.einsum("i,hwio->o", c, w2)
+    b2_new = shift if b2 is None else b2 + shift
+    return AbsorbResult(b1_new, b2_new, c)
+
+
+def absorb_v_bias(
+    bv: jnp.ndarray,
+    wo: jnp.ndarray,
+    bo: Optional[jnp.ndarray],
+    *,
+    n_q: int,
+    n_kv: int,
+    head_dim: int,
+) -> AbsorbResult:
+    """Fully absorb the value bias through attention into the output bias.
+
+    attn_out_h = Σ_t softmax(...)_t · (v_t + b_v) = (Σ softmax · v_t) + b_v
+    because attention weights sum to one — the shift is exact for every input.
+    With GQA, b_v broadcasts over the query heads of each group.
+
+    bv: [..., n_kv·hd]; wo: [..., n_q·hd, d_model].
+    """
+    group = n_q // n_kv
+    lead = wo.shape[:-2]
+    d_model = wo.shape[-1]
+    c_g = bv.reshape(*lead, n_kv, head_dim)
+    c_full = jnp.broadcast_to(
+        c_g[..., :, None, :], (*lead, n_kv, group, head_dim)
+    ).reshape(*lead, n_q * head_dim)
+    shift = jnp.einsum("...n,...no->...o", c_full, wo)
+    bo_new = shift if bo is None else bo + shift
+    return AbsorbResult(jnp.zeros_like(bv), bo_new, bv)

@@ -1,0 +1,157 @@
+"""Quantization bias correction (paper §4.2, appendices B–D).
+
+Weight quantization error ε = W̃ − W shifts a layer's output mean:
+E[ỹ] = E[y] + ε·E[x]. Correct it by subtracting the expected error from the
+layer's bias:
+
+    b ← b − εᵀ E[x]          (dense; our layout is y = x @ W + b)
+    b_c ← b_c − Σ_{ci} E[x_ci] Σ_{mn} ε_{c,ci,mn}     (conv, appendix B)
+
+Three sources for E[x]:
+
+  * **analytic** (paper §4.2.1): previous layer has BN with (β, γ); push the
+    N(β, γ²) pre-activation through the clipped-linear activation with the
+    clipped-normal closed form (appendix C). Data-free, level 1.
+  * **analytic-quadrature** (ours, DESIGN §3.2): same Gaussian assumption but
+    with non-clipped activations (GELU), via Gauss–Hermite quadrature. Covers
+    LayerNorm architectures (whisper).
+  * **empirical** (appendix D): E[x] measured by running calibration inputs.
+    For the LM archs the calibration source is *synthetic random tokens*, so
+    the method stays data-free. The exact sequential procedure (correct layer
+    L only after all layers feeding it are corrected) is implemented for the
+    chain-structured CNN; a one-shot variant (all corrections from FP32
+    statistics) is used at transformer scale.
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple, Optional
+
+import jax.numpy as jnp
+
+from .clipped_normal import clipped_normal_mean, gaussian_expect
+from .quantizer import QParams, QuantSpec, compute_qparams, dequantize, quantize
+
+
+def weight_quant_error(w: jnp.ndarray, spec: QuantSpec) -> jnp.ndarray:
+    """ε = W̃ − W for a min/max-calibrated quantizer."""
+    qp = compute_qparams(w, spec)
+    w_q = dequantize(quantize(w, qp), qp)
+    return w_q - w
+
+
+def expected_input_analytic(
+    beta: jnp.ndarray,
+    gamma: jnp.ndarray,
+    activation: str = "relu",
+    clip_max: Optional[float] = None,
+) -> jnp.ndarray:
+    """E[x] for x = act(N(β, γ²)) — paper eq. 18/19 and appendix C.
+
+    activation: "relu" | "relu6" | "identity" | "gelu" | "silu".
+    """
+    gamma = jnp.abs(gamma)
+    if activation == "identity":
+        return beta
+    if activation == "relu":
+        return clipped_normal_mean(beta, gamma, a=0.0, b=clip_max)
+    if activation == "relu6":
+        return clipped_normal_mean(beta, gamma, a=0.0, b=6.0)
+    if activation == "gelu":
+        import jax
+
+        return gaussian_expect(jax.nn.gelu, beta, gamma)
+    if activation == "silu":
+        import jax
+
+        return gaussian_expect(jax.nn.silu, beta, gamma)
+    raise ValueError(f"unknown activation {activation!r}")
+
+
+def bias_correction_dense(
+    w: jnp.ndarray,
+    b: Optional[jnp.ndarray],
+    e_x: jnp.ndarray,
+    spec: QuantSpec,
+) -> jnp.ndarray:
+    """Corrected bias for a dense layer y = x @ W + b.
+
+    w: [..., d_in, d_out], e_x: [..., d_in] → correction [..., d_out].
+    """
+    eps = weight_quant_error(w, spec)
+    corr = jnp.einsum("...i,...io->...o", e_x, eps)
+    if b is None:
+        return -corr
+    return b - corr
+
+
+def bias_correction_conv(
+    w: jnp.ndarray,
+    b: Optional[jnp.ndarray],
+    e_x: jnp.ndarray,
+    spec: QuantSpec,
+    depthwise: bool = False,
+) -> jnp.ndarray:
+    """Appendix B: E[ε * x] = ε * E[x]; with spatially-uniform E[x] the
+    correction collapses to the kernel's spatial sum. w: HWIO."""
+    eps = weight_quant_error(w, spec)
+    if depthwise:
+        corr = e_x * jnp.sum(eps[..., 0, :], axis=(0, 1))
+    else:
+        corr = jnp.einsum("i,hwio->o", e_x, eps)
+    if b is None:
+        return -corr
+    return b - corr
+
+
+class EmpiricalBC(NamedTuple):
+    """Result of the appendix-D sequential procedure."""
+
+    biases: list
+    residual_bias: list  # E[ỹ] − E[y] after correction (diagnostic, → 0)
+
+
+def empirical_bias_correction_sequential(
+    layer_apply: Callable[[int, jnp.ndarray, jnp.ndarray, jnp.ndarray], jnp.ndarray],
+    weights: list,
+    biases: list,
+    x0: jnp.ndarray,
+    quantize_w: Callable[[jnp.ndarray], jnp.ndarray],
+    reduce_axes: tuple = (0,),
+) -> EmpiricalBC:
+    """Appendix D, exact sequential form, for chain networks.
+
+    ``layer_apply(i, x, w, b)`` computes layer i's **pre-activation** output;
+    a separate ``post`` step is the caller's activation. We run the FP32 chain
+    and the quantized chain side by side; after computing layer i in both, we
+    fold E[ỹ_i] − E[y_i] into b̃_i so the quantized chain's mean matches before
+    moving on ("we bias correct a layer only after all the layers feeding into
+    it have been bias-corrected").
+
+    Here layer_apply must apply the *full* layer including activation of the
+    previous layer — i.e. x inputs are post-activation. To keep this generic
+    we take pre-activation outputs and let the caller's chain include the
+    activation inside ``layer_apply`` of the *next* layer.
+    """
+    x_fp = x0
+    x_q = x0
+    new_biases = []
+    residuals = []
+    for i, (w, b) in enumerate(zip(weights, biases)):
+        y_fp = layer_apply(i, x_fp, w, b)
+        w_q = quantize_w(w)
+        y_q = layer_apply(i, x_q, w_q, b)
+        err = jnp.mean(y_q - y_fp, axis=reduce_axes)
+        b_new = (b if b is not None else 0.0) - err
+        y_q = layer_apply(i, x_q, w_q, b_new)
+        residuals.append(jnp.mean(y_q - y_fp, axis=reduce_axes))
+        new_biases.append(b_new)
+        x_fp, x_q = y_fp, y_q
+    return EmpiricalBC(new_biases, residuals)
+
+
+def output_bias_error(
+    y_fp: jnp.ndarray, y_q: jnp.ndarray, channel_axis: int = -1
+) -> jnp.ndarray:
+    """Paper eq. 1: per-channel E[ỹ − y] (the quantity Fig. 3 plots)."""
+    axes = tuple(a for a in range(y_fp.ndim) if a != channel_axis % y_fp.ndim)
+    return jnp.mean(y_q - y_fp, axis=axes)

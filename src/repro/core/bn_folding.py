@@ -1,0 +1,43 @@
+"""BatchNorm folding (paper §5: "Batch normalization is folded in the
+adjacent layer before quantization").
+
+For y = BN(conv(x; W, b)) with BN statistics (μ, σ²) and affine (γ, β):
+
+    W' = W · γ/√(σ²+ε)   (per output channel)
+    b' = (b − μ) · γ/√(σ²+ε) + β
+
+After folding, the layer's *pre-activation* distribution still has the BN
+moments: mean β and std |γ| — which is exactly what the data-free bias
+absorption (§4.1.3) and bias correction (§4.2.1) consume downstream. We
+therefore return those moments alongside the folded parameters.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax.numpy as jnp
+
+
+class BNParams(NamedTuple):
+    gamma: jnp.ndarray
+    beta: jnp.ndarray
+    mean: jnp.ndarray
+    var: jnp.ndarray
+    eps: float = 1e-5
+
+
+class FoldedLayer(NamedTuple):
+    w: jnp.ndarray
+    b: jnp.ndarray
+    # data-free pre-activation moments for downstream DFQ stages:
+    act_mean: jnp.ndarray   # = β
+    act_std: jnp.ndarray    # = |γ|
+
+
+def fold_bn_conv(w: jnp.ndarray, b: Optional[jnp.ndarray], bn: BNParams) -> FoldedLayer:
+    """w: HWIO conv kernel (or [in, out] dense — last axis is the channel)."""
+    inv_std = bn.gamma / jnp.sqrt(bn.var + bn.eps)
+    w_new = w * inv_std  # broadcasts over the trailing output-channel axis
+    b0 = jnp.zeros_like(bn.beta) if b is None else b
+    b_new = (b0 - bn.mean) * inv_std + bn.beta
+    return FoldedLayer(w_new, b_new, bn.beta, jnp.abs(bn.gamma))

@@ -1,0 +1,279 @@
+"""Cross-layer range equalization (paper §4.1, appendix A).
+
+For two weight tensors connected through a positive-scaling-equivariant map,
+the optimal diagonal rescaling S (maximizing the joint per-channel precision,
+paper eq. 9) is the closed form of eq. 11:
+
+    s_i = (1 / r_i^(2)) * sqrt(r_i^(1) * r_i^(2))
+
+after which r_i^(1) = r_i^(2) for every channel i. The FP32 function is
+exactly preserved: W1 ← S⁻¹ W1, b1 ← S⁻¹ b1, W2 ← W2 S.
+
+This module provides:
+  * ``equalization_scales``     — eq. 11 with dead-channel guards,
+  * ``equalize_dense_pair``     — ReLU / gated-MLP pair (exact; DESIGN §3.1),
+  * ``equalize_vo``             — value/output projection pair through
+                                  attention (exact: attn output is linear in V;
+                                  handles GQA head grouping),
+  * ``equalize_qk``             — query/key pair (exact with RoPE when scales
+                                  are shared within each rotation 2-D pair and
+                                  across the GQA group),
+  * ``fold_norm``               — RMSNorm/LayerNorm scale folded into the
+                                  consuming linears (analogue of BN folding),
+  * ``equalize_conv_chain``     — the paper's CNN case: iterate adjacent
+                                  (conv, depthwise, conv) pairs to convergence.
+
+Weight layout conventions: dense weights are ``[..., d_in, d_out]`` (applied
+as ``y = x @ W + b``); conv kernels are HWIO. Leading batch dims (stacked
+scan layers ``[L, ...]`` or experts ``[L, E, ...]``) broadcast through every
+function, so a whole stacked transformer equalizes in one vectorized call.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Sequence
+
+import jax.numpy as jnp
+
+_EPS = 1e-12
+
+
+def equalization_scales(r1: jnp.ndarray, r2: jnp.ndarray) -> jnp.ndarray:
+    """Paper eq. 11. Dead channels (r1·r2 ≈ 0) get s = 1 (no-op) — they carry
+    no signal and the paper notes they can be pruned (§5.1.1)."""
+    s = jnp.sqrt(jnp.maximum(r1, _EPS) * jnp.maximum(r2, _EPS)) / jnp.maximum(
+        r2, _EPS
+    )
+    return jnp.where(r1 * r2 > _EPS, s, 1.0)
+
+
+class PairResult(NamedTuple):
+    w1: jnp.ndarray
+    b1: Optional[jnp.ndarray]
+    w2: jnp.ndarray
+    scales: jnp.ndarray
+
+
+def equalize_dense_pair(
+    w1: jnp.ndarray,
+    b1: Optional[jnp.ndarray],
+    w2: jnp.ndarray,
+) -> PairResult:
+    """Equalize ``y = f(x @ W1 + b1) @ W2`` where f is ReLU/PReLU (paper
+    eq. 5–7) or the up→down path of a gated MLP (exactly linear in W1's
+    output — DESIGN §3.1). W1: [..., d_in, n], W2: [..., n, d_out]."""
+    r1 = jnp.max(jnp.abs(w1), axis=-2)               # [..., n] over d_in only
+    r2 = jnp.max(jnp.abs(w2), axis=-1)               # [..., n]
+    s = equalization_scales(r1, r2)
+    w1_new = w1 / s[..., None, :]
+    b1_new = None if b1 is None else b1 / s
+    w2_new = w2 * s[..., :, None]
+    return PairResult(w1_new, b1_new, w2_new, s)
+
+
+def equalize_vo(
+    wv: jnp.ndarray,
+    bv: Optional[jnp.ndarray],
+    wo: jnp.ndarray,
+    *,
+    n_q: int,
+    n_kv: int,
+    head_dim: int,
+) -> PairResult:
+    """Equalize value-projection output channels against the output
+    projection's input channels through attention.
+
+    Exact: ``attn_out = softmax(QKᵀ)·V`` is linear in V, so a per-channel
+    scale on V commutes to O's input. With GQA, V channel (kv, d) feeds the
+    o-proj rows of every query head in kv's group.
+
+    wv: [..., d_model, n_kv·head_dim], wo: [..., n_q·head_dim, d_model].
+    """
+    group = n_q // n_kv
+    lead_o = wo.shape[:-2]
+    d_model_out = wo.shape[-1]
+    r1 = jnp.max(jnp.abs(wv), axis=-2)               # [..., n_kv*hd]
+    wo_g = wo.reshape(*lead_o, n_kv, group, head_dim, d_model_out)
+    r2 = jnp.max(jnp.abs(wo_g), axis=(-3, -1))       # [..., n_kv, hd]
+    r2 = r2.reshape(*lead_o, n_kv * head_dim)
+    s = equalization_scales(r1, r2)                  # [..., n_kv*hd]
+    wv_new = wv / s[..., None, :]
+    bv_new = None if bv is None else bv / s
+    s_g = s.reshape(*lead_o, n_kv, 1, head_dim, 1)
+    wo_new = (wo_g * s_g).reshape(wo.shape)
+    return PairResult(wv_new, bv_new, wo_new, s)
+
+
+class QKResult(NamedTuple):
+    wq: jnp.ndarray
+    bq: Optional[jnp.ndarray]
+    wk: jnp.ndarray
+    bk: Optional[jnp.ndarray]
+    scales: jnp.ndarray
+
+
+def equalize_qk(
+    wq: jnp.ndarray,
+    bq: Optional[jnp.ndarray],
+    wk: jnp.ndarray,
+    bk: Optional[jnp.ndarray],
+    *,
+    n_q: int,
+    n_kv: int,
+    head_dim: int,
+    rope: bool = True,
+) -> QKResult:
+    """Equalize Q against K. Logits ⟨q_h, k_g(h)⟩ are preserved when Q channel
+    (h, d) is scaled by s and K channel (g(h), d) by 1/s. Constraints:
+
+      * GQA: all query heads in a group share the K head → s is indexed by
+        (kv_head, d) and broadcast over the group,
+      * RoPE (rotate-half convention: dims d and d + head_dim/2 form one
+        rotation pair) mixes the pair, so s must be shared within it.
+
+    wq: [..., d_model, n_q·head_dim], wk: [..., d_model, n_kv·head_dim].
+    """
+    group = n_q // n_kv
+    lead = wq.shape[:-2]
+    d_model = wq.shape[-2]
+    half = head_dim // 2
+
+    wq_g = wq.reshape(*lead, d_model, n_kv, group, head_dim)
+    wk_g = wk.reshape(*lead, d_model, n_kv, head_dim)
+    rq = jnp.max(jnp.abs(wq_g), axis=(-4, -2))       # [..., n_kv, hd]
+    rk = jnp.max(jnp.abs(wk_g), axis=-3)             # [..., n_kv, hd]
+    if rope:
+        # share within rotation pairs (d, d+half): take pairwise max
+        def pair_max(r):
+            a, b = r[..., :half], r[..., half:]
+            m = jnp.maximum(a, b)
+            return jnp.concatenate([m, m], axis=-1)
+
+        rq, rk = pair_max(rq), pair_max(rk)
+    s = equalization_scales(rq, rk)
+    if rope:
+        s = jnp.concatenate([s[..., :half], s[..., :half]], axis=-1)
+
+    # Q ← Q / s ; K ← K · s (per grouped channel) — logits invariant, and
+    # r_q' = r_k' = sqrt(r_q · r_k) per eq. 11.
+    wk_new = (wk_g * s[..., None, :, :]).reshape(wk.shape)
+    sq = s[..., None, :, None, :]
+    wq_new = (wq_g / sq).reshape(wq.shape)
+    bq_new = None
+    bk_new = None
+    if bq is not None:
+        bq_new = (bq.reshape(*lead, n_kv, group, head_dim) / s[..., :, None, :]).reshape(bq.shape)
+    if bk is not None:
+        bk_new = (bk.reshape(*lead, n_kv, head_dim) * s).reshape(bk.shape)
+    s_flat = s.reshape(*lead, n_kv * head_dim)
+    return QKResult(wq_new, bq_new, wk_new, bk_new, s_flat)
+
+
+def fold_norm(
+    norm_w: jnp.ndarray,
+    consumers: Sequence[jnp.ndarray],
+    norm_b: Optional[jnp.ndarray] = None,
+    consumer_biases: Optional[Sequence[Optional[jnp.ndarray]]] = None,
+):
+    """Fold a norm's elementwise scale γ (and shift β, if LayerNorm) into the
+    linears consuming its output — the transformer analogue of the paper's
+    BatchNorm folding (§5):  W·(γ⊙x̂ + β) = (W·diag(γ))·x̂ + W·β.
+
+    norm_w: [..., d]; consumers: list of [..., d, out]. Returns
+    (ones_like(norm_w), zeros β, new consumers, new biases).
+    """
+    new_ws, new_bs = [], []
+    if consumer_biases is None:
+        consumer_biases = [None] * len(consumers)
+    for w, b in zip(consumers, consumer_biases):
+        w_new = w * norm_w[..., :, None]
+        if norm_b is not None:
+            shift = jnp.einsum("...d,...do->...o", norm_b * jnp.ones_like(norm_w), w)
+            b_new = shift if b is None else b + shift
+        else:
+            b_new = b
+        new_ws.append(w_new)
+        new_bs.append(b_new)
+    ones = jnp.ones_like(norm_w)
+    zeros = None if norm_b is None else jnp.zeros_like(norm_b)
+    return ones, zeros, new_ws, new_bs
+
+
+# ----------------------------------------------------------------------------
+# CNN chain equalization (the paper's own experimental setting).
+# ----------------------------------------------------------------------------
+
+class ConvLayer(NamedTuple):
+    """HWIO conv kernel + bias + structural kind.
+
+    kind: "conv" (dense conv / 1x1), "depthwise" ([kh,kw,1,C], groups = C),
+    or "dense" ([in,out]).
+    """
+
+    w: jnp.ndarray
+    b: Optional[jnp.ndarray]
+    kind: str = "conv"
+
+
+def _out_ranges(layer: ConvLayer) -> jnp.ndarray:
+    if layer.kind == "dense":
+        return jnp.max(jnp.abs(layer.w), axis=-2)
+    return jnp.max(jnp.abs(layer.w), axis=(0, 1, 2))  # HWIO → per O
+
+
+def _in_ranges(layer: ConvLayer) -> jnp.ndarray:
+    if layer.kind == "dense":
+        return jnp.max(jnp.abs(layer.w), axis=-1)
+    if layer.kind == "depthwise":
+        return jnp.max(jnp.abs(layer.w), axis=(0, 1, 2))  # channel == O axis
+    return jnp.max(jnp.abs(layer.w), axis=(0, 1, 3))      # per I
+
+
+def _scale_out(layer: ConvLayer, s: jnp.ndarray) -> ConvLayer:
+    """Divide output channels by s (and bias)."""
+    if layer.kind == "dense":
+        w = layer.w / s[None, :]
+    else:
+        w = layer.w / s[None, None, None, :]
+    b = None if layer.b is None else layer.b / s
+    return layer._replace(w=w, b=b)
+
+
+def _scale_in(layer: ConvLayer, s: jnp.ndarray) -> ConvLayer:
+    """Multiply input channels by s (compensating an upstream 1/s)."""
+    if layer.kind == "dense":
+        w = layer.w * s[:, None]
+    elif layer.kind == "depthwise":
+        w = layer.w * s[None, None, None, :]
+    else:
+        w = layer.w * s[None, None, :, None]
+    return layer._replace(w=w)
+
+
+def equalize_conv_chain(
+    layers: Sequence[ConvLayer],
+    iterations: int = 20,
+    tol: float = 1e-4,
+) -> tuple[list[ConvLayer], jnp.ndarray]:
+    """Iterate pairwise equalization over a chain of layers connected without
+    splits (paper §4.1.2: "we iterate this process for pairs of layers ...
+    until convergence"). Returns new layers and the cumulative per-interface
+    scales (product over iterations) for diagnostics.
+    """
+    layers = list(layers)
+    n_if = len(layers) - 1
+    cum = [jnp.ones_like(_out_ranges(layers[i])) for i in range(n_if)]
+    for _ in range(iterations):
+        max_log_change = 0.0
+        for i in range(n_if):
+            r1 = _out_ranges(layers[i])
+            r2 = _in_ranges(layers[i + 1])
+            s = equalization_scales(r1, r2)
+            layers[i] = _scale_out(layers[i], s)
+            layers[i + 1] = _scale_in(layers[i + 1], s)
+            cum[i] = cum[i] * s
+            max_log_change = jnp.maximum(
+                max_log_change, jnp.max(jnp.abs(jnp.log(s)))
+            )
+        if float(max_log_change) < tol:
+            break
+    return layers, cum

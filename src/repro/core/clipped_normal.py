@@ -1,0 +1,119 @@
+"""Closed-form moments of the clipped normal distribution (paper appendix C).
+
+Given X ~ N(μ, σ²) and a clipped-linear activation f(x) = clip(x, a, b),
+computes E[f(X)] (eq. 38) and Var[f(X)] (eq. 44). These power the data-free
+bias-correction path (paper §4.2.1): with batch normalization, pre-activations
+are N(β, γ²), so the post-activation mean E[x] is available without data.
+
+ReLU is the special case a = 0, b = ∞ (paper eq. 19); ReLU6 is a = 0, b = 6.
+
+Also provides a Gauss–Hermite fallback ``gaussian_expect`` for activations
+that are *not* clipped-linear (e.g. GELU in whisper) — the closed form does
+not exist there, but E[f(X)] under the same Gaussian assumption is a 1-D
+integral computed exactly to quadrature precision. This is our documented
+extension for LayerNorm+GELU architectures (DESIGN.md §3.2).
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import jax.numpy as jnp
+import numpy as np
+from jax.scipy.stats import norm
+
+
+def _phi(x):
+    return norm.pdf(x)
+
+
+def _Phi(x):
+    return norm.cdf(x)
+
+
+def clipped_normal_mean(
+    mu: jnp.ndarray,
+    sigma: jnp.ndarray,
+    a: float | jnp.ndarray = 0.0,
+    b: Optional[float | jnp.ndarray] = None,
+) -> jnp.ndarray:
+    """E[clip(X, a, b)], paper eq. 38. ``b=None`` means b = +∞."""
+    sigma = jnp.maximum(sigma, 1e-12)
+    alpha = (a - mu) / sigma
+    if b is None:
+        # b → ∞: Φ(β) → 1, φ(β) → 0, b·(1 − Φ(β)) → 0.
+        return (
+            sigma * _phi(alpha)
+            + mu * (1.0 - _Phi(alpha))
+            + a * _Phi(alpha)
+        )
+    beta = (b - mu) / sigma
+    return (
+        sigma * (_phi(alpha) - _phi(beta))
+        + mu * (_Phi(beta) - _Phi(alpha))
+        + a * _Phi(alpha)
+        + b * (1.0 - _Phi(beta))
+    )
+
+
+def clipped_normal_var(
+    mu: jnp.ndarray,
+    sigma: jnp.ndarray,
+    a: float | jnp.ndarray = 0.0,
+    b: Optional[float | jnp.ndarray] = None,
+) -> jnp.ndarray:
+    """Var[clip(X, a, b)], paper eq. 44."""
+    sigma = jnp.maximum(sigma, 1e-12)
+    m = clipped_normal_mean(mu, sigma, a, b)
+    alpha = (a - mu) / sigma
+    if b is None:
+        Z = 1.0 - _Phi(alpha)
+        phi_a, phi_b = _phi(alpha), jnp.zeros_like(alpha)
+        b_phi_b = jnp.zeros_like(alpha)  # lim b·φ(β) = 0
+        tail_b = jnp.zeros_like(alpha)   # lim (b − m)²(1 − Φ(β)) = 0
+        Phi_b = jnp.ones_like(alpha)
+    else:
+        beta = (b - mu) / sigma
+        Z = _Phi(beta) - _Phi(alpha)
+        phi_a, phi_b = _phi(alpha), _phi(beta)
+        b_phi_b = b * phi_b
+        tail_b = (b - m) ** 2 * (1.0 - _Phi(beta))
+        Phi_b = _Phi(beta)
+    del Phi_b
+    var = (
+        Z * (mu ** 2 + sigma ** 2 + m ** 2 - 2.0 * m * mu)
+        + sigma * (a * phi_a - b_phi_b)
+        + sigma * (mu - 2.0 * m) * (phi_a - phi_b)
+        + (a - m) ** 2 * _Phi(alpha)
+        + tail_b
+    )
+    return jnp.maximum(var, 0.0)
+
+
+def relu_normal_mean(beta: jnp.ndarray, gamma: jnp.ndarray) -> jnp.ndarray:
+    """Paper eq. 19: E[ReLU(X)] for X ~ N(β, γ²)."""
+    gamma = jnp.maximum(jnp.abs(gamma), 1e-12)
+    z = -beta / gamma
+    return gamma * _phi(z) + beta * (1.0 - _Phi(z))
+
+
+# ----------------------------------------------------------------------------
+# Gauss–Hermite quadrature for non-clipped-linear activations (GELU, SiLU).
+# ----------------------------------------------------------------------------
+
+_GH_POINTS = 64
+_GH_X, _GH_W = np.polynomial.hermite_e.hermegauss(_GH_POINTS)  # probabilists'
+_GH_W = _GH_W / np.sqrt(2.0 * np.pi)
+
+
+def gaussian_expect(
+    fn: Callable[[jnp.ndarray], jnp.ndarray],
+    mu: jnp.ndarray,
+    sigma: jnp.ndarray,
+) -> jnp.ndarray:
+    """E[fn(X)] for X ~ N(μ, σ²) via 64-point Gauss–Hermite quadrature.
+
+    Exact (to quadrature accuracy) for smooth activations; used where the
+    paper's clipped-normal closed form does not apply.
+    """
+    x = mu[..., None] + sigma[..., None] * jnp.asarray(_GH_X, mu.dtype)
+    return jnp.sum(fn(x) * jnp.asarray(_GH_W, mu.dtype), axis=-1)

@@ -1,0 +1,259 @@
+"""DFQ: the paper's method as one composable API call (its stated goal —
+"accuracy improvement with a simple API call", §1).
+
+Pipeline (paper Fig. 4):
+    BN folding (model-side) → cross-layer equalization → high-bias absorption
+    → weight quantization → bias correction → activation-range setting.
+
+``apply_dfq(params, plan, config)`` executes the function-preserving rewrites
+(CLE + absorption). ``quantize_weights`` / ``bias_correct`` implement the
+quantization + correction stage. ``dfq_quantize`` chains everything.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Mapping, Optional
+
+import jax.numpy as jnp
+
+from . import bias_absorption, bias_correction, cle
+from .graph import (
+    DFQPlan,
+    DensePairOp,
+    HighBiasAbsorbOp,
+    NormFoldOp,
+    QKPairOp,
+    VBiasAbsorbOp,
+    VOPairOp,
+    WeightSite,
+)
+from .quantizer import (
+    QuantSpec,
+    compute_qparams,
+    dequantize,
+    fake_quant,
+    quantize,
+)
+from .tree import get_path, has_path, set_path
+
+
+@dataclasses.dataclass(frozen=True)
+class DFQConfig:
+    """Level-1 defaults: 8-bit asymmetric per-tensor, everything on (paper §5)."""
+
+    weight_bits: int = 8
+    act_bits: int = 8
+    weight_symmetric: bool = False
+    act_symmetric: bool = False
+    per_channel: bool = False            # paper's per-channel baseline [18]
+    cle: bool = True
+    cle_iterations: int = 2              # pairs here are closed-form optimal;
+                                         # >1 only matters for shared tensors
+    bias_absorb: bool = True
+    bias_correct: str = "empirical"      # "empirical" | "analytic" | "none"
+    n_sigma_absorb: float = 3.0          # paper: 3γ ⇒ 99.865 %
+    act_range_n_sigma: float = 6.0       # paper §5: β ± 6γ
+    cle_include_approx_pairs: bool = False  # plain-GELU pairs (whisper MLP)
+
+    @property
+    def weight_spec(self) -> QuantSpec:
+        return QuantSpec(
+            bits=self.weight_bits,
+            symmetric=self.weight_symmetric,
+            per_channel_axis=-1 if self.per_channel else None,
+        )
+
+    @property
+    def act_spec(self) -> QuantSpec:
+        return QuantSpec(bits=self.act_bits, symmetric=self.act_symmetric)
+
+
+def _maybe(params, path):
+    return get_path(params, path) if path is not None and has_path(params, path) else None
+
+
+def apply_dfq(params: Mapping, plan: DFQPlan, config: DFQConfig) -> dict:
+    """Function-preserving stage: norm folding, CLE, bias absorption.
+
+    Returns a new params pytree computing the SAME FP32 function (exactly,
+    except ops flagged non-exact) with per-channel ranges equalized.
+    """
+    for _ in range(max(1, config.cle_iterations)):
+        for op in plan.ops:
+            if isinstance(op, NormFoldOp):
+                consumers = [get_path(params, p) for p in op.consumers]
+                cbias_paths = (
+                    list(op.consumer_biases)
+                    if op.consumer_biases is not None
+                    else [None] * len(op.consumers)
+                )
+                cbias = [_maybe(params, p) for p in cbias_paths]
+                norm_b = _maybe(params, op.norm_b)
+                ones, zeros, new_ws, new_bs = cle.fold_norm(
+                    get_path(params, op.norm_w), consumers, norm_b, cbias
+                )
+                params = set_path(params, op.norm_w, ones)
+                if op.norm_b is not None and zeros is not None:
+                    params = set_path(params, op.norm_b, zeros)
+                for p, w in zip(op.consumers, new_ws):
+                    params = set_path(params, p, w)
+                for p, b in zip(cbias_paths, new_bs):
+                    if p is not None and b is not None:
+                        params = set_path(params, p, b)
+            elif isinstance(op, DensePairOp):
+                if not config.cle:
+                    continue
+                if not op.exact and not config.cle_include_approx_pairs:
+                    continue
+                res = cle.equalize_dense_pair(
+                    get_path(params, op.w1), _maybe(params, op.b1), get_path(params, op.w2)
+                )
+                params = set_path(params, op.w1, res.w1)
+                params = set_path(params, op.w2, res.w2)
+                if op.b1 is not None and res.b1 is not None:
+                    params = set_path(params, op.b1, res.b1)
+            elif isinstance(op, VOPairOp):
+                if not config.cle:
+                    continue
+                res = cle.equalize_vo(
+                    get_path(params, op.wv),
+                    _maybe(params, op.bv),
+                    get_path(params, op.wo),
+                    n_q=op.n_q,
+                    n_kv=op.n_kv,
+                    head_dim=op.head_dim,
+                )
+                params = set_path(params, op.wv, res.w1)
+                params = set_path(params, op.wo, res.w2)
+                if op.bv is not None and res.b1 is not None:
+                    params = set_path(params, op.bv, res.b1)
+            elif isinstance(op, QKPairOp):
+                if not config.cle:
+                    continue
+                res = cle.equalize_qk(
+                    get_path(params, op.wq),
+                    _maybe(params, op.bq),
+                    get_path(params, op.wk),
+                    _maybe(params, op.bk),
+                    n_q=op.n_q,
+                    n_kv=op.n_kv,
+                    head_dim=op.head_dim,
+                    rope=op.rope,
+                )
+                params = set_path(params, op.wq, res.wq)
+                params = set_path(params, op.wk, res.wk)
+                if op.bq is not None and res.bq is not None:
+                    params = set_path(params, op.bq, res.bq)
+                if op.bk is not None and res.bk is not None:
+                    params = set_path(params, op.bk, res.bk)
+            elif isinstance(op, VBiasAbsorbOp):
+                if not config.bias_absorb:
+                    continue
+                res = bias_absorption.absorb_v_bias(
+                    get_path(params, op.bv),
+                    get_path(params, op.wo),
+                    _maybe(params, op.bo),
+                    n_q=op.n_q,
+                    n_kv=op.n_kv,
+                    head_dim=op.head_dim,
+                )
+                params = set_path(params, op.bv, res.b1)
+                params = set_path(params, op.bo, res.b2)
+            elif isinstance(op, HighBiasAbsorbOp):
+                if not config.bias_absorb:
+                    continue
+                c = bias_absorption.absorption_amount(
+                    get_path(params, op.beta),
+                    get_path(params, op.gamma),
+                    config.n_sigma_absorb,
+                )
+                res = bias_absorption.absorb_dense(
+                    get_path(params, op.b1),
+                    get_path(params, op.w2),
+                    _maybe(params, op.b2),
+                    c,
+                )
+                params = set_path(params, op.b1, res.b1)
+                params = set_path(params, op.b2, res.b2)
+            else:
+                raise TypeError(f"unknown plan op {op!r}")
+    return params
+
+
+def quantize_weights(params: Mapping, plan: DFQPlan, config: DFQConfig) -> dict:
+    """Fake-quantize every weight site (simulated INT-k inference).
+
+    True int8 storage for the serving path lives in ``repro.quantized``.
+    """
+    spec = config.weight_spec
+    for site in plan.sites:
+        w = get_path(params, site.w)
+        params = set_path(params, site.w, fake_quant(w, spec))
+    return params
+
+
+def bias_correct(
+    params: Mapping,
+    plan: DFQPlan,
+    config: DFQConfig,
+    input_means: Mapping[str, jnp.ndarray],
+) -> dict:
+    """Paper §4.2: subtract ε·E[x] from each site's bias.
+
+    ``input_means[stat_key]`` is E[x] for the site's input — computed either
+    analytically (BN/LN route) or empirically (synthetic calibration run).
+    Sites without a bias get one created — the correction IS the bias.
+    """
+    spec = config.weight_spec
+    for site in plan.sites:
+        if site.stat_key is None or site.stat_key not in input_means:
+            continue
+        e_x = input_means[site.stat_key]
+        w = get_path(params, site.w)
+        b = _maybe(params, site.b)
+        if site.kind == "dense":
+            b_new = bias_correction.bias_correction_dense(w, b, e_x, spec)
+        else:
+            b_new = bias_correction.bias_correction_conv(
+                w, b, e_x, spec, depthwise=(site.kind == "depthwise")
+            )
+        if site.b is None:
+            raise ValueError(f"site {site.name} has no bias path for correction")
+        # bias-less linears get the slot CREATED — the correction IS the bias
+        # (models read biases via .get, so a new entry is consumed directly)
+        params = set_path(params, site.b, b_new)
+    return params
+
+
+def dfq_quantize(
+    params: Mapping,
+    plan: DFQPlan,
+    config: DFQConfig = DFQConfig(),
+    input_means_fn: Optional[Callable[[Mapping], Mapping[str, jnp.ndarray]]] = None,
+) -> dict:
+    """The paper's end-to-end flow (Fig. 4) as one call.
+
+    ``input_means_fn(params_equalized)`` supplies E[x] per stat_key — the
+    model-side hook that runs synthetic calibration or evaluates the
+    analytic clipped-normal route. Returns fake-quantized params.
+    """
+    params = apply_dfq(params, plan, config)
+    means = {}
+    if config.bias_correct != "none" and input_means_fn is not None:
+        means = input_means_fn(params)
+    if means:
+        params = bias_correct(params, plan, config, means)
+    params = quantize_weights(params, plan, config)
+    return params
+
+
+def weight_quant_snr(params_fp: Mapping, params_q: Mapping, plan: DFQPlan):
+    """Per-site SQNR diagnostics (dB)."""
+    from .quantizer import sqnr_db
+
+    out = {}
+    for site in plan.sites:
+        out[site.name] = float(
+            sqnr_db(get_path(params_fp, site.w), get_path(params_q, site.w))
+        )
+    return out

@@ -1,0 +1,123 @@
+"""Equalization-graph descriptors: a declarative, model-agnostic encoding of
+where DFQ's rewrites apply inside a parameter pytree.
+
+Each model family (``repro.models.*``) emits a list of these ops from its
+config; ``repro.core.dfq`` executes them functionally over the params pytree.
+All paths address (possibly scan-stacked ``[L, ...]`` / expert-stacked
+``[L, E, ...]``) weights — the core transforms broadcast over leading dims,
+so one op equalizes all layers/experts of a kind at once.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+from .tree import Path
+
+
+@dataclasses.dataclass(frozen=True)
+class NormFoldOp:
+    """Fold norm scale (and LayerNorm shift) into consuming linears."""
+
+    norm_w: Path
+    consumers: Sequence[Path]            # weight paths, [..., d_in, out]
+    norm_b: Optional[Path] = None
+    consumer_biases: Optional[Sequence[Optional[Path]]] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class DensePairOp:
+    """CLE over a ReLU / gated-MLP pair (exact). w1 [..., d, n], w2 [..., n, d]."""
+
+    w1: Path
+    w2: Path
+    b1: Optional[Path] = None
+    exact: bool = True                   # False → approximate (plain GELU MLP)
+
+
+@dataclasses.dataclass(frozen=True)
+class VOPairOp:
+    """CLE value-proj ↔ output-proj through attention (exact, GQA-aware)."""
+
+    wv: Path
+    wo: Path
+    bv: Optional[Path] = None
+    n_q: int = 1
+    n_kv: int = 1
+    head_dim: int = 1
+
+
+@dataclasses.dataclass(frozen=True)
+class QKPairOp:
+    """CLE query ↔ key (exact; RoPE rotation-pair and GQA-group constrained)."""
+
+    wq: Path
+    wk: Path
+    bq: Optional[Path] = None
+    bk: Optional[Path] = None
+    n_q: int = 1
+    n_kv: int = 1
+    head_dim: int = 1
+    rope: bool = True
+
+
+@dataclasses.dataclass(frozen=True)
+class VBiasAbsorbOp:
+    """Absorb the value bias fully into the output-projection bias (exact)."""
+
+    bv: Path
+    wo: Path
+    bo: Path
+    n_q: int = 1
+    n_kv: int = 1
+    head_dim: int = 1
+
+
+@dataclasses.dataclass(frozen=True)
+class HighBiasAbsorbOp:
+    """Paper §4.1.3: absorb c = max(0, β − 3γ) from b1 into (w2, b2).
+
+    beta/gamma paths point at stored pre-activation statistics (from BN
+    folding, or LayerNorm params, or calibration); dense layout.
+    """
+
+    b1: Path
+    w2: Path
+    b2: Path
+    beta: Path
+    gamma: Path
+
+
+@dataclasses.dataclass(frozen=True)
+class WeightSite:
+    """One quantizable linear: used for weight quantization + bias correction.
+
+    ``stat_key`` names the entry in the model's activation-stats pytree whose
+    mean is E[input] for this site (bias correction); ``kind`` selects the
+    correction formula.
+    """
+
+    name: str
+    w: Path
+    b: Optional[Path] = None
+    kind: str = "dense"                  # dense | conv | depthwise
+    stat_key: Optional[str] = None
+
+
+PlanOp = (
+    NormFoldOp
+    | DensePairOp
+    | VOPairOp
+    | QKPairOp
+    | VBiasAbsorbOp
+    | HighBiasAbsorbOp
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class DFQPlan:
+    """Everything DFQ needs to know about one architecture."""
+
+    ops: Sequence[PlanOp]
+    sites: Sequence[WeightSite]
+    name: str = ""

@@ -1,0 +1,163 @@
+"""Fixed-point quantizers (paper §1, §5 experimental setup).
+
+Implements hardware-style affine quantization:
+
+    q = clamp(round(x / scale) + zero_point, qmin, qmax)
+    x̂ = (q - zero_point) * scale
+
+Supports:
+  * symmetric (zero_point = 0) and asymmetric schemes (paper Table 7),
+  * per-tensor (the paper's main, hardware-friendly setting) and
+    per-channel [Krishnamoorthi 2018] granularity (paper baseline, Table 8),
+  * arbitrary bit widths (paper evaluates INT8 and INT6; Fig. 1 sweeps 4..16).
+
+Ranges for weights are "the min and max of the weight tensor" (paper §5).
+Activation ranges are set data-free from normalization statistics as
+``β ± n·γ`` with n = 6 (paper §5), clipped at 0 after ReLU.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantSpec:
+    """Static description of a quantizer."""
+
+    bits: int = 8
+    symmetric: bool = False          # paper default: asymmetric (§5)
+    per_channel_axis: Optional[int] = None  # None → per-tensor
+    # Signed integer grid for symmetric, unsigned+zero-point for asymmetric
+    # (matches common fixed-point inference HW, e.g. [16, 18]).
+
+    @property
+    def qmin(self) -> int:
+        return -(2 ** (self.bits - 1)) if self.symmetric else 0
+
+    @property
+    def qmax(self) -> int:
+        return 2 ** (self.bits - 1) - 1 if self.symmetric else 2 ** self.bits - 1
+
+    @property
+    def dtype(self):
+        if self.bits <= 8:
+            return jnp.int8 if self.symmetric else jnp.uint8
+        return jnp.int16 if self.symmetric else jnp.uint16
+
+
+@dataclasses.dataclass
+class QParams:
+    """Scale/zero-point pair. Arrays broadcast against the tensor they quantize."""
+
+    scale: jnp.ndarray
+    zero_point: jnp.ndarray
+    spec: QuantSpec
+
+
+def _reduce_axes(x: jnp.ndarray, channel_axis: Optional[int]):
+    if channel_axis is None:
+        return tuple(range(x.ndim))
+    channel_axis = channel_axis % x.ndim
+    return tuple(a for a in range(x.ndim) if a != channel_axis)
+
+
+def _keepdims_shape(x: jnp.ndarray, channel_axis: Optional[int]):
+    if channel_axis is None:
+        return ()
+    channel_axis = channel_axis % x.ndim
+    return tuple(x.shape[a] if a == channel_axis else 1 for a in range(x.ndim))
+
+
+def compute_qparams(
+    x: jnp.ndarray, spec: QuantSpec, eps: float = 1e-8
+) -> QParams:
+    """Min/max-derived quantization parameters (paper §5: ranges are tensor
+    min/max; per-channel reduces over all non-channel axes)."""
+    axes = _reduce_axes(x, spec.per_channel_axis)
+    if spec.symmetric:
+        amax = jnp.max(jnp.abs(x), axis=axes)
+        scale = jnp.maximum(amax, eps) / spec.qmax
+        zp = jnp.zeros_like(scale)
+    else:
+        xmin = jnp.minimum(jnp.min(x, axis=axes), 0.0)  # grid must contain 0
+        xmax = jnp.maximum(jnp.max(x, axis=axes), 0.0)
+        scale = jnp.maximum(xmax - xmin, eps) / (spec.qmax - spec.qmin)
+        zp = jnp.round(spec.qmin - xmin / scale)
+        zp = jnp.clip(zp, spec.qmin, spec.qmax)
+    shape = _keepdims_shape(x, spec.per_channel_axis)
+    return QParams(scale.reshape(shape), zp.reshape(shape), spec)
+
+
+def qparams_from_range(
+    xmin: jnp.ndarray, xmax: jnp.ndarray, spec: QuantSpec, eps: float = 1e-8
+) -> QParams:
+    """Quantizer from externally supplied ranges — the data-free activation
+    path (paper §5: range = β ± 6γ from batch-norm statistics)."""
+    if spec.symmetric:
+        amax = jnp.maximum(jnp.abs(xmin), jnp.abs(xmax))
+        scale = jnp.maximum(amax, eps) / spec.qmax
+        zp = jnp.zeros_like(scale)
+    else:
+        xmin = jnp.minimum(xmin, 0.0)
+        xmax = jnp.maximum(xmax, 0.0)
+        scale = jnp.maximum(xmax - xmin, eps) / (spec.qmax - spec.qmin)
+        zp = jnp.clip(jnp.round(spec.qmin - xmin / scale), spec.qmin, spec.qmax)
+    return QParams(scale, zp, spec)
+
+
+def quantize(x: jnp.ndarray, qp: QParams) -> jnp.ndarray:
+    q = jnp.round(x / qp.scale) + qp.zero_point
+    return jnp.clip(q, qp.spec.qmin, qp.spec.qmax).astype(qp.spec.dtype)
+
+
+def dequantize(q: jnp.ndarray, qp: QParams) -> jnp.ndarray:
+    return (q.astype(jnp.float32) - qp.zero_point) * qp.scale
+
+
+def fake_quant(x: jnp.ndarray, spec: QuantSpec, eps: float = 1e-8) -> jnp.ndarray:
+    """Quantize-dequantize in one step (simulated fixed-point)."""
+    qp = compute_qparams(x, spec, eps)
+    return dequantize(quantize(x, qp), qp).astype(x.dtype)
+
+
+def fake_quant_with_qparams(x: jnp.ndarray, qp: QParams) -> jnp.ndarray:
+    return dequantize(quantize(x, qp), qp).astype(x.dtype)
+
+
+# ----------------------------------------------------------------------------
+# Range helpers used by cross-layer equalization (paper §4.1.2 / appendix A).
+# ----------------------------------------------------------------------------
+
+def channel_ranges(w: jnp.ndarray, channel_axis: int) -> jnp.ndarray:
+    """Symmetric per-channel range r_i = max_j |W_ij| (the factor 2 in the
+    paper cancels in every ratio CLE takes; appendix A eq. 20)."""
+    axes = _reduce_axes(w, channel_axis)
+    return jnp.max(jnp.abs(w), axis=axes)
+
+
+def tensor_range(w: jnp.ndarray) -> jnp.ndarray:
+    return jnp.max(jnp.abs(w))
+
+
+def channel_precision(w: jnp.ndarray, channel_axis: int) -> jnp.ndarray:
+    """Per-channel precision p_i = r_i / R (paper eq. 8)."""
+    r = channel_ranges(w, channel_axis)
+    return r / jnp.maximum(tensor_range(w), 1e-12)
+
+
+def sqnr_db(x: jnp.ndarray, x_hat: jnp.ndarray) -> jnp.ndarray:
+    """Signal-to-quantization-noise ratio in dB — scalar quality metric used
+    throughout tests/benchmarks where the paper reports top-1 accuracy."""
+    num = jnp.sum(jnp.square(x))
+    den = jnp.sum(jnp.square(x - x_hat)) + 1e-30
+    return 10.0 * jnp.log10(num / den)
+
+
+def np_dtype_for_bits(bits: int, symmetric: bool):
+    if bits <= 8:
+        return np.int8 if symmetric else np.uint8
+    return np.int16 if symmetric else np.uint16

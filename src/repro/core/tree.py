@@ -1,0 +1,55 @@
+"""Tiny pytree-path utilities used by the DFQ plan executor.
+
+Paths are tuples of dict keys. All transforms are functional: ``set_path``
+returns a new nested dict sharing unmodified subtrees.
+"""
+from __future__ import annotations
+
+from typing import Any, Mapping
+
+Path = tuple
+
+
+def get_path(tree: Mapping, path: Path) -> Any:
+    node = tree
+    for key in path:
+        node = node[key]
+    return node
+
+
+def has_path(tree: Mapping, path: Path) -> bool:
+    node = tree
+    for key in path:
+        if not isinstance(node, Mapping) or key not in node:
+            return False
+        node = node[key]
+    return True
+
+
+def set_path(tree: Mapping, path: Path, value: Any) -> dict:
+    """Functionally set ``tree[path] = value`` (copy-on-write along the path)."""
+    if not path:
+        raise ValueError("empty path")
+    new = dict(tree)
+    key = path[0]
+    if len(path) == 1:
+        new[key] = value
+    else:
+        new[key] = set_path(new.get(key, {}), path[1:], value)
+    return new
+
+
+def update_paths(tree: Mapping, updates: Mapping[Path, Any]) -> dict:
+    for path, value in updates.items():
+        tree = set_path(tree, path, value)
+    return tree
+
+
+def leaf_paths(tree: Mapping, prefix: Path = ()) -> list[Path]:
+    out = []
+    for key, val in tree.items():
+        if isinstance(val, Mapping):
+            out.extend(leaf_paths(val, prefix + (key,)))
+        else:
+            out.append(prefix + (key,))
+    return out

@@ -1,0 +1,6 @@
+from .synthetic import (  # noqa: F401
+    calibration_tokens,
+    synthetic_image_batch,
+    token_batch,
+    TokenStream,
+)

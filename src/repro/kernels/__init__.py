@@ -1,0 +1,19 @@
+"""Pallas TPU kernels for the INT8 deployment path DFQ enables.
+
+Three kernels (taxonomy B.12 — W8A8 / weight-only / dynamic-quant):
+
+  * ``qmatmul_w8a8``  — int8×int8 → int32 MXU GEMM, dequant epilogue fused
+                        with the DFQ bias-correction term (compute-bound
+                        prefill path; int8 doubles v5e MXU peak vs bf16),
+  * ``qmatmul_w8a16`` — bf16 activations × int8 weights dequantized in VMEM
+                        (memory-bound decode path; halves HBM weight bytes),
+  * ``quantize_act``  — fused per-row absmax reduce + scale + round
+                        (dynamic activation quantization),
+  * ``kv_attention``  — single-token decode attention with the int8 KV cache
+                        dequantized in VMEM (one HBM pass over the cache —
+                        the EXPERIMENTS §Perf C5 roofline term, fused).
+
+Each package: kernel.py (pl.pallas_call + BlockSpec), ops.py (jit'd public
+wrapper with padding + XLA fallback), ref.py (pure-jnp oracle).
+Kernels VALIDATE in interpret mode on CPU; TPU is the compile target.
+"""

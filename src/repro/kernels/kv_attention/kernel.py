@@ -1,0 +1,97 @@
+"""Pallas TPU kernel: decode attention with int8 KV dequantized in VMEM.
+
+The EXPERIMENTS §Perf C5 finding made concrete: at 32k context the decode
+roofline is the KV-cache stream. This kernel reads the cache as int8 (half
+the HBM bytes of bf16) and dequantizes per block inside VMEM, fused with the
+online-softmax accumulation — one HBM pass over the cache per token.
+
+Grid (B, S/blk), S innermost; per-(batch) scratch carries the online-softmax
+state (m, l [H]; acc [H, hd] fp32). Block working set at blk = 512, H = 8,
+hd = 128: k/v int8 2·512·8·128 = 1 MiB + scales 32 KiB + acc 4 KiB — well
+inside VMEM with double buffering.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+try:
+    from jax.experimental.pallas import tpu as pltpu
+
+    def _scratch(H, hd):
+        return [pltpu.VMEM((H,), jnp.float32), pltpu.VMEM((H,), jnp.float32),
+                pltpu.VMEM((H, hd), jnp.float32)]
+
+    _PARAMS = lambda: dict(
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")
+        )
+    )
+except ImportError:  # pragma: no cover
+    pltpu = None
+
+    def _scratch(H, hd):
+        return [jax.ShapeDtypeStruct((H,), jnp.float32),
+                jax.ShapeDtypeStruct((H,), jnp.float32),
+                jax.ShapeDtypeStruct((H, hd), jnp.float32)]
+
+    _PARAMS = lambda: {}
+
+_NEG = -1e30
+
+
+def _kernel(q_ref, kq_ref, ks_ref, vq_ref, vs_ref, o_ref,
+            m_ref, l_ref, acc_ref, *, n_blk, scale):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32)                        # [H, hd]
+    k = kq_ref[0].astype(jnp.float32) * ks_ref[0][..., None]  # [blk, H, hd]
+    s = jnp.einsum("hd,khd->hk", q, k) * scale              # [H, blk]
+
+    m_new = jnp.maximum(m_ref[...], jnp.max(s, -1))
+    p = jnp.exp(s - m_new[:, None])
+    corr = jnp.exp(m_ref[...] - m_new)
+    l_ref[...] = l_ref[...] * corr + jnp.sum(p, -1)
+    m_ref[...] = m_new
+    v = vq_ref[0].astype(jnp.float32) * vs_ref[0][..., None]
+    acc_ref[...] = acc_ref[...] * corr[:, None] + jnp.einsum("hk,khd->hd", p, v)
+
+    @pl.when(j == n_blk - 1)
+    def _epilogue():
+        o_ref[0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)[:, None]
+                    ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("blk", "out_dtype", "interpret"))
+def kv_attention_pallas(q, k_q, k_s, v_q, v_s, *, blk=512,
+                        out_dtype=jnp.float32, interpret=False):
+    B, S, H, hd = k_q.shape
+    assert S % blk == 0
+    n_blk = S // blk
+    scale = 1.0 / (hd ** 0.5)
+    grid = (B, n_blk)
+    return pl.pallas_call(
+        functools.partial(_kernel, n_blk=n_blk, scale=scale),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, H, hd), lambda b, j: (b, 0, 0)),
+            pl.BlockSpec((1, blk, H, hd), lambda b, j: (b, j, 0, 0)),
+            pl.BlockSpec((1, blk, H), lambda b, j: (b, j, 0)),
+            pl.BlockSpec((1, blk, H, hd), lambda b, j: (b, j, 0, 0)),
+            pl.BlockSpec((1, blk, H), lambda b, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, H, hd), lambda b, j: (b, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, hd), out_dtype),
+        scratch_shapes=_scratch(H, hd),
+        interpret=interpret,
+        **_PARAMS(),
+    )(q, k_q, k_s.astype(jnp.float32), v_q, v_s.astype(jnp.float32))

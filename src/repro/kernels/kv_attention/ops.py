@@ -1,0 +1,36 @@
+"""Public int8-KV decode-attention op: padding + backend selection."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import kv_attention_pallas
+from .ref import kv_attention_ref
+
+
+def kv_attention(q, k_q, k_s, v_q, v_s, *, blk: int = 512,
+                 out_dtype=jnp.float32, backend: Optional[str] = None):
+    """Single-token decode attention over an int8 cache.
+
+    q [B,H,hd]; k_q/v_q [B,S,H,hd] int8; k_s/v_s [B,S,H]. Padding positions
+    must carry scale 0 (their dequantized keys are 0 ⇒ uniform logits; pass
+    fully-populated caches for exactness, as the serving loop does).
+    """
+    backend = backend or ("pallas" if jax.default_backend() == "tpu" else "interpret")
+    if backend == "xla":
+        return kv_attention_ref(q, k_q, k_s, v_q, v_s, out_dtype)
+    B, S, H, hd = k_q.shape
+    blk_e = min(blk, S)
+    pad = (-S) % blk_e
+    if pad:
+        # pad with scale 0 AND logit-masking handled by monotone softmax:
+        # zero-scale keys give score 0; to keep exactness we instead pad by
+        # REPLICATING the final block's stats — simplest correct route is to
+        # require divisibility from the caller; assert instead of silently
+        # degrading.
+        raise ValueError(f"S={S} must be a multiple of blk={blk_e}")
+    return kv_attention_pallas(q, k_q, k_s, v_q, v_s, blk=blk_e,
+                               out_dtype=out_dtype,
+                               interpret=(backend == "interpret"))

@@ -1,0 +1,21 @@
+"""Pure-jnp oracle for single-token decode attention over an int8 KV cache."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def kv_attention_ref(
+    q: jnp.ndarray,        # [B, H, hd]
+    k_q: jnp.ndarray,      # [B, S, H, hd] int8
+    k_s: jnp.ndarray,      # [B, S, H] fp32 per-token, per-head scales
+    v_q: jnp.ndarray,      # [B, S, H, hd] int8
+    v_s: jnp.ndarray,      # [B, S, H]
+    out_dtype=jnp.float32,
+) -> jnp.ndarray:
+    scale = 1.0 / (q.shape[-1] ** 0.5)
+    k = k_q.astype(jnp.float32) * k_s[..., None]
+    v = v_q.astype(jnp.float32) * v_s[..., None]
+    s = jnp.einsum("bhd,bshd->bhs", q.astype(jnp.float32), k) * scale
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhs,bshd->bhd", p, v).astype(out_dtype)

@@ -1,0 +1,51 @@
+"""Public weight-only GEMM op with padding + backend selection."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import qmatmul_w8a16_pallas
+from .ref import qmatmul_w8a16_ref
+
+
+def _pad_to(x, m, axis):
+    pad = (-x.shape[axis]) % m
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def qmatmul_w8a16(
+    a: jnp.ndarray,
+    w_q: jnp.ndarray,
+    w_scale: jnp.ndarray,
+    bias: Optional[jnp.ndarray] = None,
+    *,
+    out_dtype=jnp.bfloat16,
+    backend: Optional[str] = None,
+    bm: int = 8,
+    bn: int = 512,
+    bk: int = 1024,
+):
+    backend = backend or ("pallas" if jax.default_backend() == "tpu" else "interpret")
+    M, K = a.shape
+    N = w_q.shape[1]
+    w_scale = jnp.broadcast_to(jnp.asarray(w_scale, jnp.float32), (N,))
+    bias = jnp.zeros((N,), jnp.float32) if bias is None else bias.astype(jnp.float32)
+    if backend == "xla":
+        return qmatmul_w8a16_ref(a, w_q, w_scale, bias, out_dtype)
+    bm_e = min(bm, max(1, M))
+    bn_e = min(bn, N)
+    bk_e = min(bk, K)
+    a_p = _pad_to(_pad_to(a, bm_e, 0), bk_e, 1)
+    w_p = _pad_to(_pad_to(w_q, bk_e, 0), bn_e, 1)
+    out = qmatmul_w8a16_pallas(
+        a_p, w_p, _pad_to(w_scale, bn_e, 0), _pad_to(bias, bn_e, 0),
+        bm=bm_e, bn=bn_e, bk=bk_e, out_dtype=out_dtype,
+        interpret=(backend == "interpret"),
+    )
+    return out[:M, :N]

@@ -1,0 +1,20 @@
+"""Pure-jnp oracle for the weight-only (W8A16) GEMM."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+
+
+def qmatmul_w8a16_ref(
+    a: jnp.ndarray,            # [M, K] bf16/f32 activations
+    w_q: jnp.ndarray,          # [K, N] int8 (symmetric)
+    w_scale: jnp.ndarray,      # [N] or scalar
+    bias: Optional[jnp.ndarray] = None,
+    out_dtype=jnp.bfloat16,
+) -> jnp.ndarray:
+    w = w_q.astype(jnp.float32) * jnp.atleast_1d(w_scale)[None, :]
+    out = jnp.matmul(a.astype(jnp.float32), w)
+    if bias is not None:
+        out = out + bias[None, :]
+    return out.astype(out_dtype)

@@ -1,0 +1,86 @@
+"""Public W8A8 GEMM op: padding, backend selection, asymmetric handling.
+
+Asymmetric activations are supported by folding the cross terms outside the
+MXU loop (DESIGN.md §5):  with a = (a_q − zp)·s_a,
+    y = s_a s_w (Σ a_q w_q − zp Σ_k w_q[k,:])
+the ``zp·colsum(w_q)`` term is static per output channel → folded into bias.
+Weights are symmetric by default (the paper observes CLE makes weight
+distributions near-symmetric — Table 7).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import qmatmul_w8a8_pallas
+from .ref import qmatmul_w8a8_ref
+
+
+def _pad_to(x, m, axis):
+    pad = (-x.shape[axis]) % m
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def default_backend() -> str:
+    return "pallas" if jax.default_backend() == "tpu" else "interpret"
+
+
+def qmatmul_w8a8(
+    a_q: jnp.ndarray,
+    w_q: jnp.ndarray,
+    a_scale: jnp.ndarray,
+    w_scale: jnp.ndarray,
+    bias: Optional[jnp.ndarray] = None,
+    a_zero_point: Optional[jnp.ndarray] = None,
+    *,
+    out_dtype=jnp.float32,
+    backend: Optional[str] = None,
+    bm: int = 128,
+    bn: int = 128,
+    bk: int = 512,
+):
+    """y = dequant(a_q) @ dequant(w_q) + bias.  a_q [M,K] int8, w_q [K,N] int8,
+    a_scale [M]|scalar, w_scale [N]|scalar, bias [N]."""
+    backend = backend or default_backend()
+    M, K = a_q.shape
+    N = w_q.shape[1]
+    a_scale = jnp.broadcast_to(jnp.asarray(a_scale, jnp.float32), (M,))
+    w_scale = jnp.broadcast_to(jnp.asarray(w_scale, jnp.float32), (N,))
+    bias = jnp.zeros((N,), jnp.float32) if bias is None else bias.astype(jnp.float32)
+
+    if a_zero_point is not None:
+        # fold zp·colsum(w) into a per-(row, col) rank-1 correction; since
+        # zp is per-row and colsum per-col, we add it post-GEMM (cheap VPU).
+        colsum = jnp.sum(w_q.astype(jnp.int32), axis=0).astype(jnp.float32)
+        zp_term = (
+            jnp.broadcast_to(jnp.asarray(a_zero_point, jnp.float32), (M,))[:, None]
+            * colsum[None, :]
+            * a_scale[:, None]
+            * w_scale[None, :]
+        )
+    else:
+        zp_term = None
+
+    if backend == "xla":
+        out = qmatmul_w8a8_ref(a_q, w_q, a_scale, w_scale, bias, out_dtype)
+    else:
+        bm_e = min(bm, max(8, M))
+        a_p = _pad_to(_pad_to(a_q, bm_e, 0), bk, 1)
+        w_p = _pad_to(_pad_to(w_q, bk, 0), bn, 1)
+        sa_p = _pad_to(a_scale, bm_e, 0)
+        sw_p = _pad_to(w_scale, bn, 0)
+        b_p = _pad_to(bias, bn, 0)
+        out = qmatmul_w8a8_pallas(
+            a_p, w_p, sa_p, sw_p, b_p,
+            bm=bm_e, bn=bn, bk=bk, out_dtype=out_dtype,
+            interpret=(backend == "interpret"),
+        )[:M, :N]
+    if zp_term is not None:
+        out = (out.astype(jnp.float32) - zp_term).astype(out_dtype)
+    return out

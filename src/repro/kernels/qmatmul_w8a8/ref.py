@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for the W8A8 quantized GEMM."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+
+
+def qmatmul_w8a8_ref(
+    a_q: jnp.ndarray,          # [M, K] int8 (symmetric per-row quantized)
+    w_q: jnp.ndarray,          # [K, N] int8 (symmetric)
+    a_scale: jnp.ndarray,      # [M] or scalar
+    w_scale: jnp.ndarray,      # [N] or scalar
+    bias: Optional[jnp.ndarray] = None,  # [N] fp32 (carries DFQ's ε·E[x] term)
+    out_dtype=jnp.float32,
+) -> jnp.ndarray:
+    acc = jnp.matmul(
+        a_q.astype(jnp.int32), w_q.astype(jnp.int32)
+    )                                                     # exact int32
+    out = acc.astype(jnp.float32)
+    out = out * jnp.atleast_1d(a_scale)[:, None] * jnp.atleast_1d(w_scale)[None, :]
+    if bias is not None:
+        out = out + bias[None, :]
+    return out.astype(out_dtype)

@@ -1,0 +1,47 @@
+"""Pallas TPU kernel: fused per-row absmax reduce + scale + round → int8.
+
+One pass over the activation row in VMEM: reduce |x|max across K, derive the
+scale, round — the quantize stage of the dynamic W8A8 path costs a single
+HBM read + int8 write instead of (reduce pass + scale pass).
+Block (bm, K): whole rows resident (K ≤ 8k ⇒ ≤ 4 MiB fp32 at bm = 128).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, q_ref, s_ref, *, qmax):
+    x = x_ref[...].astype(jnp.float32)
+    amax = jnp.max(jnp.abs(x), axis=-1)
+    scale = jnp.maximum(amax, 1e-8) / qmax
+    q = jnp.clip(jnp.round(x / scale[:, None]), -qmax - 1, qmax)
+    q_ref[...] = q.astype(jnp.int8)
+    s_ref[...] = scale
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "bm", "interpret"))
+def quantize_act_pallas(
+    x: jnp.ndarray, *, bits: int = 8, bm: int = 128, interpret: bool = False
+):
+    M, K = x.shape
+    assert M % bm == 0
+    qmax = 2 ** (bits - 1) - 1
+    grid = (M // bm,)
+    return pl.pallas_call(
+        functools.partial(_kernel, qmax=qmax),
+        grid=grid,
+        in_specs=[pl.BlockSpec((bm, K), lambda i: (i, 0))],
+        out_specs=[
+            pl.BlockSpec((bm, K), lambda i: (i, 0)),
+            pl.BlockSpec((bm,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((M, K), jnp.int8),
+            jax.ShapeDtypeStruct((M,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x)

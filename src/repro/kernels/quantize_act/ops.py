@@ -1,0 +1,24 @@
+"""Public dynamic-quantize op with padding + backend selection."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import quantize_act_pallas
+from .ref import quantize_act_ref
+
+
+def quantize_act(
+    x: jnp.ndarray, *, bits: int = 8, backend: Optional[str] = None, bm: int = 128
+):
+    backend = backend or ("pallas" if jax.default_backend() == "tpu" else "interpret")
+    if backend == "xla":
+        return quantize_act_ref(x, bits)
+    M, K = x.shape
+    bm_e = min(bm, M)
+    pad = (-M) % bm_e
+    x_p = jnp.pad(x, ((0, pad), (0, 0))) if pad else x
+    q, s = quantize_act_pallas(x_p, bits=bits, bm=bm_e, interpret=(backend == "interpret"))
+    return q[:M], s[:M]

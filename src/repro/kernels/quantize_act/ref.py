@@ -1,0 +1,14 @@
+"""Pure-jnp oracle for fused per-row dynamic activation quantization."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def quantize_act_ref(x: jnp.ndarray, bits: int = 8):
+    """Per-row symmetric absmax quantization. x: [M, K] → (q int8 [M, K],
+    scale fp32 [M])."""
+    qmax = 2 ** (bits - 1) - 1
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1)
+    scale = jnp.maximum(amax, 1e-8) / qmax
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[:, None]), -qmax - 1, qmax)
+    return q.astype(jnp.int8), scale

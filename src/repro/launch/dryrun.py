@@ -1,0 +1,320 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+# ^ MUST precede every other import: jax locks the device count on first init.
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+For each cell we jit the real program (train_step / prefill_step /
+decode_step) with planner shardings, ``.lower().compile()`` it against
+ShapeDtypeStruct inputs (no allocation), and record:
+
+  * ``compiled.memory_analysis()``  — proves the cell fits per-device HBM,
+  * ``compiled.cost_analysis()``    — per-device FLOPs / bytes for §Roofline,
+  * collective bytes parsed from the optimized per-device HLO,
+  * the derived roofline terms (repro.analysis.roofline).
+
+Results cache to results/dryrun/<cell>.json — reruns skip green cells, so the
+full 40-cell × 2-mesh sweep is resumable on this 1-core container.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen2-0.5b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all --mesh both
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from ..analysis.roofline import (
+    HW_V5E,
+    collective_bytes_from_hlo,
+    model_flops,
+    roofline_report,
+)
+from ..configs import get_config, list_archs
+from ..models import SHAPES, SHAPE_BY_NAME, build_model, shape_applicable
+from ..models.model import input_specs
+from .mesh import make_production_mesh
+from .steps import make_decode_step, make_prefill_step, make_train_step, shardings_for
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "results", "dryrun")
+
+
+def _mem_dict(ma):
+    return {
+        k: int(getattr(ma, k))
+        for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                  "temp_size_in_bytes", "alias_size_in_bytes",
+                  "generated_code_size_in_bytes")
+        if hasattr(ma, k)
+    }
+
+
+def _lower_compile(cfg, shape, mesh, chunk_kv, donate=True, quantized=False):
+    """Lower + compile the real program for one cell. Returns (compiled,
+    lower_s, compile_s). ``quantized`` swaps the weight sites for int8
+    QTensors (the W8A16 serving path) before lowering."""
+    from .steps import configure_sharding_hints
+
+    sh = shardings_for(cfg, shape, mesh)
+    if quantized:
+        from ..quantized import quantize_shapes
+        from ..sharding import named_shardings, params_pspecs
+
+        plan = build_model(cfg).dfq_plan()
+        qshape = quantize_shapes(sh["params_shape"], plan)
+        heads = {"n_q": cfg.n_heads, "n_kv": cfg.n_kv_heads}
+        sh["params_shape"] = qshape
+        sh["params"] = named_shardings(
+            params_pspecs(qshape, mesh, heads,
+                          mode="decode" if shape.kind == "decode" else "train"),
+            mesh)
+    configure_sharding_hints(cfg, mesh)
+    t0 = time.time()
+    with mesh:
+        if shape.kind == "train":
+            model, train_step = make_train_step(cfg, chunk_kv=chunk_kv)
+            in_sh = (sh["params"], sh["opt"], {
+                "tokens": sh["batch"], "labels": sh["batch"],
+                **({"frames": sh["frames"]} if cfg.is_encdec else {}),
+            })
+            specs = input_specs(cfg, shape)
+            batch_spec = {"tokens": specs["tokens"], "labels": specs["labels"]}
+            if cfg.is_encdec:
+                batch_spec["frames"] = specs["frames"]
+            jitted = jax.jit(
+                train_step,
+                in_shardings=in_sh,
+                donate_argnums=(0, 1) if donate else (),
+            )
+            lowered = jitted.lower(sh["params_shape"], sh["opt_shape"], batch_spec)
+        elif shape.kind == "prefill":
+            model, prefill_step = make_prefill_step(cfg, shape, chunk_kv=chunk_kv)
+            specs = input_specs(cfg, shape)
+            args = [sh["params_shape"], specs["tokens"]]
+            in_sh = [sh["params"], sh["batch"]]
+            if cfg.is_encdec:
+                args.append(specs["frames"])
+                in_sh.append(sh["frames"])
+            lowered = jax.jit(prefill_step, in_shardings=tuple(in_sh)).lower(*args)
+        else:  # decode
+            model, decode_step = make_decode_step(cfg)
+            specs = input_specs(cfg, shape)
+            jitted = jax.jit(
+                decode_step,
+                in_shardings=(sh["params"], sh["cache"], sh["batch"]),
+                donate_argnums=(1,) if donate else (),
+            )
+            lowered = jitted.lower(sh["params_shape"], sh["cache_shape"],
+                                   specs["token"])
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+    from .steps import clear_sharding_hints
+
+    clear_sharding_hints()
+    return compiled, t_lower, t_compile
+
+
+def _probe_layers(cfg):
+    if cfg.family == "hybrid":
+        return cfg.hybrid_attn_every, 2 * cfg.hybrid_attn_every
+    return 1, 2
+
+
+def _probe_cfg(cfg, L, shape):
+    """Reduced-depth probe with every inner scan disabled, so XLA's
+    cost_analysis (which counts while bodies ONCE) is exact; the full-depth
+    numbers come from linear extrapolation over L."""
+    kw = dict(n_layers=L, logit_chunk=shape.seq_len, unroll_layers=True)
+    if cfg.is_encdec:
+        kw["n_enc_layers"] = L
+    return dataclasses.replace(cfg, **kw)
+
+
+def _probe_costs(cfg, shape, mesh, chunk_kv, quantized=False):
+    """Per-device (flops, bytes, collective_bytes) extrapolated to full depth
+    from two shallow probes: X(L) is linear in L for scan-stacked layers.
+    Probes run the SAME chunked program, python-unrolled (unroll_layers) so
+    XLA's once-per-while-body cost counting becomes exact."""
+    L1, L2 = _probe_layers(cfg)
+    L_full = cfg.n_layers
+    # probes chunk at seq/8 with matched q-chunks: ≤ 8×8 unrolled attention
+    # blocks per layer (vs 1000+ at production chunk sizes), while the causal
+    # block skipping is exercised at the SAME granularity as the real program
+    probe_ckv = max(2048, shape.seq_len // 8)
+    vals = []
+    for L in (L1, L2):
+        compiled, _, _ = _lower_compile(_probe_cfg(cfg, L, shape), shape, mesh,
+                                        chunk_kv=probe_ckv, donate=False,
+                                        quantized=quantized)
+        ca = compiled.cost_analysis() or {}
+        coll = collective_bytes_from_hlo(compiled.as_text())
+        vals.append((float(ca.get("flops", 0.0)),
+                     float(ca.get("bytes accessed", 0.0)),
+                     float(coll["total"]), coll))
+    slope = [(vals[1][i] - vals[0][i]) / (L2 - L1) for i in range(3)]
+    full = [vals[0][i] + slope[i] * (L_full - L1) for i in range(3)]
+    return {"flops": full[0], "bytes": full[1], "collective_bytes": full[2],
+            "per_layer": {"flops": slope[0], "bytes": slope[1],
+                          "collective_bytes": slope[2]},
+            "probe_collective_detail": vals[1][3]}
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             chunk_kv: int | None = 2048, donate: bool = True,
+             with_probes: bool = True, quantized: bool = False,
+             kv8: bool = False) -> dict:
+    cfg = get_config(arch)
+    if kv8:
+        cfg = dataclasses.replace(cfg, kv_cache_bits=8)
+    shape = SHAPE_BY_NAME[shape_name]
+    ok, why = shape_applicable(cfg, shape)
+    if not ok:
+        return {"status": "skipped", "reason": why}
+    if quantized and shape.kind != "decode":
+        return {"status": "skipped", "reason": "W8A16 variant is decode-only"}
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = len(mesh.devices.reshape(-1))
+    compiled, t_lower, t_compile = _lower_compile(cfg, shape, mesh, chunk_kv,
+                                                  donate=donate,
+                                                  quantized=quantized)
+
+    ma = compiled.memory_analysis()
+    print(f"  memory_analysis: {ma}")
+    hlo = compiled.as_text()
+    coll = collective_bytes_from_hlo(hlo)
+
+    if with_probes and not multi_pod:
+        costs = _probe_costs(cfg, shape, mesh, chunk_kv, quantized=quantized)
+    else:
+        ca = compiled.cost_analysis() or {}
+        costs = {"flops": float(ca.get("flops", 0.0)),
+                 "bytes": float(ca.get("bytes accessed", 0.0)),
+                 "collective_bytes": float(coll["total"]),
+                 "per_layer": None, "probe_collective_detail": None}
+    print(f"  cost (extrapolated): flops={costs['flops']:.3e} "
+          f"bytes={costs['bytes']:.3e} coll={costs['collective_bytes']:.3e}")
+
+    terms = roofline_report(
+        per_device_flops=costs["flops"],
+        per_device_bytes=costs["bytes"],
+        per_device_collective_bytes=costs["collective_bytes"],
+        chips=chips,
+        cfg=cfg,
+        shape=shape,
+        quantized=quantized,
+    )
+    mem = _mem_dict(ma)
+    hbm_used = mem.get("argument_size_in_bytes", 0) + mem.get("temp_size_in_bytes", 0)
+    result = {
+        "status": "ok",
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "chips": chips,
+        "memory": mem,
+        "hbm_used_per_device": hbm_used,
+        "fits_hbm": bool(hbm_used < HW_V5E["hbm_per_chip"]),
+        "cost": {"flops": costs["flops"], "bytes": costs["bytes"],
+                 "collective_bytes": costs["collective_bytes"],
+                 "per_layer": costs["per_layer"]},
+        "collectives_main_hlo": {k: (v if isinstance(v, dict) else int(v))
+                                 for k, v in coll.items()},
+        "roofline": {
+            "compute_s": terms.compute_s,
+            "memory_s": terms.memory_s,
+            "memory_analytic_s": terms.memory_analytic_s,
+            "collective_s": terms.collective_s,
+            "dominant": terms.dominant,
+            "bound_time_s": terms.bound_time_s,
+            "model_flops": terms.model_flops,
+            "hlo_flops_global": terms.flops_global,
+            "useful_flops_ratio": terms.useful_flops_ratio,
+            "roofline_fraction": terms.roofline_fraction,
+        },
+        "timings": {"lower_s": t_lower, "compile_s": t_compile},
+        "hlo_len": len(hlo),
+    }
+    return result
+
+
+def cell_path(arch, shape_name, multi_pod, tag=""):
+    mesh = "multi" if multi_pod else "single"
+    return os.path.join(RESULTS_DIR, f"{arch}__{shape_name}__{mesh}{tag}.json")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=["single", "multi", "both"], default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--tag", default="", help="suffix for perf-iteration variants")
+    ap.add_argument("--chunk-kv", type=int, default=2048)
+    ap.add_argument("--quantized", action="store_true",
+                    help="W8A16 QTensor weights (decode cells)")
+    ap.add_argument("--kv8", action="store_true", help="int8 KV cache")
+    args = ap.parse_args()
+    if args.quantized and not args.tag:
+        args.tag = "_w8a16" + ("_kv8" if args.kv8 else "")
+
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    archs = list_archs() if (args.all or args.arch is None) else [args.arch]
+    shapes = [s.name for s in SHAPES] if (args.all or args.shape is None) else [args.shape]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    n_ok = n_skip = n_fail = 0
+    for arch in archs:
+        for shape_name in shapes:
+            for multi in meshes:
+                path = cell_path(arch, shape_name, multi, args.tag)
+                if os.path.exists(path) and not args.force:
+                    prev = json.load(open(path))
+                    if prev.get("status") in ("ok", "skipped"):
+                        print(f"[cached] {arch} × {shape_name} × "
+                              f"{'multi' if multi else 'single'}: {prev['status']}")
+                        n_ok += prev["status"] == "ok"
+                        n_skip += prev["status"] == "skipped"
+                        continue
+                print(f"[run] {arch} × {shape_name} × "
+                      f"{'multi' if multi else 'single'} ...", flush=True)
+                try:
+                    result = run_cell(arch, shape_name, multi,
+                                      chunk_kv=args.chunk_kv,
+                                      quantized=args.quantized,
+                                      kv8=args.kv8)
+                except Exception as e:  # noqa: BLE001
+                    result = {"status": "error", "error": repr(e),
+                              "traceback": traceback.format_exc()[-4000:]}
+                    n_fail += 1
+                    print(f"  ERROR: {e}")
+                else:
+                    if result["status"] == "ok":
+                        n_ok += 1
+                        r = result["roofline"]
+                        print(f"  ok: dominant={r['dominant']} "
+                              f"bound={r['bound_time_s']:.4f}s "
+                              f"useful={r['useful_flops_ratio']:.2f} "
+                              f"compile={result['timings']['compile_s']:.0f}s")
+                    else:
+                        n_skip += 1
+                        print(f"  skipped: {result['reason']}")
+                with open(path, "w") as f:
+                    json.dump(result, f, indent=1)
+    print(f"\ndone: {n_ok} ok, {n_skip} skipped, {n_fail} failed")
+    return 0 if n_fail == 0 else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,141 @@
+"""Step builders: sharded train / prefill / decode programs for any arch.
+
+These are the programs the dry-run lowers and the drivers execute. All
+shardings come from the divisibility-aware planner (repro.sharding); the
+functions themselves are mesh-agnostic pure JAX.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..models import ModelConfig, ShapeConfig, build_model
+from ..models.model import input_specs
+from ..optim import adamw_init, adamw_update, cosine_schedule
+from ..sharding import batch_pspec, cache_pspecs, named_shardings, params_pspecs
+
+
+def configure_sharding_hints(cfg: ModelConfig, mesh: Mesh):
+    """Arm the in-model sharding constraints (models.layers._SHARD_CTX) for
+    tracing under ``mesh``: head-parallel attention when the head count
+    divides the model axis, context(sequence)-parallel otherwise."""
+    from ..models.layers import set_shard_ctx
+
+    model_n = mesh.shape.get("model", 1)
+    dp = ("pod", "data") if "pod" in mesh.shape else ("data",)
+    if cfg.n_heads == 0:
+        set_shard_ctx(enabled=True, dp=dp, model="model", attn_seq=False,
+                      mesh=mesh)
+        return
+    set_shard_ctx(
+        enabled=True,
+        dp=dp,
+        model="model",
+        attn_seq=(cfg.n_heads % model_n != 0),
+        kv_heads_ok=(cfg.n_kv_heads % model_n == 0),
+        mesh=mesh,
+    )
+
+
+def clear_sharding_hints():
+    from ..models.layers import set_shard_ctx
+
+    set_shard_ctx(enabled=False)
+
+
+def state_specs(model, mesh: Mesh):
+    """(params, opt) ShapeDtypeStructs + NamedShardings without allocation."""
+    params_shape = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+    opt_shape = jax.eval_shape(adamw_init, params_shape)
+    heads = {"n_q": model.cfg.n_heads, "n_kv": model.cfg.n_kv_heads}
+    p_spec = params_pspecs(params_shape, mesh, heads)
+    o_spec = {
+        "step": P(),
+        "m": params_pspecs(params_shape, mesh),
+        "v": params_pspecs(params_shape, mesh),
+    }
+    return (params_shape, opt_shape), (p_spec, o_spec)
+
+
+def _opt_spec_tree(opt_shape, p_spec):
+    from ..optim.adamw import AdamWState
+
+    return AdamWState(P(), p_spec, p_spec)
+
+
+def make_train_step(cfg: ModelConfig, *, lr_cfg: Optional[dict] = None,
+                    chunk_kv: Optional[int] = None):
+    """(params, opt, batch) → (params, opt, metrics)."""
+    model = build_model(cfg)
+    lr_cfg = lr_cfg or {"peak_lr": 3e-4, "warmup": 100, "total": 10000}
+
+    def train_step(params, opt, batch):
+        loss_fn = lambda p: model.loss(p, batch, chunk_kv=chunk_kv)
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        lr = cosine_schedule(opt.step, **lr_cfg)
+        params, opt, gnorm = adamw_update(grads, opt, params, lr=lr)
+        return params, opt, {"loss": loss, "grad_norm": gnorm, "lr": lr}
+
+    return model, train_step
+
+
+def make_prefill_step(cfg: ModelConfig, shape: ShapeConfig,
+                      chunk_kv: Optional[int] = None):
+    """tokens (+frames) → (logits of last position, fresh filled cache)."""
+    model = build_model(cfg)
+
+    def prefill_step(params, tokens, frames=None):
+        cache = model.init_cache(tokens.shape[0], shape.seq_len, jnp.bfloat16)
+        if cfg.is_encdec:
+            cache = model.warm_cache(params, frames, cache)
+        logits, cache = model.prefill(params, tokens, cache, chunk_kv=chunk_kv)
+        return logits, cache
+
+    return model, prefill_step
+
+
+def make_decode_step(cfg: ModelConfig):
+    """(params, cache, token) → (logits, cache). Cache donated."""
+    model = build_model(cfg)
+
+    def decode_step(params, cache, token):
+        return model.decode_step(params, token, cache)
+
+    return model, decode_step
+
+
+def shardings_for(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh):
+    """All NamedShardings for one (arch × shape) cell."""
+    model = build_model(cfg)
+    params_shape = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+    heads = {"n_q": cfg.n_heads, "n_kv": cfg.n_kv_heads}
+    # decode serves with RESIDENT weights: TP-only sharding, no FSDP — a
+    # per-token FSDP all-gather of fp32 weight shards cost 205 MB/layer on
+    # yi-34b decode_32k (EXPERIMENTS §Perf iteration C3)
+    p_spec = params_pspecs(params_shape, mesh, heads,
+                           mode="decode" if shape.kind == "decode" else "train")
+    out = {
+        "params_shape": params_shape,
+        "params": named_shardings(p_spec, mesh),
+        "batch": NamedSharding(mesh, batch_pspec(mesh, batch=shape.global_batch)),
+    }
+    if shape.kind == "train":
+        opt_shape = jax.eval_shape(adamw_init, params_shape)
+        o_spec = _opt_spec_tree(opt_shape, p_spec)
+        out["opt_shape"] = opt_shape
+        out["opt"] = named_shardings(o_spec, mesh)
+    if shape.kind in ("decode",):
+        cache_shape = jax.eval_shape(
+            lambda: model.init_cache(shape.global_batch, shape.seq_len, jnp.bfloat16)
+        )
+        c_spec = cache_pspecs(cache_shape, mesh, shape.global_batch)
+        out["cache_shape"] = cache_shape
+        out["cache"] = named_shardings(c_spec, mesh)
+    if cfg.is_encdec and shape.kind in ("train", "prefill"):
+        out["frames"] = NamedSharding(
+            mesh, batch_pspec(mesh, ndim=3, batch=shape.global_batch))
+    return out

@@ -1,0 +1,2 @@
+from .config import SHAPES, SHAPE_BY_NAME, ModelConfig, ShapeConfig, shape_applicable  # noqa: F401
+from .model import build_model  # noqa: F401

@@ -1,0 +1,282 @@
+"""MobileNetV2-style inverted-residual CNN — the paper's own architecture
+(Sandler et al. 2018), built in JAX with BatchNorm + ReLU6 so the FULL
+paper pipeline applies exactly: BN fold → ReLU6→ReLU swap → CLE → bias
+absorption (BN stats) → analytic bias correction (clipped normal).
+
+This is the faithful-reproduction vehicle: benchmarks/table*.py replay the
+paper's ablations on it (Tables 1, 2, 6, 7, 8; Figs. 2, 3, 6).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..core import (
+    BNParams,
+    ConvLayer,
+    QuantSpec,
+    absorb_conv,
+    absorption_amount,
+    bias_correction_conv,
+    bias_correction_dense,
+    equalize_conv_chain,
+    expected_input_analytic,
+    fake_quant,
+    fold_bn_conv,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class CNNConfig:
+    name: str = "mobilenet_v2"
+    in_channels: int = 3
+    num_classes: int = 10
+    width: int = 16
+    # (expansion, out_channels, stride) per inverted-residual block
+    blocks: tuple = ((1, 16, 1), (4, 24, 2), (4, 24, 1), (4, 32, 2), (4, 32, 1))
+    img_size: int = 32
+    act_clip: Optional[float] = 6.0  # ReLU6 (paper swaps to ReLU pre-CLE)
+
+
+def _conv(x, w, stride=1, groups=1):
+    return jax.lax.conv_general_dilated(
+        x, w, (stride, stride), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        feature_group_count=groups,
+    )
+
+
+def _act(x, clip_max):
+    x = jax.nn.relu(x)
+    return jnp.minimum(x, clip_max) if clip_max is not None else x
+
+
+class MobileNetCNN:
+    """Params: stem conv+bn, blocks of (expand 1x1, depthwise 3x3, project
+    1x1) each with BN, then GAP + dense classifier."""
+
+    def __init__(self, cfg: CNNConfig):
+        self.cfg = cfg
+
+    def init(self, key) -> dict:
+        cfg = self.cfg
+        ks = iter(jax.random.split(key, 4 + 3 * len(cfg.blocks)))
+
+        def conv_init(k, kh, kw, cin, cout):
+            fan = kh * kw * cin
+            return jax.random.normal(k, (kh, kw, cin, cout)) / (fan ** 0.5)
+
+        def bn_init(c):
+            return {"gamma": jnp.ones(c), "beta": jnp.zeros(c),
+                    "mean": jnp.zeros(c), "var": jnp.ones(c)}
+
+        params: dict = {
+            "stem": {"w": conv_init(next(ks), 3, 3, cfg.in_channels, cfg.width),
+                     "bn": bn_init(cfg.width)},
+            "blocks": [],
+        }
+        cin = cfg.width
+        for exp, cout, stride in cfg.blocks:
+            mid = cin * exp
+            params["blocks"].append({
+                "expand": {"w": conv_init(next(ks), 1, 1, cin, mid), "bn": bn_init(mid)},
+                "dw": {"w": conv_init(next(ks), 3, 3, 1, mid), "bn": bn_init(mid)},
+                "project": {"w": conv_init(next(ks), 1, 1, mid, cout), "bn": bn_init(cout)},
+            })
+            cin = cout
+        params["head"] = {
+            "w": jax.random.normal(next(ks), (cin, cfg.num_classes)) / (cin ** 0.5),
+            "b": jnp.zeros(cfg.num_classes),
+        }
+        return params
+
+    # ---------------------------------------------------------- training fwd
+    def apply_train(self, params, x, train_bn: bool = True):
+        """Forward with live batch statistics; returns logits and updated
+        running BN stats (momentum 0.9)."""
+        cfg = self.cfg
+        new_params = jax.tree.map(lambda a: a, params)
+
+        def bn_apply(h, bn, path):
+            if train_bn:
+                mu = jnp.mean(h, axis=(0, 1, 2))
+                var = jnp.var(h, axis=(0, 1, 2))
+                node = new_params
+                for k in path[:-1]:
+                    node = node[k]
+                node[path[-1]] = {
+                    "gamma": bn["gamma"], "beta": bn["beta"],
+                    "mean": 0.9 * bn["mean"] + 0.1 * mu,
+                    "var": 0.9 * bn["var"] + 0.1 * var,
+                }
+            else:
+                mu, var = bn["mean"], bn["var"]
+            return (h - mu) * jax.lax.rsqrt(var + 1e-5) * bn["gamma"] + bn["beta"]
+
+        h = _conv(x, params["stem"]["w"], 2)
+        h = _act(bn_apply(h, params["stem"]["bn"], ("stem", "bn")), cfg.act_clip)
+        for i, blk in enumerate(params["blocks"]):
+            inp = h
+            h = _conv(h, blk["expand"]["w"])
+            h = _act(bn_apply(h, blk["expand"]["bn"], ("blocks", i, "expand", "bn")), cfg.act_clip)
+            h = _conv(h, blk["dw"]["w"], self.cfg.blocks[i][2],
+                      groups=blk["dw"]["w"].shape[-1])
+            h = _act(bn_apply(h, blk["dw"]["bn"], ("blocks", i, "dw", "bn")), cfg.act_clip)
+            h = _conv(h, blk["project"]["w"])
+            h = bn_apply(h, blk["project"]["bn"], ("blocks", i, "project", "bn"))
+            if inp.shape == h.shape:
+                h = h + inp
+        h = jnp.mean(h, axis=(1, 2))
+        logits = h @ params["head"]["w"] + params["head"]["b"]
+        return logits, new_params
+
+    def loss(self, params, batch):
+        logits, new_params = self.apply_train(params, batch["x"])
+        logz = jax.nn.logsumexp(logits, -1)
+        gold = jnp.take_along_axis(logits, batch["y"][:, None], -1)[:, 0]
+        return jnp.mean(logz - gold), new_params
+
+    # ------------------------------------------------- folded inference form
+    def fold(self, params) -> dict:
+        """BN-fold every conv (paper §5). Returns an inference pytree of
+        ConvLayer-style entries + per-layer BN moments for BA/BC."""
+        def fold_one(w, bn):
+            return fold_bn_conv(w, None, BNParams(
+                bn["gamma"], bn["beta"], bn["mean"], bn["var"]))
+
+        folded: dict = {"stem": fold_one(params["stem"]["w"], params["stem"]["bn"]),
+                        "blocks": []}
+        for i, blk in enumerate(params["blocks"]):
+            folded["blocks"].append({
+                "expand": fold_one(blk["expand"]["w"], blk["expand"]["bn"]),
+                "dw": fold_one(blk["dw"]["w"], blk["dw"]["bn"]),
+                "stride": self.cfg.blocks[i][2],
+                "project": fold_one(blk["project"]["w"], blk["project"]["bn"]),
+            })
+        folded["head"] = dict(params["head"])
+        return folded
+
+    def apply_folded(self, folded, x, act_clip=None, act_quant=None):
+        """Inference on the folded form. ``act_quant(h, layer_name, moments)``
+        optionally fake-quantizes activations (data-free ranges β ± 6γ)."""
+        def act(h, name, mean, std):
+            h = _act(h, act_clip)
+            if act_quant is not None:
+                h = act_quant(h, name, mean, std)
+            return h
+
+        h = _conv(x, folded["stem"].w, 2) + folded["stem"].b
+        h = act(h, "stem", folded["stem"].act_mean, folded["stem"].act_std)
+        for i, blk in enumerate(folded["blocks"]):
+            inp = h
+            h = _conv(h, blk["expand"].w) + blk["expand"].b
+            h = act(h, f"b{i}_expand", blk["expand"].act_mean, blk["expand"].act_std)
+            h = _conv(h, blk["dw"].w, blk["stride"], groups=blk["dw"].w.shape[-1])
+            h = act(h, f"b{i}_dw", blk["dw"].act_mean, blk["dw"].act_std)
+            h = _conv(h, blk["project"].w) + blk["project"].b
+            if inp.shape == h.shape:
+                h = h + inp
+        h = jnp.mean(h, axis=(1, 2))
+        return h @ folded["head"]["w"] + folded["head"]["b"]
+
+    # -------------------------------------------------------------- DFQ flow
+    def chains(self, folded) -> List[List[tuple]]:
+        """Equalization chains (paths into the folded tree), one per
+        inverted-residual block: expand → depthwise → project (paper §5.1.1:
+        equalization within each residual block)."""
+        out = []
+        for i in range(len(folded["blocks"])):
+            out.append([
+                (("blocks", i, "expand"), "conv"),
+                (("blocks", i, "dw"), "depthwise"),
+                (("blocks", i, "project"), "conv"),
+            ])
+        return out
+
+    def equalize(self, folded, iterations: int = 20) -> dict:
+        import copy
+        folded = copy.deepcopy(jax.device_get(folded))
+        for chain in self.chains(folded):
+            layers = []
+            for path, kind in chain:
+                node = folded
+                for k in path[:-1]:
+                    node = node[k]
+                fl = node[path[-1]]
+                layers.append(ConvLayer(jnp.asarray(fl.w), jnp.asarray(fl.b), kind))
+            new_layers, cum = equalize_conv_chain(layers, iterations)
+            for j, (path, kind) in enumerate(chain):
+                node = folded
+                for k in path[:-1]:
+                    node = node[k]
+                fl = node[path[-1]]
+                nl = new_layers[j]
+                if j < len(cum):
+                    # layer j's output channels were divided by cum[j] — the
+                    # BN-derived pre-activation moments scale identically
+                    # (exact: the whole channel, weights+bias, is rescaled).
+                    mean = jnp.asarray(fl.act_mean) / cum[j]
+                    std = jnp.asarray(fl.act_std) / cum[j]
+                else:
+                    mean, std = fl.act_mean, fl.act_std
+                node[path[-1]] = fl._replace(w=nl.w, b=nl.b, act_mean=mean,
+                                             act_std=std)
+        return folded
+
+    def absorb_high_bias(self, folded, n_sigma: float = 3.0) -> dict:
+        """Paper §4.1.3 over each (expand→dw) and (dw→project) interface."""
+        import copy
+        folded = copy.deepcopy(jax.device_get(folded))
+        for i in range(len(folded["blocks"])):
+            blk = folded["blocks"][i]
+            for src, dst, depthwise in (("expand", "dw", True), ("dw", "project", False)):
+                fl1, fl2 = blk[src], blk[dst]
+                c = absorption_amount(jnp.asarray(fl1.act_mean),
+                                      jnp.asarray(fl1.act_std), n_sigma)
+                res = absorb_conv(jnp.asarray(fl1.b), jnp.asarray(fl2.w),
+                                  jnp.asarray(fl2.b), c, depthwise=depthwise)
+                blk[src] = fl1._replace(b=res.b1, act_mean=fl1.act_mean - c)
+                blk[dst] = fl2._replace(b=res.b2)
+        return folded
+
+    def quantize_weights(self, folded, spec: QuantSpec) -> dict:
+        import copy
+        q = copy.deepcopy(jax.device_get(folded))
+        q["stem"] = q["stem"]._replace(w=fake_quant(jnp.asarray(q["stem"].w), spec))
+        for blk in q["blocks"]:
+            for k in ("expand", "dw", "project"):
+                blk[k] = blk[k]._replace(w=fake_quant(jnp.asarray(blk[k].w), spec))
+        q["head"]["w"] = fake_quant(jnp.asarray(q["head"]["w"]), spec)
+        return q
+
+    def bias_correct_analytic(self, folded, q, spec: QuantSpec,
+                              act_clip=None) -> dict:
+        """Paper §4.2.1: E[x] from the clipped-normal closed form on the
+        PREVIOUS layer's BN moments; correction per conv (appendix B)."""
+        import copy
+        q = copy.deepcopy(jax.device_get(q))
+        act = "relu6" if act_clip == 6.0 else "relu"
+        for i, blk in enumerate(folded["blocks"]):
+            prev = folded["stem"] if i == 0 else folded["blocks"][i - 1]["project"]
+            # project has no activation after it (linear bottleneck) → identity
+            e_in = (expected_input_analytic(jnp.asarray(prev.act_mean),
+                                            jnp.asarray(prev.act_std), act)
+                    if i == 0 else jnp.asarray(prev.act_mean))
+            qblk = q["blocks"][i]
+            qblk["expand"] = qblk["expand"]._replace(
+                b=bias_correction_conv(jnp.asarray(blk["expand"].w),
+                                       jnp.asarray(qblk["expand"].b), e_in, spec))
+            e_mid = expected_input_analytic(jnp.asarray(blk["expand"].act_mean),
+                                            jnp.asarray(blk["expand"].act_std), act)
+            qblk["dw"] = qblk["dw"]._replace(
+                b=bias_correction_conv(jnp.asarray(blk["dw"].w), jnp.asarray(qblk["dw"].b),
+                                       e_mid, spec, depthwise=True))
+            e_dw = expected_input_analytic(jnp.asarray(blk["dw"].act_mean),
+                                           jnp.asarray(blk["dw"].act_std), act)
+            qblk["project"] = qblk["project"]._replace(
+                b=bias_correction_conv(jnp.asarray(blk["project"].w),
+                                       jnp.asarray(qblk["project"].b), e_dw, spec))
+        return q

@@ -1,0 +1,374 @@
+"""Whisper-style encoder-decoder backbone (arXiv:2212.04356).
+
+Per the assignment, the conv/audio frontend is a STUB: ``input_specs`` /
+callers provide precomputed frame embeddings [B, enc_seq, d_model]. The
+backbone is faithful: pre-LN transformer, LayerNorm (γ, β), GELU MLPs with
+biases everywhere, sinusoidal encoder positions, learned decoder positions,
+causal decoder self-attention + cross-attention to the encoder output.
+
+DFQ notes (DESIGN §3): plain-GELU MLP pairs are *approximate* CLE (flagged
+``exact=False``); LayerNorm gives the analytic bias-correction route its
+(β, γ) statistics — the LN analogue of the paper's BatchNorm assumption.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..core.graph import (
+    DFQPlan,
+    DensePairOp,
+    NormFoldOp,
+    QKPairOp,
+    VBiasAbsorbOp,
+    VOPairOp,
+    WeightSite,
+)
+from .config import ModelConfig
+from .layers import (
+    AttnDims,
+    apply_norm,
+    attention_block,
+    causal_mask,
+    linear,
+    mlp_block,
+    scan_layers,
+)
+
+
+def sinusoidal_positions(T: int, d: int):
+    pos = jnp.arange(T)[:, None]
+    dim = jnp.arange(d // 2)[None, :]
+    ang = pos / (10000 ** (2 * dim / d))
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], -1)
+
+
+class EncDecModel:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+
+    # ------------------------------------------------------------------ init
+    def _init_attn(self, key, dtype, v_bias=True):
+        cfg = self.cfg
+        ks = jax.random.split(key, 4)
+        s = 1.0 / (cfg.d_model ** 0.5)
+        return {
+            "wq": (jax.random.normal(ks[0], (cfg.d_model, cfg.attn_dim)) * s).astype(dtype),
+            "bq": jnp.zeros((cfg.attn_dim,), dtype),
+            "wk": (jax.random.normal(ks[1], (cfg.d_model, cfg.kv_dim)) * s).astype(dtype),
+            "bk": jnp.zeros((cfg.kv_dim,), dtype),
+            "wv": (jax.random.normal(ks[2], (cfg.d_model, cfg.kv_dim)) * s).astype(dtype),
+            "bv": jnp.zeros((cfg.kv_dim,), dtype),
+            "wo": (jax.random.normal(ks[3], (cfg.attn_dim, cfg.d_model)) * s).astype(dtype),
+            "bo": jnp.zeros((cfg.d_model,), dtype),
+        }
+
+    def _init_mlp(self, key, dtype):
+        cfg = self.cfg
+        ks = jax.random.split(key, 2)
+        return {
+            "wu": (jax.random.normal(ks[0], (cfg.d_model, cfg.d_ff)) / cfg.d_model ** 0.5).astype(dtype),
+            "bu": jnp.zeros((cfg.d_ff,), dtype),
+            "wd": (jax.random.normal(ks[1], (cfg.d_ff, cfg.d_model)) / cfg.d_ff ** 0.5).astype(dtype),
+            "bd": jnp.zeros((cfg.d_model,), dtype),
+        }
+
+    def _ln(self, dtype):
+        return {"w": jnp.ones((self.cfg.d_model,), dtype),
+                "b": jnp.zeros((self.cfg.d_model,), dtype)}
+
+    def _init_enc_block(self, key, dtype):
+        k1, k2 = jax.random.split(key)
+        return {
+            "attn_norm": self._ln(dtype), "attn": self._init_attn(k1, dtype),
+            "mlp_norm": self._ln(dtype), "mlp": self._init_mlp(k2, dtype),
+        }
+
+    def _init_dec_block(self, key, dtype):
+        k1, k2, k3 = jax.random.split(key, 3)
+        return {
+            "attn_norm": self._ln(dtype), "attn": self._init_attn(k1, dtype),
+            "cross_norm": self._ln(dtype), "cross": self._init_attn(k2, dtype),
+            "mlp_norm": self._ln(dtype), "mlp": self._init_mlp(k3, dtype),
+        }
+
+    def init(self, key) -> dict:
+        cfg = self.cfg
+        dtype = jnp.dtype(cfg.param_dtype)
+        ks = jax.random.split(key, 5)
+        stack = lambda fn, k, n: jax.tree.map(
+            lambda *xs: jnp.stack(xs), *[fn(kk, dtype) for kk in jax.random.split(k, n)]
+        )
+        return {
+            "embed": (jax.random.normal(ks[0], (cfg.vocab_size, cfg.d_model)) * 0.02).astype(dtype),
+            "dec_pos": (jax.random.normal(ks[1], (cfg.max_seq, cfg.d_model)) * 0.01).astype(dtype),
+            "enc_blocks": stack(self._init_enc_block, ks[2], cfg.n_enc_layers),
+            "dec_blocks": stack(self._init_dec_block, ks[3], cfg.n_layers),
+            "enc_final_norm": self._ln(dtype),
+            "final_norm": self._ln(dtype),
+        }
+
+    # -------------------------------------------------------------- forward
+    def _dims(self, window=None) -> AttnDims:
+        cfg = self.cfg
+        return AttnDims(n_q=cfg.n_heads, n_kv=cfg.n_kv_heads, head_dim=cfg.head_dim,
+                        rope=False, window=window,
+                        causal_segments=cfg.attn_causal_segments)
+
+    def encode(self, params, frames, *, capture: bool = False):
+        """frames: [B, enc_seq, d_model] stub embeddings → encoder states."""
+        cfg = self.cfg
+        compute = jnp.dtype(cfg.dtype)
+        x = frames.astype(compute) + sinusoidal_positions(
+            frames.shape[1], cfg.d_model
+        ).astype(compute)
+        positions = jnp.arange(frames.shape[1])
+
+        def body(carry, p):
+            x = carry
+            h = apply_norm(x, p["attn_norm"], "ln")
+            a, _, s1 = attention_block(
+                p["attn"], h, self._dims(), positions=positions, mask=None,
+                capture=capture, unroll=cfg.unroll_layers,
+            )
+            x = x + a
+            h = apply_norm(x, p["mlp_norm"], "ln")
+            m, s2 = mlp_block(p["mlp"], h, cfg.act, capture=capture)
+            return x + m, {**s1, **s2} if capture else {}
+
+        body = jax.checkpoint(body) if cfg.remat else body
+        x, stats = scan_layers(body, x, self._cast(params["enc_blocks"], compute),
+                               cfg.unroll_layers)
+        x = apply_norm(x, self._cast(params["enc_final_norm"], compute), "ln")
+        return x, stats
+
+    @staticmethod
+    def _cast(tree, compute):
+        return jax.tree.map(
+            lambda a: a.astype(compute) if a.dtype == jnp.float32 and compute != jnp.float32 else a,
+            tree,
+        )
+
+    def decode(
+        self, params, tokens, enc_out, *, cache: Optional[dict] = None,
+        capture: bool = False, chunk_kv: Optional[int] = None,
+    ):
+        cfg = self.cfg
+        compute = jnp.dtype(cfg.dtype)
+        params = self._cast(params, compute)
+        B, T = tokens.shape
+        pos0 = cache["pos"] if cache is not None else 0
+        positions = pos0 + jnp.arange(T)
+        x = jnp.take(params["embed"], tokens, axis=0).astype(compute)
+        x = x + jnp.take(params["dec_pos"], positions, axis=0).astype(compute)
+        mask = None if cache is not None else causal_mask(T, T, 0)
+
+        def body(carry, inp):
+            x = carry
+            if cache is not None:
+                p, kv = inp
+                self_cache = {"k": kv["k"], "v": kv["v"],
+                              "kpos": cache["kpos"], "pos": pos0}
+                cross_cache = {"k": kv["ck"], "v": kv["cv"]}
+            else:
+                p = inp
+                self_cache = None
+                cross_cache = None
+            h = apply_norm(x, p["attn_norm"], "ln")
+            a, new_self, s1 = attention_block(
+                p["attn"], h, self._dims(), positions=positions, mask=mask,
+                cache=self_cache, chunk_kv=chunk_kv, capture=capture,
+                unroll=cfg.unroll_layers,
+            )
+            x = x + a
+            h = apply_norm(x, p["cross_norm"], "ln")
+            if cross_cache is not None:
+                c, _, s2 = attention_block(
+                    p["cross"], h, self._dims(), positions=positions, mask=None,
+                    cache=cross_cache, kv_input=jnp.zeros_like(h[:, :1]),
+                    capture=capture,
+                )
+            else:
+                c, _, s2 = attention_block(
+                    p["cross"], h, self._dims(), positions=positions, mask=None,
+                    kv_input=enc_out, capture=capture,
+                )
+            x = x + c
+            h = apply_norm(x, p["mlp_norm"], "ln")
+            m, s3 = mlp_block(p["mlp"], h, cfg.act, capture=capture)
+            x = x + m
+            ys = {}
+            if cache is not None:
+                ys.update({"k": new_self["k"], "v": new_self["v"],
+                           "kpos": new_self["kpos"]})
+            if capture:
+                ys["stats"] = {
+                    **{f"dec_{k}": v for k, v in s1.items()},
+                    **{f"cross_{k}": v for k, v in s2.items()},
+                    **{f"dec_{k}": v for k, v in s3.items()},
+                }
+            return x, ys
+
+        if cache is not None:
+            xs = (params["dec_blocks"],
+                  {"k": cache["k"], "v": cache["v"],
+                   "ck": cache["ck"], "cv": cache["cv"]})
+        else:
+            xs = params["dec_blocks"]
+        body_fn = jax.checkpoint(body) if cfg.remat else body
+        x, ys = scan_layers(body_fn, x, xs, cfg.unroll_layers)
+        x = apply_norm(x, params["final_norm"], "ln")
+        from .layers import _SHARD_CTX, _wsc
+
+        if _SHARD_CTX["enabled"]:
+            x = _wsc(x, _SHARD_CTX["dp"], None, None)
+        logits = x @ params["embed"].T.astype(x.dtype)
+        if _SHARD_CTX["enabled"]:
+            logits = _wsc(logits, _SHARD_CTX["dp"], None, _SHARD_CTX["model"])
+        new_cache = None
+        if cache is not None:
+            new_cache = {
+                "k": ys["k"], "v": ys["v"], "kpos": ys["kpos"][0],
+                "ck": cache["ck"], "cv": cache["cv"], "pos": pos0 + T,
+            }
+        stats = ys.get("stats", {}) if capture else {}
+        return logits, new_cache, stats
+
+    def apply(self, params, tokens, frames=None, *, capture=False, chunk_kv=None,
+              return_hidden=False):
+        """Teacher-forced training forward. frames default: zeros stub."""
+        cfg = self.cfg
+        if frames is None:
+            frames = jnp.zeros((tokens.shape[0], cfg.enc_seq, cfg.d_model),
+                               jnp.dtype(cfg.dtype))
+        enc_out, enc_stats = self.encode(params, frames, capture=capture)
+        logits, _, dec_stats = self.decode(
+            params, tokens, enc_out, capture=capture, chunk_kv=chunk_kv
+        )
+        stats = {}
+        if capture:
+            stats = {**{f"enc_{k}": v for k, v in enc_stats.items()}, **dec_stats}
+        return logits, (0.0, stats)
+
+    def loss(self, params, batch, *, chunk_kv=None):
+        logits, _ = self.apply(
+            params, batch["tokens"], batch.get("frames"), chunk_kv=chunk_kv
+        )
+        logits = logits.astype(jnp.float32)
+        logz = jax.nn.logsumexp(logits, -1)
+        iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape, logits.ndim - 1)
+        gold = jnp.sum(
+            jnp.where(iota == batch["labels"][..., None], logits, 0.0), axis=-1
+        )
+        return jnp.mean(logz - gold)
+
+    # ---------------------------------------------------------------- cache
+    def cache_len(self, seq_len: int) -> int:
+        return seq_len
+
+    def init_cache(self, batch: int, seq_len: int, dtype=jnp.bfloat16) -> dict:
+        cfg = self.cfg
+        L = cfg.n_layers
+        return {
+            "k": jnp.zeros((L, batch, seq_len, cfg.n_kv_heads, cfg.head_dim), dtype),
+            "v": jnp.zeros((L, batch, seq_len, cfg.n_kv_heads, cfg.head_dim), dtype),
+            "ck": jnp.zeros((L, batch, cfg.enc_seq, cfg.n_kv_heads, cfg.head_dim), dtype),
+            "cv": jnp.zeros((L, batch, cfg.enc_seq, cfg.n_kv_heads, cfg.head_dim), dtype),
+            "kpos": jnp.full((seq_len,), -1, jnp.int32),
+            "pos": jnp.zeros((), jnp.int32),
+        }
+
+    def warm_cache(self, params, frames, cache):
+        """Encoder pass + cross K/V projection (once per request)."""
+        cfg = self.cfg
+        compute = jnp.dtype(cfg.dtype)
+        enc_out, _ = self.encode(params, frames)
+        p = self._cast(params["dec_blocks"], compute)
+
+        def proj(p_layer):
+            k = linear(enc_out, p_layer["cross"]["wk"], p_layer["cross"]["bk"])
+            v = linear(enc_out, p_layer["cross"]["wv"], p_layer["cross"]["bv"])
+            B, S = enc_out.shape[:2]
+            return (k.reshape(B, S, cfg.n_kv_heads, cfg.head_dim),
+                    v.reshape(B, S, cfg.n_kv_heads, cfg.head_dim))
+
+        ck, cv = jax.vmap(proj)(p)
+        return {**cache, "ck": ck.astype(cache["ck"].dtype),
+                "cv": cv.astype(cache["cv"].dtype)}
+
+    def prefill(self, params, tokens, cache, *, chunk_kv=None):
+        logits, new_cache, _ = self.decode(
+            params, tokens, None, cache=cache, chunk_kv=chunk_kv
+        )
+        return logits[:, -1] if logits.ndim == 3 else logits, new_cache
+
+    def decode_step(self, params, token, cache):
+        logits, new_cache, _ = self.decode(params, token, None, cache=cache)
+        return logits[:, -1] if logits.ndim == 3 else logits, new_cache
+
+    # ------------------------------------------------------------- DFQ plan
+    def dfq_plan(self) -> DFQPlan:
+        cfg = self.cfg
+        ops: list = []
+        sites: list = []
+        for stack, pre in (("enc_blocks", "enc"), ("dec_blocks", "dec")):
+            def P(*rest, stack=stack):
+                return (stack,) + rest
+
+            attns = [("attn", f"{pre}_attn")]
+            if stack == "dec_blocks":
+                attns.append(("cross", "cross_attn"))
+            for attn_key, stat in attns:
+                ops.append(NormFoldOp(
+                    norm_w=P(f"{'attn' if attn_key == 'attn' else 'cross'}_norm", "w"),
+                    norm_b=P(f"{'attn' if attn_key == 'attn' else 'cross'}_norm", "b"),
+                    consumers=[P(attn_key, "wq"), P(attn_key, "wk"), P(attn_key, "wv")],
+                    consumer_biases=[P(attn_key, "bq"), P(attn_key, "bk"), P(attn_key, "bv")],
+                ))
+                ops.append(VOPairOp(
+                    wv=P(attn_key, "wv"), wo=P(attn_key, "wo"), bv=P(attn_key, "bv"),
+                    n_q=cfg.n_heads, n_kv=cfg.n_kv_heads, head_dim=cfg.head_dim,
+                ))
+                ops.append(QKPairOp(
+                    wq=P(attn_key, "wq"), wk=P(attn_key, "wk"),
+                    bq=P(attn_key, "bq"), bk=P(attn_key, "bk"),
+                    n_q=cfg.n_heads, n_kv=cfg.n_kv_heads, head_dim=cfg.head_dim,
+                    rope=False,
+                ))
+                ops.append(VBiasAbsorbOp(
+                    bv=P(attn_key, "bv"), wo=P(attn_key, "wo"), bo=P(attn_key, "bo"),
+                    n_q=cfg.n_heads, n_kv=cfg.n_kv_heads, head_dim=cfg.head_dim,
+                ))
+                in_stat = f"{pre}_attn_in" if attn_key == "attn" else "cross_attn_in"
+                o_stat = f"{pre}_o_in" if attn_key == "attn" else "cross_o_in"
+                sites += [
+                    WeightSite(f"{pre}_{attn_key}_wq", P(attn_key, "wq"), P(attn_key, "bq"),
+                               "dense", in_stat),
+                    WeightSite(f"{pre}_{attn_key}_wk", P(attn_key, "wk"), P(attn_key, "bk"),
+                               "dense", None),
+                    WeightSite(f"{pre}_{attn_key}_wv", P(attn_key, "wv"), P(attn_key, "bv"),
+                               "dense", None),
+                    WeightSite(f"{pre}_{attn_key}_wo", P(attn_key, "wo"), P(attn_key, "bo"),
+                               "dense", o_stat),
+                ]
+            ops.append(NormFoldOp(
+                norm_w=P("mlp_norm", "w"), norm_b=P("mlp_norm", "b"),
+                consumers=[P("mlp", "wu")], consumer_biases=[P("mlp", "bu")],
+            ))
+            # plain-GELU MLP: CLE is approximate here (DESIGN §3.1)
+            ops.append(DensePairOp(
+                w1=P("mlp", "wu"), b1=P("mlp", "bu"), w2=P("mlp", "wd"), exact=False,
+            ))
+            sites += [
+                WeightSite(f"{pre}_wu", P("mlp", "wu"), P("mlp", "bu"),
+                           "dense", f"{pre}_mlp_in"),
+                WeightSite(f"{pre}_wd", P("mlp", "wd"), P("mlp", "bd"),
+                           "dense", f"{pre}_down_in"),
+            ]
+        return DFQPlan(tuple(ops), tuple(sites), cfg.name)
+
+    def calibration_stats(self, params, tokens, frames=None):
+        _, (_, stats) = self.apply(params, tokens, frames, capture=True)
+        return stats

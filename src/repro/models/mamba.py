@@ -1,0 +1,217 @@
+"""Mamba2 (state-space duality, arXiv:2405.21060) mixer — TPU-native chunked
+SSD formulation.
+
+The chunked algorithm recasts the selective-scan as dense matmuls (MXU
+friendly): within chunks of length Q the recurrence is an attention-like
+masked ``(C·Bᵀ ⊙ decay) · X`` product; across chunks a short ``lax.scan``
+carries the [H, P, S] state. Decode is the O(1) single-step recurrence.
+
+Param layout per layer (leading scan dims broadcast):
+  in_proj  [D, 2·din + 2·G·S + H]   → z, x, B, C, dt
+  conv_w   [W, din + 2·G·S]         depthwise causal conv over (x, B, C)
+  conv_b   [din + 2·G·S]
+  A_log    [H]      (A = −exp(A_log), scalar per head)
+  D        [H]      skip
+  dt_bias  [H]
+  norm_w   [din]    gated RMSNorm before out_proj
+  out_proj [din, D]
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import linear, rms_norm
+
+
+def ssm_dims(cfg: ModelConfig):
+    din = cfg.d_inner
+    H = cfg.ssm_heads
+    G, S = cfg.ssm_n_groups, cfg.ssm_state
+    d_proj = 2 * din + 2 * G * S + H
+    d_conv = din + 2 * G * S
+    return din, H, G, S, d_proj, d_conv
+
+
+def _split_proj(proj, cfg: ModelConfig):
+    din, H, G, S, _, _ = ssm_dims(cfg)
+    z = proj[..., :din]
+    xbc = proj[..., din : din + din + 2 * G * S]
+    dt = proj[..., -H:]
+    return z, xbc, dt
+
+
+def _causal_conv(xbc, conv_w, conv_b, conv_state: Optional[jnp.ndarray]):
+    """Depthwise causal conv1d, width W. conv_state: [B, W-1, C] past inputs
+    (decode) or None (prefill, zero-padded left)."""
+    W = conv_w.shape[0]
+    if conv_state is None:
+        pad = jnp.zeros((xbc.shape[0], W - 1, xbc.shape[-1]), xbc.dtype)
+    else:
+        pad = conv_state.astype(xbc.dtype)
+    full = jnp.concatenate([pad, xbc], axis=1)            # [B, T+W-1, C]
+    out = sum(
+        full[:, i : i + xbc.shape[1], :] * conv_w[i] for i in range(W)
+    )
+    new_state = full[:, -(W - 1) :, :]
+    return jax.nn.silu(out + conv_b), new_state
+
+
+def ssd_chunked(x, dt, A, B, C, chunk: int, unroll: bool = False):
+    """Chunked SSD scan.
+
+    x: [b, T, H, P]; dt: [b, T, H] (post-softplus); A: [H] (negative);
+    B, C: [b, T, G, S]. Returns y: [b, T, H, P] and final state [b, H, P, S].
+    """
+    b, T, H, P = x.shape
+    G, S = B.shape[-2], B.shape[-1]
+    Q = min(chunk, T)
+    n = T // Q
+    hpg = H // G
+
+    xb = x.reshape(b, n, Q, H, P)
+    dtb = dt.reshape(b, n, Q, H)
+    Bb = B.reshape(b, n, Q, G, S)
+    Cb = C.reshape(b, n, Q, G, S)
+
+    dA = dtb * A                                           # [b,n,Q,H] (≤ 0)
+    cum = jnp.cumsum(dA, axis=2)                           # within-chunk
+    total = cum[:, :, -1, :]                               # [b,n,H]
+
+    # intra-chunk: masked decay kernel  L[q,k] = exp(cum_q − cum_k), q ≥ k
+    CB = jnp.einsum("bnqgs,bnkgs->bngqk", Cb, Bb)          # [b,n,G,Q,Q]
+    CB = jnp.repeat(CB, hpg, axis=2)                       # [b,n,H,Q,Q]
+    cum_h = cum.transpose(0, 1, 3, 2)                      # [b,n,H,Q]
+    logL = cum_h[..., :, None] - cum_h[..., None, :]       # [b,n,H,Q,K]
+    qk_mask = jnp.tril(jnp.ones((Q, Q), bool))
+    L = jnp.where(qk_mask, jnp.exp(logL), 0.0)
+    dt_k = dtb.transpose(0, 1, 3, 2)[:, :, :, None, :]     # [b,n,H,1,K]
+    M = CB * (L * dt_k).astype(CB.dtype)
+    y_intra = jnp.einsum("bnhqk,bnkhp->bnqhp", M.astype(x.dtype), xb)
+
+    # chunk-local end states: S_loc = Σ_k exp(total − cum_k) dt_k B_k ⊗ x_k
+    w_end = jnp.exp(total[:, :, None, :] - cum) * dtb      # [b,n,Q,H]
+    B_h = jnp.repeat(Bb, hpg, axis=3)                      # [b,n,Q,H,S]
+    S_loc = jnp.einsum(
+        "bnqhs,bnqhp->bnhps", (B_h * w_end[..., None]).astype(x.dtype), xb
+    )
+
+    # inter-chunk scan: S_n = exp(total_n)·S_{n−1} + S_loc_n
+    def body(carry, inp):
+        s_prev = carry
+        tot, s_loc = inp
+        s_new = jnp.exp(tot)[:, :, None, None] * s_prev + s_loc
+        return s_new, s_prev
+
+    from .layers import scan_layers
+
+    s0 = jnp.zeros((b, H, P, S), jnp.float32)
+    s_final, s_prevs = scan_layers(
+        body,
+        s0,
+        (total.transpose(1, 0, 2), S_loc.transpose(1, 0, 2, 3, 4).astype(jnp.float32)),
+        unroll,
+    )
+    s_prevs = s_prevs.transpose(1, 0, 2, 3, 4)             # [b,n,H,P,S]
+
+    # inter-chunk contribution: y_inter_q = exp(cum_q) · C_q · S_prev
+    C_h = jnp.repeat(Cb, hpg, axis=3)                      # [b,n,Q,H,S]
+    y_inter = jnp.einsum(
+        "bnqhs,bnhps->bnqhp", C_h, s_prevs.astype(x.dtype)
+    ) * jnp.exp(cum)[..., None].astype(x.dtype)
+
+    y = (y_intra + y_inter).reshape(b, T, H, P)
+    return y, s_final
+
+
+def mamba_block(
+    p: dict,
+    x: jnp.ndarray,
+    cfg: ModelConfig,
+    *,
+    state: Optional[dict] = None,
+    capture: bool = False,
+):
+    """Full Mamba2 block. state (decode): {"ssm": [B,H,P,S] fp32,
+    "conv": [B,W-1,d_conv]}. Returns (out, new_state, stats)."""
+    bsz, T, D = x.shape
+    din, H, G, S, _, _ = ssm_dims(cfg)
+    P = cfg.ssm_head_dim
+    stats = {}
+    if capture:
+        stats["ssm_in"] = jnp.mean(x.reshape(-1, D), 0)
+
+    proj = linear(x, p["in_proj"], p.get("in_bias"))
+    z, xbc, dt_raw = _split_proj(proj, cfg)
+    conv_state = None if state is None else state["conv"]
+    xbc, new_conv = _causal_conv(xbc, p["conv_w"], p["conv_b"], conv_state)
+
+    xs = xbc[..., :din].reshape(bsz, T, H, P)
+    B = xbc[..., din : din + G * S].reshape(bsz, T, G, S)
+    C = xbc[..., din + G * S :].reshape(bsz, T, G, S)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # [b,T,H]
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))                     # [H]
+
+    if state is None or T > 1:
+        # pad T to a chunk multiple; padded steps get dt = 0 (decay exp(0·A)=1
+        # and increment dt·Bx = 0 ⇒ state and outputs are exactly unaffected)
+        Q = min(cfg.ssm_chunk, max(T, 1))
+        pad = (-T) % Q
+        if pad:
+            xs_p = jnp.pad(xs, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            dt_p = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+            B_p = jnp.pad(B, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            C_p = jnp.pad(C, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        else:
+            xs_p, dt_p, B_p, C_p = xs, dt, B, C
+        y, s_final = ssd_chunked(xs_p, dt_p, A, B_p, C_p, Q,
+                                 unroll=cfg.unroll_layers)
+        y = y[:, :T]
+    else:
+        # O(1) decode recurrence
+        s_prev = state["ssm"]
+        dA = jnp.exp(dt[:, 0] * A)                                   # [b,H]
+        B_h = jnp.repeat(B[:, 0], H // G, axis=1)                    # [b,H,S]
+        inc = jnp.einsum("bhs,bhp->bhps", B_h * dt[:, 0][..., None], xs[:, 0])
+        s_final = dA[:, :, None, None] * s_prev + inc.astype(jnp.float32)
+        C_h = jnp.repeat(C[:, 0], H // G, axis=1)
+        y = jnp.einsum("bhps,bhs->bhp", s_final.astype(x.dtype), C_h)[:, None]
+
+    y = y + xs * p["D"][:, None].astype(x.dtype)
+    y = y.reshape(bsz, T, din)
+    y = rms_norm(y * jax.nn.silu(z), p["norm_w"])
+    if capture:
+        stats["ssm_out_in"] = jnp.mean(y.reshape(-1, din), 0)
+    out = linear(y, p["out_proj"], p.get("out_bias"))
+
+    new_state = None
+    if state is not None:
+        new_state = {"ssm": s_final, "conv": new_conv.astype(state["conv"].dtype)}
+    return out, new_state, stats
+
+
+def init_mamba_params(key, cfg: ModelConfig, dtype) -> dict:
+    din, H, G, S, d_proj, d_conv = ssm_dims(cfg)
+    D = cfg.d_model
+    k = jax.random.split(key, 4)
+    scale_in = 1.0 / jnp.sqrt(D)
+    dt = jnp.exp(
+        jax.random.uniform(k[2], (H,)) * (jnp.log(0.1) - jnp.log(0.001))
+        + jnp.log(0.001)
+    )
+    dt_bias = dt + jnp.log(-jnp.expm1(-dt))  # inverse softplus
+    return {
+        "in_proj": (jax.random.normal(k[0], (D, d_proj)) * scale_in).astype(dtype),
+        "in_bias": jnp.zeros((d_proj,), dtype),
+        "conv_w": (jax.random.normal(k[1], (cfg.ssm_conv_width, d_conv)) * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((d_conv,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H)).astype(jnp.float32),
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": dt_bias.astype(jnp.float32),
+        "norm_w": jnp.ones((din,), dtype),
+        "out_proj": (jax.random.normal(k[3], (din, D)) * (1.0 / jnp.sqrt(din))).astype(dtype),
+        "out_bias": jnp.zeros((D,), dtype),
+    }

@@ -1,0 +1,48 @@
+"""Model construction dispatch + input-spec factory for the dry-run."""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig, ShapeConfig
+from .encdec import EncDecModel
+from .lm import LMModel
+
+
+def build_model(cfg: ModelConfig):
+    if cfg.is_encdec:
+        return EncDecModel(cfg)
+    return LMModel(cfg)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input of a cell — weak-type
+    correct, shardable, no device allocation (dry-run contract)."""
+    B, T = shape.global_batch, shape.seq_len
+    tok = jax.ShapeDtypeStruct((B, T), jnp.int32)
+    if shape.kind == "train":
+        specs = {"tokens": tok, "labels": jax.ShapeDtypeStruct((B, T), jnp.int32)}
+        if cfg.is_encdec:
+            specs["frames"] = jax.ShapeDtypeStruct(
+                (B, cfg.enc_seq, cfg.d_model), jnp.bfloat16
+            )
+        return specs
+    if shape.kind == "prefill":
+        specs = {"tokens": tok}
+        if cfg.is_encdec:
+            specs["frames"] = jax.ShapeDtypeStruct(
+                (B, cfg.enc_seq, cfg.d_model), jnp.bfloat16
+            )
+        return specs
+    # decode: one new token against a cache of length T
+    return {"token": jax.ShapeDtypeStruct((B, 1), jnp.int32)}
+
+
+def cache_specs(cfg: ModelConfig, shape: ShapeConfig, dtype=jnp.bfloat16):
+    """ShapeDtypeStructs for the KV/SSM cache of a decode cell."""
+    model = build_model(cfg)
+    return jax.eval_shape(
+        lambda: model.init_cache(shape.global_batch, shape.seq_len, dtype)
+    )

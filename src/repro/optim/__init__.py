@@ -1,0 +1,3 @@
+from .adamw import AdamWState, adamw_init, adamw_update  # noqa: F401
+from .schedule import cosine_schedule  # noqa: F401
+from .compression import compressed_mean, ef_compress, ef_init  # noqa: F401

@@ -1,0 +1,44 @@
+"""Int8 error-feedback gradient compression for cross-pod all-reduce.
+
+The paper's own insight — quantization error is *biased* and must be
+corrected (§4.2) — applied to distributed optimization: error feedback keeps
+a per-tensor residual of the int8 quantization error and adds it back before
+the next round, making the compressed all-reduce unbiased over time.
+
+``compressed_mean`` runs inside ``shard_map`` over the gradient-sync axis:
+int8 payload (+1 fp32 scale per tensor) crosses the interconnect instead of
+fp32 — a 4× cross-pod byte reduction visible in the dry-run HLO.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ef_init(grads):
+    return jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+
+
+def ef_compress(g: jnp.ndarray, residual: jnp.ndarray):
+    """Quantize g+residual to int8; return (q, scale, new_residual)."""
+    x = g.astype(jnp.float32) + residual
+    scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    new_residual = x - q.astype(jnp.float32) * scale
+    return q, scale, new_residual
+
+
+def compressed_mean(g: jnp.ndarray, residual: jnp.ndarray, axis_name: str):
+    """Mean of g across ``axis_name`` with int8 payload + error feedback.
+
+    all_gather(int8) + local dequant-sum: the wire carries 1 byte/element.
+    Returns (mean_g fp32, new_residual).
+    """
+    q, scale, new_residual = ef_compress(g, residual)
+    q_all = jax.lax.all_gather(q, axis_name)              # int8 on the wire
+    s_all = jax.lax.all_gather(scale, axis_name)
+    n = q_all.shape[0]
+    mean = jnp.tensordot(
+        s_all / n, q_all.astype(jnp.float32), axes=((0,), (0,))
+    )
+    return mean, new_residual

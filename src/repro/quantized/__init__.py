@@ -1,0 +1,7 @@
+from .qtensor import QTensor, quantize_param  # noqa: F401
+from .ptq import (  # noqa: F401
+    dequantize_params,
+    quantize_for_serving,
+    quantize_shapes,
+    serving_summary,
+)

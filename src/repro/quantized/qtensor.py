@@ -1,0 +1,88 @@
+"""QTensor: int8 weight container that drops into the model unchanged.
+
+Registered as a pytree node, so scan-stacked quantized weights slice per
+layer like ordinary arrays, the sharding planner sees q/scale as leaves, and
+``models.layers.linear`` dispatches on the type:
+
+    y = x @ W          (jnp.ndarray)
+    y = w8a16(x, W)    (QTensor, mode="w8a16": dequant-in-kernel)
+    y = w8a8(q(x), W)  (QTensor, mode="w8a8":  dynamic act quant + int8 MXU)
+
+so the SAME transformer code serves fp and INT8 — the paper's "simple API
+call" deployment story.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class QTensor:
+    q: jnp.ndarray                 # int8 payload [..., K, N]
+    scale: jnp.ndarray             # [..., N] or [..., 1] fp32 (symmetric)
+    mode: str = "w8a16"            # w8a16 | w8a8
+
+    def tree_flatten(self):
+        return (self.q, self.scale), (self.mode,)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], children[1], aux[0])
+
+    @property
+    def shape(self):
+        return self.q.shape
+
+    @property
+    def ndim(self):
+        return self.q.ndim
+
+    @property
+    def dtype(self):
+        return self.q.dtype
+
+    def astype(self, dtype):  # models cast params wholesale; int8 stays int8
+        return self
+
+    def dequant(self, dtype=jnp.float32):
+        return self.q.astype(jnp.float32) * self.scale[..., None, :]
+
+
+def quantize_param(w: jnp.ndarray, *, per_channel: bool = True,
+                   mode: str = "w8a16") -> QTensor:
+    """Symmetric int8 quantization of a [..., K, N] weight (per-out-channel
+    or per-tensor scale). CLE makes symmetric ≈ asymmetric (paper Table 7)."""
+    if per_channel:
+        amax = jnp.max(jnp.abs(w), axis=-2)            # [..., N]
+    else:
+        amax = jnp.max(jnp.abs(w), axis=(-2, -1), keepdims=True)[..., 0]
+    scale = jnp.maximum(amax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(w / scale[..., None, :]), -127, 127).astype(jnp.int8)
+    return QTensor(q, scale.astype(jnp.float32), mode)
+
+
+def qtensor_matmul(x: jnp.ndarray, w: QTensor, bias: Optional[jnp.ndarray]):
+    """Route an activation through a quantized weight. x: [..., K]."""
+    from ..kernels.qmatmul_w8a16.ops import qmatmul_w8a16
+    from ..kernels.qmatmul_w8a8.ops import qmatmul_w8a8
+    from ..kernels.quantize_act.ops import quantize_act
+
+    lead = x.shape[:-1]
+    K = x.shape[-1]
+    N = w.q.shape[-1]
+    x2 = x.reshape(-1, K)
+    assert w.q.ndim == 2, "stacked QTensors must be sliced (scan) before use"
+    backend = "pallas" if jax.default_backend() == "tpu" else "xla"
+    if w.mode == "w8a8":
+        a_q, a_s = quantize_act(x2, backend=backend)
+        y = qmatmul_w8a8(a_q, w.q, a_s, w.scale, bias, backend=backend,
+                         out_dtype=x.dtype)
+    else:
+        y = qmatmul_w8a16(x2, w.q, w.scale, bias, backend=backend,
+                          out_dtype=x.dtype)
+    return y.reshape(*lead, N)

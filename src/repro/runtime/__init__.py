@@ -1,0 +1,2 @@
+from .fault_tolerance import FaultTolerantLoop, StragglerMonitor  # noqa: F401
+from .elastic import elastic_restore, shard_assignment  # noqa: F401

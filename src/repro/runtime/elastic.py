@@ -1,0 +1,37 @@
+"""Elastic scaling: resume the same logical job on a different mesh.
+
+Checkpoints are mesh-independent (host arrays); the two things that must be
+recomputed on a world-size change are (a) leaf shardings for the new mesh and
+(b) the data-shard assignment. Both are pure functions here, so an elastic
+restart is:  mesh' = make_production_mesh(...) → elastic_restore(...) →
+continue at the restored step.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+from jax.sharding import Mesh
+
+from ..checkpoint import Checkpointer
+from ..sharding import named_shardings, params_pspecs
+
+
+def elastic_restore(
+    ckpt: Checkpointer,
+    target_tree: Any,
+    new_mesh: Mesh,
+    step: Optional[int] = None,
+):
+    """Restore a checkpoint onto a NEW mesh (different shape/size than the
+    one it was written from)."""
+    specs = params_pspecs(target_tree, new_mesh)
+    shardings = named_shardings(specs, new_mesh)
+    return ckpt.restore(target_tree, step=step, shardings=shardings)
+
+
+def shard_assignment(global_batch: int, world: int, host: int) -> tuple[int, int]:
+    """(shard_index, per_host_batch) under the current world size. Data
+    streams key on the GLOBAL shard index so a host joining/leaving changes
+    only the assignment, never the content of a shard."""
+    assert global_batch % world == 0, (global_batch, world)
+    return host, global_batch // world

@@ -1,0 +1,151 @@
+"""Fault tolerance: retry-with-restore, preemption, straggler mitigation.
+
+At 1000+ nodes, *something* fails every few minutes. The loop here assumes:
+
+  * the step function is pure (params, opt, batch) → (params, opt, metrics),
+    so any step can be replayed from the last checkpoint;
+  * the data pipeline is a pure function of (seed, step, shard)
+    (``repro.data.synthetic``) — replaying a step re-reads identical data;
+  * checkpoints are atomic and mesh-independent (``repro.checkpoint``), so a
+    restart may come up with a different world size (→ ``runtime.elastic``).
+
+Mechanisms:
+  * **retry-with-restore** — a failing step (device error, NaN loss if
+    ``abort_on_nan``) restores the latest checkpoint and replays; bounded
+    retries per step index to avoid crash loops,
+  * **preemption hook** — SIGTERM sets a flag; the loop checkpoints at the
+    next step boundary and exits cleanly (standard TPU preemption contract),
+  * **straggler monitor** — per-step wall-time EMA; steps slower than
+    ``threshold ×`` EMA are logged and counted, and a user hook can
+    re-dispatch work (on real fleets: mark the host suspect / trigger the
+    elastic path). Synchronous SPMD turns one slow host into a slow fleet —
+    detection is the actionable signal.
+"""
+from __future__ import annotations
+
+import dataclasses
+import signal
+import time
+from typing import Any, Callable, Optional
+
+import jax
+import numpy as np
+
+from ..checkpoint import Checkpointer
+
+
+class StragglerMonitor:
+    def __init__(self, threshold: float = 2.0, ema_decay: float = 0.9,
+                 warmup_steps: int = 3,
+                 on_straggler: Optional[Callable[[int, float, float], None]] = None):
+        self.threshold = threshold
+        self.ema_decay = ema_decay
+        self.warmup = warmup_steps
+        self.ema: Optional[float] = None
+        self.events: list[tuple[int, float, float]] = []
+        self._seen = 0
+        self.on_straggler = on_straggler
+
+    def observe(self, step: int, dt: float) -> bool:
+        self._seen += 1
+        if self._seen <= self.warmup:
+            return False
+        if self.ema is None:
+            self.ema = dt
+            return False
+        is_straggler = dt > self.threshold * self.ema
+        if is_straggler:
+            self.events.append((step, dt, self.ema))
+            if self.on_straggler:
+                self.on_straggler(step, dt, self.ema)
+        # slow steps don't poison the EMA
+        self.ema = self.ema_decay * self.ema + (1 - self.ema_decay) * min(
+            dt, self.threshold * self.ema
+        )
+        return is_straggler
+
+
+@dataclasses.dataclass
+class LoopMetrics:
+    steps_run: int = 0
+    retries: int = 0
+    restores: int = 0
+    preempted: bool = False
+    straggler_events: int = 0
+    last_loss: float = float("nan")
+
+
+class FaultTolerantLoop:
+    def __init__(
+        self,
+        step_fn: Callable[[Any, Any, Any], tuple],   # (state, batch) → (state, metrics)
+        data_fn: Callable[[int], Any],               # step → batch
+        checkpointer: Checkpointer,
+        *,
+        ckpt_every: int = 50,
+        max_retries_per_step: int = 2,
+        abort_on_nan: bool = True,
+        install_sigterm: bool = False,
+        straggler: Optional[StragglerMonitor] = None,
+    ):
+        self.step_fn = step_fn
+        self.data_fn = data_fn
+        self.ckpt = checkpointer
+        self.ckpt_every = ckpt_every
+        self.max_retries = max_retries_per_step
+        self.abort_on_nan = abort_on_nan
+        self.straggler = straggler or StragglerMonitor()
+        self.metrics = LoopMetrics()
+        self._preempt = False
+        if install_sigterm:
+            signal.signal(signal.SIGTERM, self._on_sigterm)
+
+    def _on_sigterm(self, *_):
+        self._preempt = True
+
+    def request_preemption(self):
+        """Testable preemption entry point (same path as SIGTERM)."""
+        self._preempt = True
+
+    def run(self, state: Any, start_step: int, num_steps: int,
+            inject_failure: Optional[Callable[[int], bool]] = None):
+        """Run [start_step, start_step + num_steps). ``inject_failure(step)``
+        is a test hook that raises inside the step when it returns True."""
+        step = start_step
+        end = start_step + num_steps
+        retries_here = 0
+        while step < end:
+            if self._preempt:
+                self.ckpt.save(step, state, blocking=True)
+                self.metrics.preempted = True
+                return state, step
+            t0 = time.monotonic()
+            try:
+                if inject_failure is not None and inject_failure(step):
+                    raise RuntimeError(f"injected failure at step {step}")
+                batch = self.data_fn(step)
+                state, m = self.step_fn(state, batch)
+                loss = float(m.get("loss", np.nan)) if isinstance(m, dict) else float(m)
+                if self.abort_on_nan and not np.isfinite(loss):
+                    raise FloatingPointError(f"non-finite loss at step {step}")
+                self.metrics.last_loss = loss
+            except Exception:
+                retries_here += 1
+                self.metrics.retries += 1
+                if retries_here > self.max_retries:
+                    raise
+                latest = self.ckpt.latest_step()
+                if latest is not None:
+                    state, restored_step = self.ckpt.restore(state)
+                    step = restored_step
+                    self.metrics.restores += 1
+                continue
+            if self.straggler.observe(step, time.monotonic() - t0):
+                self.metrics.straggler_events += 1
+            retries_here = 0
+            step += 1
+            self.metrics.steps_run += 1
+            if step % self.ckpt_every == 0:
+                self.ckpt.save(step, state)
+        self.ckpt.save(end, state, blocking=True)
+        return state, end

@@ -1,0 +1,6 @@
+from .partition import (  # noqa: F401
+    batch_pspec,
+    cache_pspecs,
+    named_shardings,
+    params_pspecs,
+)

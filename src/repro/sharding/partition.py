@@ -1,0 +1,246 @@
+"""Divisibility-aware partition planner.
+
+Assigns each parameter tensor a PartitionSpec over the production mesh
+(("pod",) "data", "model"):
+
+  * **TP** ("model") on the last (output-feature) dim — Megatron pattern:
+    column-parallel qkv/gate/up, row-parallel o/down emerge automatically
+    because each weight's *output* dim is sharded and GSPMD propagates,
+  * **FSDP/ZeRO** ("data") on the first suitable non-scan dim — parameters,
+    gradients and AdamW moments are all sharded over the data axis and
+    all-gathered just-in-time by GSPMD,
+  * anything non-divisible **replicates** (graceful degradation — e.g.
+    qwen2's 14 heads never block compilation),
+  * scan-stacked leading dims ([L] layers, and the [E] expert dim when not
+    divisible) are never sharded,
+  * the "pod" axis holds pure DP: params replicate across pods (keeps weight
+    collectives on intra-pod ICI), batch shards over pod × data.
+
+Embeddings / lm_head special-case: vocab on "model" (vocab-parallel logits +
+sharded softmax), d_model on "data".
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+MIN_SHARD_DIM = 128  # don't shard tiny dims — collective overhead dominates
+
+
+def _divisible(dim: int, size: int) -> bool:
+    return dim >= MIN_SHARD_DIM and dim % size == 0
+
+
+_ROW_PARALLEL = ("wo", "wd", "out_proj")   # consume a TP-sharded activation
+
+
+def _leaf_spec(path: str, shape, mesh: Mesh, n_stacked: int,
+               heads: Optional[dict] = None, mode: str = "train") -> P:
+    """Megatron-pattern placement:
+
+      * column-parallel (wq/wk/wv/wg/wu/router/in_proj): in=data (FSDP),
+        out=model — but attention projections only when the HEAD COUNT
+        divides the model axis (a flat-dim shard that splits heads makes
+        GSPMD factor the axis through the [B,T,H,hd] reshape and all-reduce
+        score tensors — measured 30 GB/layer on qwen2),
+      * row-parallel (wo/wd/out_proj): in=model, out=data — the activation
+        stays f-sharded through the pair and one all-reduce of [B,T,D]
+        partial sums closes the block,
+      * non-divisible dims replicate (graceful degradation).
+    """
+    axes: list = [None] * len(shape)
+    if len(shape) == 0:
+        return P()
+    model_n = mesh.shape.get("model", 1)
+    data_n = mesh.shape.get("data", 1)
+    if mode == "decode":
+        data_n = 10 ** 9  # nothing divides this → no FSDP factor on weights
+    heads = heads or {}
+
+    is_embed = path.endswith("embed") or path.endswith("lm_head") or path.endswith("dec_pos")
+    if is_embed and len(shape) == 2:
+        spec = [None, None]
+        if _divisible(shape[0], model_n):
+            spec[0] = "model"          # vocab-parallel
+        if _divisible(shape[1], data_n):
+            spec[1] = "data"
+        if path.endswith("lm_head"):   # [D, V]: vocab is the LAST dim
+            spec = [None, None]
+            if _divisible(shape[1], model_n):
+                spec[1] = "model"
+            if _divisible(shape[0], data_n):
+                spec[0] = "data"
+        return P(*spec)
+
+    free = list(range(n_stacked, len(shape)))
+    if len(free) < 2:
+        return P()  # 1-D (biases/norm scales): replicate — sharding is noise
+
+    name = path.rsplit("/", 1)[-1]
+    if name in ("q", "scale"):           # QTensor children: rules key off the
+        parts = path.rsplit("/", 3)      # parent weight's name (wq/wd/...)
+        if name == "scale":
+            return P()                    # scales are tiny — replicate
+        name = parts[-2]
+    in_dim, out_dim = free[-2], free[-1]
+    is_attn = "/attn/" in path or "/cross/" in path
+    n_q, n_kv = heads.get("n_q", 0), heads.get("n_kv", 0)
+
+    def head_ok(n):
+        return n > 0 and n % model_n == 0
+
+    if name in _ROW_PARALLEL:
+        tp_ok = _divisible(shape[in_dim], model_n)
+        if name == "wo":
+            tp_ok = tp_ok and head_ok(n_q)
+        if tp_ok:
+            axes[in_dim] = "model"
+        if _divisible(shape[out_dim], data_n):
+            axes[out_dim] = "data"
+        return P(*axes)
+
+    # column-parallel default
+    tp_ok = _divisible(shape[out_dim], model_n)
+    if is_attn and name == "wq":
+        tp_ok = tp_ok and head_ok(n_q)
+    elif is_attn and name in ("wk", "wv"):
+        tp_ok = tp_ok and head_ok(n_kv)
+    elif name == "in_proj":
+        tp_ok = False  # mamba: mixed z/x/B/C/dt segments — replicate out
+    if tp_ok:
+        axes[out_dim] = "model"
+    if _divisible(shape[in_dim], data_n):
+        axes[in_dim] = "data"
+    return P(*axes)
+
+
+def _n_stacked(path: str, cfg=None) -> int:
+    n = 0
+    if "blocks" in path:  # scan-stacked layers (and shared_blocks)
+        n += 1
+    if "experts" in path:
+        n += 1
+    return n
+
+
+def _walk(tree, prefix=""):
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            yield from _walk(v, f"{prefix}/{k}")
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            yield from _walk(v, f"{prefix}/{i}")
+    elif type(tree).__name__ == "QTensor":  # int8 serving weights: q + scale
+        yield from _walk(tree.q, f"{prefix}/q")
+        yield from _walk(tree.scale, f"{prefix}/scale")
+    else:
+        yield prefix, tree
+
+
+def params_pspecs(params_shapes: Any, mesh: Mesh, heads: Optional[dict] = None,
+                  mode: str = "train") -> Any:
+    """PartitionSpec pytree matching a params (or optimizer-state) pytree of
+    arrays / ShapeDtypeStructs. ``heads`` = {"n_q", "n_kv"} enables the
+    head-divisibility constraint on attention projections. ``mode="decode"``
+    drops the FSDP ("data") factor: serving weights stay device-resident."""
+
+    def spec_of(path, leaf):
+        return _leaf_spec(path, leaf.shape, mesh, _n_stacked(path), heads, mode)
+
+    paths = dict(_walk(params_shapes))
+    flat_specs = {p: spec_of(p, l) for p, l in paths.items()}
+
+    def rebuild(tree, prefix=""):
+        if isinstance(tree, dict):
+            return {k: rebuild(v, f"{prefix}/{k}") for k, v in tree.items()}
+        if isinstance(tree, (list, tuple)):
+            t = [rebuild(v, f"{prefix}/{i}") for i, v in enumerate(tree)]
+            return type(tree)(t) if not hasattr(tree, "_fields") else type(tree)(*t)
+        if type(tree).__name__ == "QTensor":
+            from ..quantized.qtensor import QTensor
+
+            return QTensor(rebuild(tree.q, f"{prefix}/q"),
+                           rebuild(tree.scale, f"{prefix}/scale"), tree.mode)
+        return flat_specs[prefix]
+
+    return rebuild(params_shapes)
+
+
+def batch_pspec(mesh: Mesh, ndim: int = 2, batch: Optional[int] = None) -> P:
+    """Batch dim over (pod, data); replicate when the global batch doesn't
+    divide the DP world (the long-context batch=1 decode cells)."""
+    dp = ("pod", "data") if "pod" in mesh.shape else ("data",)
+    dp_n = 1
+    for a in dp:
+        dp_n *= mesh.shape[a]
+    if batch is not None and batch % dp_n != 0:
+        return P(*([None] * ndim))
+    return P(dp, *([None] * (ndim - 1)))
+
+
+def cache_pspecs(cache_shapes: Any, mesh: Mesh, batch: int) -> Any:
+    """KV/SSM cache sharding: batch over (pod, data) when divisible, else
+    sequence over "data" (the long-context B=1 case); heads over "model"."""
+    dp_axes = ("pod", "data") if "pod" in mesh.shape else ("data",)
+    dp_n = int(np.prod([mesh.shape[a] for a in dp_axes]))
+    model_n = mesh.shape.get("model", 1)
+
+    def spec_of(path, leaf):
+        shape = leaf.shape
+        if len(shape) <= 1:
+            return P()
+        axes: list = [None] * len(shape)
+        # layouts: k/v [L, B, S, H, hd]; ssm [L, B, H, P, S]; conv [L, B, W, C]
+        if len(shape) >= 3:
+            B_dim = 1
+            if shape[B_dim] % dp_n == 0 and shape[B_dim] >= dp_n:
+                axes[B_dim] = dp_axes
+            elif (path.endswith("/k") or path.endswith("/v")
+                  or path.endswith("_scale")):
+                S_dim = 2
+                if shape[S_dim] % dp_n == 0:
+                    axes[S_dim] = dp_axes
+            if path.endswith("_scale") and len(shape) == 4:
+                # [L, B, S, H] int8-cache scales: follow the payload sharding
+                if shape[2] % model_n == 0 and shape[2] >= model_n:
+                    axes[2] = "model"
+            if (path.endswith("/k") or path.endswith("/v")) and len(shape) == 5:
+                # Prefer SEQUENCE sharding of the cache over "model": the
+                # pv contraction then psums a tiny [B,H,1,hd] partial per
+                # layer. Sharding heads/head_dim instead psums [B,H,1,S]
+                # score rows — measured 22.6 GB/device/step on yi-34b
+                # decode_32k (EXPERIMENTS §Perf iteration C2).
+                if axes[2] is None and shape[2] % model_n == 0 and shape[2] >= model_n:
+                    axes[2] = "model"
+                elif shape[3] % model_n == 0 and shape[3] >= model_n:
+                    axes[3] = "model"
+                elif shape[4] % model_n == 0 and shape[4] >= model_n:
+                    axes[4] = "model"
+            if path.endswith("/ssm") and len(shape) == 5:
+                if shape[2] % model_n == 0:
+                    axes[2] = "model"
+        return P(*axes)
+
+    paths = dict(_walk(cache_shapes))
+    flat = {p: spec_of(p, l) for p, l in paths.items()}
+
+    def rebuild(tree, prefix=""):
+        if isinstance(tree, dict):
+            return {k: rebuild(v, f"{prefix}/{k}") for k, v in tree.items()}
+        if isinstance(tree, (list, tuple)):
+            return type(tree)(rebuild(v, f"{prefix}/{i}") for i, v in enumerate(tree))
+        return flat[prefix]
+
+    return rebuild(cache_shapes)
+
+
+def named_shardings(spec_tree: Any, mesh: Mesh) -> Any:
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )

@@ -1,0 +1,158 @@
+"""Bias absorption (§4.1.3) + bias correction (§4.2) + BN folding (§5)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (
+    BNParams,
+    QuantSpec,
+    absorb_dense,
+    absorption_amount,
+    bias_correction_conv,
+    bias_correction_dense,
+    empirical_bias_correction_sequential,
+    expected_input_analytic,
+    fake_quant,
+    fold_bn_conv,
+    output_bias_error,
+    weight_quant_error,
+)
+
+
+def test_absorption_amount_rule():
+    beta = jnp.array([5.0, 0.5, -2.0])
+    gamma = jnp.array([1.0, 1.0, 1.0])
+    c = absorption_amount(beta, gamma, 3.0)
+    np.testing.assert_allclose(np.asarray(c), [2.0, 0.0, 0.0])
+
+
+def test_absorb_dense_preserves_function_when_preacts_high():
+    """r(Wx+b−c) = r(Wx+b) − c holds when Wx+b > c (paper §4.1.3)."""
+    key = jax.random.PRNGKey(0)
+    d, n, out = 8, 16, 4
+    w1 = jax.random.normal(key, (d, n)) * 0.1
+    b1 = jnp.abs(jax.random.normal(jax.random.PRNGKey(1), (n,))) + 5.0  # big biases
+    w2 = jax.random.normal(jax.random.PRNGKey(2), (n, out))
+    b2 = jnp.zeros(out)
+    x = jax.random.normal(jax.random.PRNGKey(3), (64, d))
+    c = jnp.minimum(b1 - 1.0, b1)  # guaranteed below pre-activations w.h.p.
+    y0 = jax.nn.relu(x @ w1 + b1) @ w2 + b2
+    res = absorb_dense(b1, w2, b2, c)
+    y1 = (jax.nn.relu(x @ w1 + res.b1) + 0.0) @ w2 + res.b2
+    # absorbed path: next layer consumes h - c; equality holds where preact>c
+    mask = jnp.all(x @ w1 + b1 > c, axis=-1)
+    np.testing.assert_allclose(
+        np.asarray(y1[mask]), np.asarray(y0[mask]), rtol=1e-4, atol=1e-4
+    )
+
+
+def test_absorption_reduces_activation_range():
+    b1 = jnp.array([10.0, 0.1])
+    gamma = jnp.ones(2)
+    c = absorption_amount(b1, gamma)
+    assert float(c[0]) > 0 and float(c[1]) == 0.0
+    b1_new = b1 - c
+    assert float(jnp.max(b1_new)) < float(jnp.max(b1))
+
+
+def test_weight_quant_error_is_quantization_residual():
+    w = jax.random.normal(jax.random.PRNGKey(0), (32, 32))
+    spec = QuantSpec(bits=8)
+    eps = weight_quant_error(w, spec)
+    np.testing.assert_allclose(
+        np.asarray(w + eps), np.asarray(fake_quant(w, spec)), rtol=1e-6, atol=1e-7
+    )
+
+
+def test_bias_correction_zeroes_output_mean_shift():
+    """Paper Fig. 3 / eq. 16-17: after BC, E[ỹ − y] ≈ 0 per channel."""
+    key = jax.random.PRNGKey(0)
+    d, out, N = 32, 16, 4096
+    w = jax.random.normal(key, (d, out)) * jnp.exp(
+        jax.random.normal(jax.random.PRNGKey(1), (out,)) * 1.5
+    )
+    b = jnp.zeros(out)
+    spec = QuantSpec(bits=4)  # coarse grid → strong bias
+    x = jnp.abs(jax.random.normal(jax.random.PRNGKey(2), (N, d))) + 0.5  # E[x] ≠ 0
+    e_x = jnp.mean(x, axis=0)
+    w_q = fake_quant(w, spec)
+    bias_before = output_bias_error(x @ w + b, x @ w_q + b)
+    b_corr = bias_correction_dense(w, b, e_x, spec)
+    bias_after = output_bias_error(x @ w + b, x @ w_q + b_corr)
+    assert float(jnp.max(jnp.abs(bias_after))) < 0.05 * float(
+        jnp.max(jnp.abs(bias_before))
+    )
+
+
+def test_bias_correction_conv_matches_direct():
+    key = jax.random.PRNGKey(5)
+    w = jax.random.normal(key, (3, 3, 8, 4))
+    spec = QuantSpec(bits=6)
+    e_x = jnp.abs(jax.random.normal(jax.random.PRNGKey(6), (8,)))
+    b = bias_correction_conv(w, None, e_x, spec)
+    eps = weight_quant_error(w, spec)
+    expected = -jnp.einsum("i,hwio->o", e_x, eps)
+    np.testing.assert_allclose(np.asarray(b), np.asarray(expected), rtol=1e-5, atol=1e-7)
+
+
+def test_expected_input_analytic_relu_matches_mc():
+    beta = jnp.array([0.3, -0.8, 1.5])
+    gamma = jnp.array([1.0, 0.4, 2.0])
+    x = beta + gamma * jax.random.normal(jax.random.PRNGKey(0), (200000, 3))
+    mc = jnp.mean(jax.nn.relu(x), axis=0)
+    an = expected_input_analytic(beta, gamma, "relu")
+    np.testing.assert_allclose(np.asarray(an), np.asarray(mc), rtol=2e-2, atol=5e-3)
+
+
+def test_expected_input_analytic_gelu_quadrature():
+    beta = jnp.array([0.0, 0.7, -1.2])
+    gamma = jnp.array([1.0, 0.5, 1.5])
+    x = beta + gamma * jax.random.normal(jax.random.PRNGKey(1), (400000, 3))
+    mc = jnp.mean(jax.nn.gelu(x), axis=0)
+    an = expected_input_analytic(beta, gamma, "gelu")
+    np.testing.assert_allclose(np.asarray(an), np.asarray(mc), rtol=2e-2, atol=5e-3)
+
+
+def test_bn_folding_preserves_inference_function():
+    key = jax.random.PRNGKey(7)
+    w = jax.random.normal(key, (3, 3, 4, 8))
+    b = jax.random.normal(jax.random.PRNGKey(8), (8,)) * 0.1
+    bn = BNParams(
+        gamma=jnp.exp(jax.random.normal(jax.random.PRNGKey(9), (8,)) * 0.5),
+        beta=jax.random.normal(jax.random.PRNGKey(10), (8,)),
+        mean=jax.random.normal(jax.random.PRNGKey(11), (8,)),
+        var=jnp.exp(jax.random.normal(jax.random.PRNGKey(12), (8,))),
+    )
+    x = jax.random.normal(jax.random.PRNGKey(13), (2, 8, 8, 4))
+    conv = lambda x, w: jax.lax.conv_general_dilated(
+        x, w, (1, 1), "SAME", dimension_numbers=("NHWC", "HWIO", "NHWC")
+    )
+    y_bn = (conv(x, w) + b - bn.mean) / jnp.sqrt(bn.var + bn.eps) * bn.gamma + bn.beta
+    folded = fold_bn_conv(w, b, bn)
+    y_fold = conv(x, folded.w) + folded.b
+    np.testing.assert_allclose(np.asarray(y_fold), np.asarray(y_bn), rtol=1e-4, atol=1e-4)
+
+
+def test_empirical_sequential_bc_drives_residual_to_zero():
+    """Appendix D: layer-by-layer correction leaves ~0 mean error per layer."""
+    key = jax.random.PRNGKey(20)
+    dims = [16, 32, 24, 8]
+    ks = jax.random.split(key, 8)
+    weights = [
+        jax.random.normal(ks[i], (dims[i], dims[i + 1]))
+        * jnp.exp(jax.random.normal(ks[i + 4], (dims[i + 1],)))
+        for i in range(3)
+    ]
+    biases = [jnp.zeros(dims[i + 1]) for i in range(3)]
+    x0 = jnp.abs(jax.random.normal(ks[7], (2048, dims[0])))
+    spec = QuantSpec(bits=4)
+
+    def layer_apply(i, x, w, b):
+        h = x if i == 0 else jax.nn.relu(x)
+        return h @ w + b
+
+    res = empirical_bias_correction_sequential(
+        layer_apply, weights, biases, x0, lambda w: fake_quant(w, spec)
+    )
+    for r in res.residual_bias:
+        assert float(jnp.max(jnp.abs(r))) < 1e-3

@@ -1,0 +1,276 @@
+"""CLE invariants (paper §4.1, appendix A): function preservation, range
+matching r_i^(1) = r_i^(2), eq. 10 argmax condition, chain convergence."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    ConvLayer,
+    QuantSpec,
+    equalization_scales,
+    equalize_conv_chain,
+    equalize_dense_pair,
+    equalize_qk,
+    equalize_vo,
+    fake_quant,
+    fold_norm,
+    sqnr_db,
+)
+
+
+def _bad_ranges(key, shape, axis=-1, decades=2.0):
+    k1, k2 = jax.random.split(key)
+    w = jax.random.normal(k1, shape)
+    n = shape[axis]
+    s = jnp.exp(jax.random.normal(k2, (n,)) * decades)
+    shape_b = [1] * len(shape)
+    shape_b[axis] = n
+    return w * s.reshape(shape_b)
+
+
+def test_dense_pair_preserves_relu_function():
+    key = jax.random.PRNGKey(0)
+    w1 = _bad_ranges(key, (24, 48))
+    b1 = jax.random.normal(jax.random.PRNGKey(1), (48,))
+    w2 = jax.random.normal(jax.random.PRNGKey(2), (48, 16))
+    x = jax.random.normal(jax.random.PRNGKey(3), (128, 24))
+    y0 = jax.nn.relu(x @ w1 + b1) @ w2
+    res = equalize_dense_pair(w1, b1, w2)
+    y1 = jax.nn.relu(x @ res.w1 + res.b1) @ res.w2
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y0), rtol=2e-4, atol=1e-4)
+
+
+def test_dense_pair_preserves_gated_mlp_exactly():
+    """up↔down CLE through a SwiGLU gate is exact for ANY scales (linear path)."""
+    key = jax.random.PRNGKey(10)
+    d, f = 16, 64
+    wg = jax.random.normal(key, (d, f))
+    wu = _bad_ranges(jax.random.PRNGKey(11), (d, f), decades=3.0)
+    wd = jax.random.normal(jax.random.PRNGKey(12), (f, d))
+    x = jax.random.normal(jax.random.PRNGKey(13), (32, d))
+    y0 = (jax.nn.silu(x @ wg) * (x @ wu)) @ wd
+    res = equalize_dense_pair(wu, None, wd)
+    y1 = (jax.nn.silu(x @ wg) * (x @ res.w1)) @ res.w2
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y0), rtol=2e-4, atol=1e-4)
+
+
+def test_ranges_match_after_equalization():
+    key = jax.random.PRNGKey(20)
+    w1 = _bad_ranges(key, (8, 32))
+    w2 = _bad_ranges(jax.random.PRNGKey(21), (32, 8), axis=0)
+    res = equalize_dense_pair(w1, None, w2)
+    r1 = jnp.max(jnp.abs(res.w1), axis=0)
+    r2 = jnp.max(jnp.abs(res.w2), axis=1)
+    np.testing.assert_allclose(np.asarray(r1), np.asarray(r2), rtol=1e-5)
+    # eq. 10: the limiting channel is shared
+    assert int(jnp.argmax(r1)) == int(jnp.argmax(r2))
+
+
+def test_equalization_improves_per_tensor_quantization():
+    key = jax.random.PRNGKey(30)
+    w1 = _bad_ranges(key, (64, 128), decades=2.5)
+    w2 = jax.random.normal(jax.random.PRNGKey(31), (128, 64))
+    spec = QuantSpec(bits=8)
+    res = equalize_dense_pair(w1, None, w2)
+    x = jax.random.normal(jax.random.PRNGKey(32), (256, 64))
+    y_fp = jax.nn.relu(x @ w1) @ w2
+    y_q_orig = jax.nn.relu(x @ fake_quant(w1, spec)) @ fake_quant(w2, spec)
+    y_q_eq = jax.nn.relu(x @ fake_quant(res.w1, spec)) @ fake_quant(res.w2, spec)
+    assert float(sqnr_db(y_fp, y_q_eq)) > float(sqnr_db(y_fp, y_q_orig)) + 5.0
+
+
+def test_scales_closed_form_eq11():
+    r1 = jnp.array([1.0, 4.0, 0.25])
+    r2 = jnp.array([1.0, 1.0, 4.0])
+    s = equalization_scales(r1, r2)
+    np.testing.assert_allclose(np.asarray(s), [1.0, 2.0, 0.25], rtol=1e-6)
+
+
+def test_dead_channel_scale_is_one():
+    s = equalization_scales(jnp.array([0.0, 1.0]), jnp.array([1.0, 1.0]))
+    np.testing.assert_allclose(np.asarray(s), [1.0, 1.0])
+
+
+def test_stacked_layers_broadcast():
+    """Leading scan dims [L, ...] equalize in one call, layerwise independent."""
+    L = 3
+    key = jax.random.PRNGKey(40)
+    w1 = _bad_ranges(key, (L, 8, 16), axis=-1)
+    w2 = jax.random.normal(jax.random.PRNGKey(41), (L, 16, 8))
+    res = equalize_dense_pair(w1, None, w2)
+    for l in range(L):
+        ref = equalize_dense_pair(w1[l], None, w2[l])
+        np.testing.assert_allclose(np.asarray(res.w1[l]), np.asarray(ref.w1), rtol=1e-6)
+
+
+class TestAttention:
+    B, T, D, NQ, NKV, HD = 2, 8, 32, 8, 2, 16
+
+    def _rope(self, v, T):
+        *lead, n = v.shape
+        hd = self.HD
+        v = v.reshape(*lead, n // hd, hd)
+        half = hd // 2
+        ang = jnp.arange(T)[:, None] * (1.0 / (10000 ** (jnp.arange(half) / half)))
+        cos, sin = jnp.cos(ang), jnp.sin(ang)
+        v1, v2 = v[..., :half], v[..., half:]
+        out = jnp.concatenate(
+            [v1 * cos[:, None, :] - v2 * sin[:, None, :],
+             v2 * cos[:, None, :] + v1 * sin[:, None, :]], -1)
+        return out.reshape(*lead, n)
+
+    def _attn(self, x, wq, wk, wv, bv, wo, bo):
+        B, T, NQ, NKV, HD = self.B, self.T, self.NQ, self.NKV, self.HD
+        q = self._rope(x @ wq, T).reshape(B, T, NQ, HD)
+        k = self._rope(x @ wk, T).reshape(B, T, NKV, HD)
+        v = (x @ wv + bv).reshape(B, T, NKV, HD)
+        g = NQ // NKV
+        k = jnp.repeat(k, g, axis=2)
+        v = jnp.repeat(v, g, axis=2)
+        w = jax.nn.softmax(jnp.einsum("bqhd,bkhd->bhqk", q, k) / jnp.sqrt(HD), -1)
+        o = jnp.einsum("bhqk,bkhd->bqhd", w, v).reshape(B, T, NQ * HD)
+        return o @ wo + bo
+
+    def _params(self, seed=0, spread=1.5):
+        ks = jax.random.split(jax.random.PRNGKey(seed), 8)
+        D, NQ, NKV, HD = self.D, self.NQ, self.NKV, self.HD
+        noise = jnp.exp(jax.random.normal(ks[7], (NKV * HD,)) * spread)
+        wq = jax.random.normal(ks[0], (D, NQ * HD))
+        wk = jax.random.normal(ks[1], (D, NKV * HD)) * noise
+        wv = jax.random.normal(ks[2], (D, NKV * HD)) * noise
+        wo = jax.random.normal(ks[3], (NQ * HD, D))
+        bv = jax.random.normal(ks[4], (NKV * HD,))
+        bo = jnp.zeros(D)
+        x = jax.random.normal(ks[5], (self.B, self.T, D))
+        return x, wq, wk, wv, bv, wo, bo
+
+    def test_vo_pair_exact(self):
+        x, wq, wk, wv, bv, wo, bo = self._params()
+        y0 = self._attn(x, wq, wk, wv, bv, wo, bo)
+        res = equalize_vo(wv, bv, wo, n_q=self.NQ, n_kv=self.NKV, head_dim=self.HD)
+        y1 = self._attn(x, wq, wk, res.w1, res.b1, res.w2, bo)
+        np.testing.assert_allclose(np.asarray(y1), np.asarray(y0), rtol=1e-3, atol=1e-4)
+
+    def test_vo_ranges_match(self):
+        x, wq, wk, wv, bv, wo, bo = self._params()
+        res = equalize_vo(wv, bv, wo, n_q=self.NQ, n_kv=self.NKV, head_dim=self.HD)
+        r1 = jnp.max(jnp.abs(res.w1), axis=0)
+        wo_g = res.w2.reshape(self.NKV, self.NQ // self.NKV, self.HD, self.D)
+        r2 = jnp.max(jnp.abs(wo_g), axis=(1, 3)).reshape(-1)
+        np.testing.assert_allclose(np.asarray(r1), np.asarray(r2), rtol=1e-5)
+
+    def test_qk_pair_exact_with_rope(self):
+        x, wq, wk, wv, bv, wo, bo = self._params(seed=3)
+        y0 = self._attn(x, wq, wk, wv, bv, wo, bo)
+        res = equalize_qk(wq, None, wk, None, n_q=self.NQ, n_kv=self.NKV,
+                          head_dim=self.HD, rope=True)
+        y1 = self._attn(x, res.wq, res.wk, wv, bv, wo, bo)
+        np.testing.assert_allclose(np.asarray(y1), np.asarray(y0), rtol=1e-3, atol=1e-4)
+
+    def test_qk_reduces_joint_range_product(self):
+        x, wq, wk, wv, bv, wo, bo = self._params(seed=4, spread=2.0)
+        res = equalize_qk(wq, None, wk, None, n_q=self.NQ, n_kv=self.NKV,
+                          head_dim=self.HD, rope=True)
+        def worst(w):
+            return float(jnp.max(jnp.abs(w)))
+        # total tensor range (the quantization grid) shrinks on the bad side
+        assert worst(res.wk) * worst(res.wq) <= worst(wk) * worst(wq) * 1.01
+
+
+def test_norm_fold_preserves_function():
+    key = jax.random.PRNGKey(50)
+    d, out = 16, 8
+    g = jnp.exp(jax.random.normal(key, (d,)))
+    w = jax.random.normal(jax.random.PRNGKey(51), (d, out))
+    b = jax.random.normal(jax.random.PRNGKey(52), (out,))
+    x = jax.random.normal(jax.random.PRNGKey(53), (32, d))
+
+    def rms(x):
+        return x * jax.lax.rsqrt(jnp.mean(x * x, -1, keepdims=True) + 1e-6)
+
+    y0 = (rms(x) * g) @ w + b
+    ones, _, (w2,), (b2,) = fold_norm(g, [w], None, [b])
+    y1 = (rms(x) * ones) @ w2 + b2
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y0), rtol=1e-5, atol=1e-6)
+
+
+def test_layernorm_fold_with_shift():
+    key = jax.random.PRNGKey(60)
+    d, out = 12, 6
+    g = jnp.exp(jax.random.normal(key, (d,)) * 0.3)
+    beta = jax.random.normal(jax.random.PRNGKey(61), (d,))
+    w = jax.random.normal(jax.random.PRNGKey(62), (d, out))
+    x = jax.random.normal(jax.random.PRNGKey(63), (32, d))
+
+    def ln(x):
+        mu = jnp.mean(x, -1, keepdims=True)
+        var = jnp.var(x, -1, keepdims=True)
+        return (x - mu) * jax.lax.rsqrt(var + 1e-6)
+
+    y0 = (ln(x) * g + beta) @ w
+    ones, zeros, (w2,), (b2,) = fold_norm(g, [w], beta, [None])
+    y1 = (ln(x) * ones + zeros) @ w2 + b2
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y0), rtol=1e-5, atol=1e-5)
+
+
+class TestConvChain:
+    def _apply(self, x, layers):
+        import jax.lax as lax
+
+        h = x
+        for i, layer in enumerate(layers):
+            if layer.kind == "dense":
+                h = h.reshape(h.shape[0], -1) @ layer.w
+            else:
+                groups = layer.w.shape[-1] if layer.kind == "depthwise" else 1
+                h = lax.conv_general_dilated(
+                    h, layer.w, (1, 1), "SAME",
+                    dimension_numbers=("NHWC", "HWIO", "NHWC"),
+                    feature_group_count=groups)
+            if layer.b is not None:
+                h = h + layer.b
+            if i < len(layers) - 1:
+                h = jax.nn.relu(h)
+        return h
+
+    def _chain(self, seed=0):
+        ks = jax.random.split(jax.random.PRNGKey(seed), 8)
+        c0, c1, c2 = 8, 16, 8
+        spread = jnp.exp(jax.random.normal(ks[6], (c1,)) * 2.0)
+        expand = ConvLayer(jax.random.normal(ks[0], (1, 1, c0, c1)) * spread,
+                           jax.random.normal(ks[1], (c1,)) * 0.1, "conv")
+        dw = ConvLayer(jax.random.normal(ks[2], (3, 3, 1, c1)),
+                       jax.random.normal(ks[3], (c1,)) * 0.1, "depthwise")
+        proj = ConvLayer(jax.random.normal(ks[4], (1, 1, c1, c2)), None, "conv")
+        x = jax.random.normal(ks[5], (2, 8, 8, c0))
+        return x, [expand, dw, proj]
+
+    def test_chain_preserves_function(self):
+        x, layers = self._chain()
+        y0 = self._apply(x, layers)
+        new_layers, _ = equalize_conv_chain(layers)
+        y1 = self._apply(x, new_layers)
+        np.testing.assert_allclose(np.asarray(y1), np.asarray(y0), rtol=5e-4, atol=5e-4)
+
+    def test_chain_converges_ranges(self):
+        x, layers = self._chain(seed=1)
+        new_layers, _ = equalize_conv_chain(layers, iterations=50)
+        from repro.core.cle import _in_ranges, _out_ranges
+        for i in range(len(new_layers) - 1):
+            r1 = _out_ranges(new_layers[i])
+            r2 = _in_ranges(new_layers[i + 1])
+            np.testing.assert_allclose(np.asarray(r1), np.asarray(r2), rtol=1e-2)
+
+    def test_chain_improves_quantized_sqnr(self):
+        x, layers = self._chain(seed=2)
+        spec = QuantSpec(bits=8)
+        y_fp = self._apply(x, layers)
+
+        def q(ls):
+            return [l._replace(w=fake_quant(l.w, spec)) for l in ls]
+
+        new_layers, _ = equalize_conv_chain(layers)
+        snr_before = float(sqnr_db(y_fp, self._apply(x, q(layers))))
+        snr_after = float(sqnr_db(y_fp, self._apply(x, q(new_layers))))
+        assert snr_after > snr_before + 6.0

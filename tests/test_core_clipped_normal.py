@@ -1,0 +1,57 @@
+"""Appendix C closed forms vs Monte Carlo, including property-based sweeps."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import clipped_normal_mean, clipped_normal_var, relu_normal_mean
+
+
+def _mc(mu, sigma, a, b, n=400000, seed=0):
+    x = mu + sigma * jax.random.normal(jax.random.PRNGKey(seed), (n,))
+    y = jnp.clip(x, a, b if b is not None else jnp.inf)
+    return float(jnp.mean(y)), float(jnp.var(y))
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    mu=st.floats(-3, 3),
+    sigma=st.floats(0.1, 3),
+    a=st.floats(-2, 0.5),
+    width=st.floats(0.5, 6),
+)
+def test_clipped_moments_match_mc(mu, sigma, a, width):
+    b = a + width
+    m_cf = float(clipped_normal_mean(jnp.float32(mu), jnp.float32(sigma), a, b))
+    v_cf = float(clipped_normal_var(jnp.float32(mu), jnp.float32(sigma), a, b))
+    m_mc, v_mc = _mc(mu, sigma, a, b)
+    assert abs(m_cf - m_mc) < 0.02 * max(1.0, abs(m_mc))
+    assert abs(v_cf - v_mc) < 0.05 * max(0.05, v_mc)
+
+
+@settings(max_examples=25, deadline=None)
+@given(mu=st.floats(-3, 3), sigma=st.floats(0.1, 3))
+def test_relu_case_matches_open_interval(mu, sigma):
+    """b = ∞ limit equals eq. 19."""
+    lhs = float(relu_normal_mean(jnp.float32(mu), jnp.float32(sigma)))
+    rhs = float(clipped_normal_mean(jnp.float32(mu), jnp.float32(sigma), 0.0, None))
+    assert abs(lhs - rhs) < 1e-5
+
+
+def test_degenerate_limits():
+    # far-left clip: mean → a
+    m = float(clipped_normal_mean(jnp.float32(-100.0), jnp.float32(1.0), 0.0, 6.0))
+    assert abs(m - 0.0) < 1e-4
+    # far-right: mean → b
+    m = float(clipped_normal_mean(jnp.float32(100.0), jnp.float32(1.0), 0.0, 6.0))
+    assert abs(m - 6.0) < 1e-4
+    # wide interval: mean → μ, var → σ²
+    m = float(clipped_normal_mean(jnp.float32(0.3), jnp.float32(1.0), -50.0, 50.0))
+    v = float(clipped_normal_var(jnp.float32(0.3), jnp.float32(1.0), -50.0, 50.0))
+    assert abs(m - 0.3) < 1e-4 and abs(v - 1.0) < 1e-3
+
+
+def test_variance_nonnegative_extremes():
+    v = clipped_normal_var(jnp.float32(50.0), jnp.float32(0.1), 0.0, 6.0)
+    assert float(v) >= 0.0

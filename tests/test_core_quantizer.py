@@ -1,0 +1,77 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    QuantSpec,
+    channel_precision,
+    channel_ranges,
+    compute_qparams,
+    dequantize,
+    fake_quant,
+    qparams_from_range,
+    quantize,
+    sqnr_db,
+)
+
+
+@pytest.mark.parametrize("bits", [4, 6, 8])
+@pytest.mark.parametrize("symmetric", [True, False])
+def test_roundtrip_error_bounded(bits, symmetric):
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (64, 32)) * 3.0
+    spec = QuantSpec(bits=bits, symmetric=symmetric)
+    qp = compute_qparams(x, spec)
+    err = jnp.abs(dequantize(quantize(x, qp), qp) - x)
+    # every in-range value must be within half a quantization step
+    assert float(jnp.max(err)) <= float(jnp.max(qp.scale)) * 0.5 + 1e-6
+
+
+def test_asymmetric_grid_contains_zero():
+    x = jnp.linspace(2.0, 5.0, 100)  # all-positive tensor
+    spec = QuantSpec(bits=8, symmetric=False)
+    qp = compute_qparams(x, spec)
+    zero_hat = dequantize(quantize(jnp.zeros(()), qp), qp)
+    assert abs(float(zero_hat)) < 1e-6
+
+
+def test_per_channel_beats_per_tensor_on_spread_ranges():
+    key = jax.random.PRNGKey(1)
+    w = jax.random.normal(key, (64, 16)) * jnp.exp(
+        jax.random.normal(jax.random.PRNGKey(2), (16,)) * 2.0
+    )
+    pt = fake_quant(w, QuantSpec(bits=8))
+    pc = fake_quant(w, QuantSpec(bits=8, per_channel_axis=-1))
+    assert float(sqnr_db(w, pc)) > float(sqnr_db(w, pt)) + 5.0
+
+
+def test_int8_symmetric_dtype_and_range():
+    x = jax.random.normal(jax.random.PRNGKey(0), (128,))
+    spec = QuantSpec(bits=8, symmetric=True)
+    q = quantize(x, compute_qparams(x, spec))
+    assert q.dtype == jnp.int8
+    assert int(jnp.min(q)) >= -128 and int(jnp.max(q)) <= 127
+
+
+def test_qparams_from_range_matches_minmax():
+    x = jax.random.normal(jax.random.PRNGKey(3), (1000,))
+    spec = QuantSpec(bits=8, symmetric=False)
+    a = compute_qparams(x, spec)
+    b = qparams_from_range(jnp.min(x), jnp.max(x), spec)
+    np.testing.assert_allclose(np.asarray(a.scale), np.asarray(b.scale), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(a.zero_point), np.asarray(b.zero_point))
+
+
+def test_channel_ranges_and_precision():
+    w = jnp.array([[1.0, -4.0], [2.0, 0.5]])
+    r = channel_ranges(w, -1)
+    np.testing.assert_allclose(np.asarray(r), [2.0, 4.0])
+    p = channel_precision(w, -1)
+    np.testing.assert_allclose(np.asarray(p), [0.5, 1.0])
+
+
+def test_bitwidth_monotonic_sqnr():
+    x = jax.random.normal(jax.random.PRNGKey(4), (256, 64))
+    snrs = [float(sqnr_db(x, fake_quant(x, QuantSpec(bits=b)))) for b in (4, 6, 8, 12)]
+    assert snrs == sorted(snrs)

@@ -1,0 +1,108 @@
+"""End-to-end DFQ integration + hypothesis property tests of the plan
+executor on real model params."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.configs import get_config
+from repro.core import DFQConfig, apply_dfq, dfq_quantize, quantize_weights, sqnr_db
+from repro.core.adversarial import hostile_rescale
+from repro.data import calibration_tokens
+from repro.models import build_model
+
+
+def _logits(model, cfg, params, seed=0):
+    toks = calibration_tokens(seed, 2, 16, cfg.vocab_size)
+    if cfg.is_encdec:
+        frames = jax.random.normal(jax.random.PRNGKey(seed), (2, cfg.enc_seq, cfg.d_model))
+        out, _ = model.apply(params, toks, frames)
+    else:
+        out, _ = model.apply(params, toks)
+    return out
+
+
+@pytest.mark.parametrize("arch", ["qwen2-0.5b", "gemma-7b", "mixtral-8x22b",
+                                  "chameleon-34b", "zamba2-2.7b", "mamba2-2.7b"])
+def test_apply_dfq_preserves_fp_function(arch):
+    """CLE + norm-fold + absorption must not change the FP32 function
+    (paper §4.1; exact pairs only — defaults skip approximate ones)."""
+    cfg = get_config(arch, smoke=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    plan = model.dfq_plan()
+    y0 = _logits(model, cfg, params)
+    eq = apply_dfq(params, plan, DFQConfig())
+    y1 = _logits(model, cfg, eq)
+    scale = float(jnp.max(jnp.abs(y0))) + 1e-6
+    assert float(jnp.max(jnp.abs(y1 - y0))) / scale < 5e-3
+
+
+@pytest.mark.parametrize("arch", ["qwen2-0.5b", "mixtral-8x22b"])
+def test_dfq_recovers_hostile_model(arch):
+    """The paper's central claim at LM scale: per-tensor INT8 collapses on a
+    hostile-ranged model; DFQ recovers near-FP logits."""
+    cfg = get_config(arch, smoke=True)
+    model = build_model(cfg)
+    params = hostile_rescale(model.init(jax.random.PRNGKey(0)),
+                             model.dfq_plan(), decades=1.2)
+    plan = model.dfq_plan()
+    y_fp = _logits(model, cfg, params)
+
+    naive = quantize_weights(params, plan, DFQConfig(cle=False, bias_absorb=False))
+    y_naive = _logits(model, cfg, naive)
+
+    q = dfq_quantize(params, plan, DFQConfig(),
+                     input_means_fn=lambda p: model.calibration_stats(
+                         p, calibration_tokens(1, 2, 32, cfg.vocab_size)))
+    y_dfq = _logits(model, cfg, q)
+
+    snr_naive = float(sqnr_db(y_fp, y_naive))
+    snr_dfq = float(sqnr_db(y_fp, y_dfq))
+    assert snr_dfq > snr_naive + 10.0, (snr_naive, snr_dfq)
+    agree = float(jnp.mean(jnp.argmax(y_fp, -1) == jnp.argmax(y_dfq, -1)))
+    assert agree > 0.9
+
+
+@settings(max_examples=5, deadline=None)
+@given(decades=st.floats(0.3, 1.5), seed=st.integers(0, 100))
+def test_hostile_rescale_is_function_preserving(decades, seed):
+    cfg = get_config("qwen2-0.5b", smoke=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(1))
+    plan = model.dfq_plan()
+    y0 = _logits(model, cfg, params)
+    bad = hostile_rescale(params, plan, seed=seed, decades=decades)
+    y1 = _logits(model, cfg, bad)
+    scale = float(jnp.max(jnp.abs(y0))) + 1e-6
+    assert float(jnp.max(jnp.abs(y1 - y0))) / scale < 5e-3
+
+
+def test_dfq_idempotent_on_equalized_model():
+    """Equalizing an already-equalized model is a no-op (fixed point of
+    eq. 11: r1 == r2 → s == 1)."""
+    cfg = get_config("qwen2-0.5b", smoke=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    plan = model.dfq_plan()
+    once = apply_dfq(params, plan, DFQConfig())
+    twice = apply_dfq(once, plan, DFQConfig())
+    for a, b in zip(jax.tree.leaves(once), jax.tree.leaves(twice)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4,
+                                   atol=1e-5)
+
+
+def test_quantized_weight_sites_quantize_to_256_levels():
+    cfg = get_config("gemma-7b", smoke=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    plan = model.dfq_plan()
+    q = quantize_weights(params, plan, DFQConfig())
+    from repro.core.tree import get_path
+
+    for site in plan.sites:
+        w = np.asarray(get_path(q, site.w))
+        n_unique = len(np.unique(w.reshape(-1)[:200000]))
+        assert n_unique <= 256, f"{site.name}: {n_unique} levels"

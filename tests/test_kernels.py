@@ -1,0 +1,132 @@
+"""Kernel validation: shape/dtype sweeps against the pure-jnp oracles in
+interpret mode (CPU executes the kernel body; TPU is the compile target)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.qmatmul_w8a8.ops import qmatmul_w8a8
+from repro.kernels.qmatmul_w8a8.ref import qmatmul_w8a8_ref
+from repro.kernels.qmatmul_w8a16.ops import qmatmul_w8a16
+from repro.kernels.qmatmul_w8a16.ref import qmatmul_w8a16_ref
+from repro.kernels.quantize_act.ops import quantize_act
+from repro.kernels.quantize_act.ref import quantize_act_ref
+
+
+def _rand_int8(key, shape):
+    return jax.random.randint(key, shape, -127, 128, dtype=jnp.int8)
+
+
+W8A8_SHAPES = [
+    (8, 64, 32),       # tiny, exercises padding (below block sizes)
+    (128, 512, 128),   # exactly one block
+    (256, 1024, 384),  # multi-block M/K/N
+    (100, 300, 200),   # ragged everything
+]
+
+
+@pytest.mark.parametrize("M,K,N", W8A8_SHAPES)
+def test_w8a8_matches_ref(M, K, N):
+    ks = jax.random.split(jax.random.PRNGKey(M + K + N), 5)
+    a_q = _rand_int8(ks[0], (M, K))
+    w_q = _rand_int8(ks[1], (K, N))
+    a_s = jax.random.uniform(ks[2], (M,), minval=0.01, maxval=0.1)
+    w_s = jax.random.uniform(ks[3], (N,), minval=0.01, maxval=0.1)
+    bias = jax.random.normal(ks[4], (N,))
+    ref = qmatmul_w8a8_ref(a_q, w_q, a_s, w_s, bias)
+    out = qmatmul_w8a8(a_q, w_q, a_s, w_s, bias, backend="interpret",
+                       bm=128, bn=128, bk=128)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-5, atol=1e-5)
+
+
+def test_w8a8_scalar_scales_and_no_bias():
+    ks = jax.random.split(jax.random.PRNGKey(0), 2)
+    a_q = _rand_int8(ks[0], (64, 256))
+    w_q = _rand_int8(ks[1], (256, 128))
+    ref = qmatmul_w8a8_ref(a_q, w_q, jnp.float32(0.02), jnp.float32(0.03))
+    out = qmatmul_w8a8(a_q, w_q, 0.02, 0.03, backend="interpret", bk=128)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-5, atol=1e-5)
+
+
+def test_w8a8_int32_accumulation_exact():
+    """Saturating inputs: accumulation must be exact int32, not fp."""
+    a_q = jnp.full((128, 512), 127, jnp.int8)
+    w_q = jnp.full((512, 128), 127, jnp.int8)
+    out = qmatmul_w8a8(a_q, w_q, 1.0, 1.0, backend="interpret", bk=128)
+    assert float(out[0, 0]) == 127 * 127 * 512
+
+
+def test_w8a8_asymmetric_zero_point():
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    M, K, N = 32, 128, 64
+    a = jax.random.uniform(ks[0], (M, K), minval=0.0, maxval=4.0)  # all-positive
+    w_q = _rand_int8(ks[1], (K, N))
+    # asymmetric per-row quantization of a
+    qmax = 255.0
+    amin = jnp.zeros((M,))
+    amax = jnp.max(a, axis=1)
+    scale = amax / qmax
+    zp = jnp.zeros((M,))
+    a_q = jnp.clip(jnp.round(a / scale[:, None]), 0, 255) - 128  # shift to int8
+    zp_eff = -128.0 * jnp.ones((M,))
+    out = qmatmul_w8a8(a_q.astype(jnp.int8), w_q, scale, 0.05,
+                       a_zero_point=zp_eff, backend="interpret", bk=128)
+    direct = ((a_q - zp_eff[:, None]) * scale[:, None]) @ (
+        w_q.astype(jnp.float32) * 0.05
+    )
+    np.testing.assert_allclose(np.asarray(out), np.asarray(direct), rtol=1e-4, atol=1e-4)
+
+
+W8A16_SHAPES = [(1, 512, 256), (8, 1024, 512), (17, 300, 130), (128, 2048, 1024)]
+
+
+@pytest.mark.parametrize("M,K,N", W8A16_SHAPES)
+@pytest.mark.parametrize("adtype", [jnp.bfloat16, jnp.float32])
+def test_w8a16_matches_ref(M, K, N, adtype):
+    ks = jax.random.split(jax.random.PRNGKey(M * N), 3)
+    a = jax.random.normal(ks[0], (M, K)).astype(adtype)
+    w_q = _rand_int8(ks[1], (K, N))
+    w_s = jax.random.uniform(ks[2], (N,), minval=0.001, maxval=0.05)
+    ref = qmatmul_w8a16_ref(a, w_q, w_s, out_dtype=jnp.float32)
+    out = qmatmul_w8a16(a, w_q, w_s, backend="interpret", out_dtype=jnp.float32)
+    # blocked K accumulation reorders fp sums → rtol plus a small atol floor
+    rtol, atol = (2e-2, 2.0) if adtype == jnp.bfloat16 else (1e-3, 1e-2)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=rtol, atol=atol)
+
+
+@pytest.mark.parametrize("M,K", [(1, 128), (100, 896), (128, 4096), (7, 333)])
+@pytest.mark.parametrize("bits", [8, 6])
+def test_quantize_act_matches_ref(M, K, bits):
+    x = jax.random.normal(jax.random.PRNGKey(M), (M, K)) * 3.0
+    q_ref, s_ref = quantize_act_ref(x, bits)
+    q, s = quantize_act(x, bits=bits, backend="interpret")
+    np.testing.assert_allclose(np.asarray(s), np.asarray(s_ref), rtol=1e-6)
+    np.testing.assert_array_equal(np.asarray(q), np.asarray(q_ref))
+
+
+def test_quantize_then_matmul_roundtrip_close_to_fp():
+    """End-to-end dynamic W8A8 ≈ fp32 matmul within int8 noise."""
+    ks = jax.random.split(jax.random.PRNGKey(2), 2)
+    x = jax.random.normal(ks[0], (64, 512))
+    w = jax.random.normal(ks[1], (512, 256)) * 0.05
+    from repro.core import QuantSpec, compute_qparams, quantize
+
+    wq_params = compute_qparams(w, QuantSpec(bits=8, symmetric=True))
+    w_q = quantize(w, wq_params)
+    a_q, a_s = quantize_act(x, backend="interpret")
+    y = qmatmul_w8a8(a_q, w_q, a_s, wq_params.scale, backend="interpret", bk=128)
+    y_fp = x @ w
+    rel = float(jnp.linalg.norm(y - y_fp) / jnp.linalg.norm(y_fp))
+    assert rel < 0.02
+
+
+def test_kernel_grid_block_sweep():
+    """Sweep block shapes — any legal tiling must give identical results."""
+    ks = jax.random.split(jax.random.PRNGKey(3), 2)
+    a_q = _rand_int8(ks[0], (256, 512))
+    w_q = _rand_int8(ks[1], (512, 256))
+    ref = qmatmul_w8a8_ref(a_q, w_q, 0.01, 0.02)
+    for bm, bn, bk in [(64, 64, 128), (128, 256, 256), (256, 128, 512)]:
+        out = qmatmul_w8a8(a_q, w_q, 0.01, 0.02, backend="interpret",
+                           bm=bm, bn=bn, bk=bk)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-5)
