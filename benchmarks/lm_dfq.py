@@ -11,9 +11,9 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+import repro
 from repro.configs import get_config
-from repro.core import DFQConfig, apply_dfq, bias_correct, quantize_weights, sqnr_db
-from repro.core.tree import get_path, set_path
+from repro.core import DFQConfig, sqnr_db
 from repro.data import calibration_tokens
 from repro.models import build_model
 
@@ -44,41 +44,30 @@ def run_arch(arch: str):
     cfg = get_config(arch, smoke=True)
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
-    plan = model.dfq_plan()
-    params = _hostile(params, plan, decades=1.2)
+    params = _hostile(params, model.dfq_plan(), decades=1.2)
 
-    def calib_means(p):
-        toks = calibration_tokens(1, 4, 32, cfg.vocab_size)
-        if cfg.is_encdec:
-            frames = jax.random.normal(jax.random.PRNGKey(1), (4, cfg.enc_seq, cfg.d_model))
-            return model.calibration_stats(p, toks, frames)
-        return model.calibration_stats(p, toks)
+    def q(recipe, **kw):
+        return repro.quantize(model, params=params, recipe=recipe,
+                              calib_batch=4, **kw).params
 
     rows = []
-    base = DFQConfig(cle=False, bias_absorb=False, bias_correct="none")
-    q0 = quantize_weights(params, plan, base)
+    q0 = q("naive-int8", calibration=None)
     snr, agree = _greedy_agreement(model, params, q0, cfg)
     rows.append((f"{arch}.per_tensor_int8_sqnr_db", snr))
     rows.append((f"{arch}.per_tensor_int8_top1_agree", agree))
 
-    eq = apply_dfq(params, plan, DFQConfig())
-    q1 = quantize_weights(eq, plan, base)
+    q1 = q(["fold_norm", "cle", "bias_absorb", "weight_quant"], calibration=None)
     snr, agree = _greedy_agreement(model, params, q1, cfg)
     rows.append((f"{arch}.dfq_cle_int8_sqnr_db", snr))
     rows.append((f"{arch}.dfq_cle_int8_top1_agree", agree))
 
-    means = calib_means(eq)
-    q2 = bias_correct(q1, plan, DFQConfig(), means) if means else q1
-    # bias_correct computes ε from the CURRENT (already fake-quantized) w —
-    # use the equalized fp weights instead for the ε of record:
-    q2 = bias_correct(eq, plan, DFQConfig(), means)
-    q2 = quantize_weights(q2, plan, base)
+    q2 = q("dfq-int8")
     snr, agree = _greedy_agreement(model, params, q2, cfg)
     rows.append((f"{arch}.dfq_cle_bc_int8_sqnr_db", snr))
     rows.append((f"{arch}.dfq_cle_bc_int8_top1_agree", agree))
 
-    pc = DFQConfig(cle=False, bias_absorb=False, bias_correct="none", per_channel=True)
-    q3 = quantize_weights(params, plan, pc)
+    q3 = q("naive-int8", calibration=None,
+           config=DFQConfig(per_channel=True))
     snr, agree = _greedy_agreement(model, params, q3, cfg)
     rows.append((f"{arch}.per_channel_int8_sqnr_db", snr))
     rows.append((f"{arch}.per_channel_int8_top1_agree", agree))

@@ -1,12 +1,20 @@
 """Quickstart: the paper's promise — near-FP32 INT8 with one API call.
 
     PYTHONPATH=src python examples/quickstart.py
+
+``repro.quantize(arch_or_model, recipe=...)`` is the whole public surface:
+a recipe names the stage sequence (see ``repro.pipeline.list_recipes()``),
+and the returned ``QuantizedModel`` carries the quantized params, per-stage
+diagnostics (``.report``), and the serving entry points
+(``.apply``/``.prefill``/``.decode_step``/``.save``).
 """
 import jax
 import jax.numpy as jnp
 
+import repro
 from repro.configs import get_config
-from repro.core import DFQConfig, dfq_quantize, sqnr_db
+from repro.core import sqnr_db
+from repro.core.adversarial import hostile_rescale
 from repro.data import calibration_tokens
 from repro.models import build_model
 
@@ -15,34 +23,28 @@ def main():
     cfg = get_config("qwen2-0.5b", smoke=True)
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
-    plan = model.dfq_plan()
 
     # make the model hostile to per-tensor INT8 (function-preserving rescale)
-    from repro.core.adversarial import hostile_rescale
-
-    params = hostile_rescale(params, plan, decades=1.2)
+    params = hostile_rescale(params, model.dfq_plan(), decades=1.2)
     tokens = calibration_tokens(0, 2, 32, cfg.vocab_size)
     logits_fp, _ = model.apply(params, tokens)
 
     # --- naive per-tensor INT8 --------------------------------------------
-    from repro.core import quantize_weights
+    naive = repro.quantize(model, params=params, recipe="naive-int8")
+    logits_naive, _ = naive.apply(tokens)
 
-    naive = quantize_weights(params, plan, DFQConfig(cle=False, bias_absorb=False))
-    logits_naive, _ = model.apply(naive, tokens)
-
-    # --- DFQ: one call (CLE → bias absorption → quant → bias correction) ---
-    q = dfq_quantize(
-        params, plan, DFQConfig(),
-        input_means_fn=lambda p: model.calibration_stats(
-            p, calibration_tokens(1, 2, 32, cfg.vocab_size)),
-    )
-    logits_dfq, _ = model.apply(q, tokens)
+    # --- DFQ: one call (fold → CLE → absorb → bias-correct → quant) --------
+    dfq = repro.quantize(model, params=params, recipe="dfq-int8")
+    logits_dfq, _ = dfq.apply(tokens)
 
     print(f"naive INT8 logits SQNR: {float(sqnr_db(logits_fp, logits_naive)):6.2f} dB")
     print(f"DFQ   INT8 logits SQNR: {float(sqnr_db(logits_fp, logits_dfq)):6.2f} dB")
     agree_naive = float(jnp.mean(jnp.argmax(logits_fp, -1) == jnp.argmax(logits_naive, -1)))
     agree_dfq = float(jnp.mean(jnp.argmax(logits_fp, -1) == jnp.argmax(logits_dfq, -1)))
     print(f"greedy-token agreement: naive {agree_naive:.2%} → DFQ {agree_dfq:.2%}")
+    wq = dfq.stage_record("weight_quant")["metrics"]
+    print(f"per-site weight SQNR: min {wq['sqnr_min_db']:.1f} dB, "
+          f"mean {wq['sqnr_mean_db']:.1f} dB across {wq['sites']} sites")
 
 
 if __name__ == "__main__":

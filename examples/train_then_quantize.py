@@ -14,12 +14,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import DFQConfig, apply_dfq, sqnr_db
+import repro
+from repro.core import sqnr_db
 from repro.data import TokenStream, calibration_tokens
 from repro.models import build_model
 from repro.models.config import ModelConfig
 from repro.optim import adamw_init, adamw_update, cosine_schedule
-from repro.quantized import quantize_for_serving, serving_summary
 
 
 def make_cfg(full_100m: bool) -> ModelConfig:
@@ -66,17 +66,15 @@ def main():
             print(f"step {s+1}: loss {np.mean(losses[-25:]):.4f}")
     print(f"trained: loss {np.mean(losses[:10]):.3f} → {np.mean(losses[-10:]):.3f}")
 
-    # ---- DFQ + INT8 serving ------------------------------------------------
-    plan = model.dfq_plan()
-    eq = apply_dfq(params, plan, DFQConfig())
-    qparams = quantize_for_serving(eq, plan, mode="w8a16")
-    s = serving_summary(qparams)
+    # ---- DFQ + INT8 serving: one pipeline call -----------------------------
+    qm = repro.quantize(model, params=params, recipe="serve-w8a16")
+    s = qm.serving_summary()
     print(f"INT8 params: {s['int8_bytes']/1e6:.1f} MB "
           f"({s['compression']:.2f}x smaller than fp32)")
 
     toks = calibration_tokens(5, 4, 64, cfg.vocab_size)
     logits_fp, _ = model.apply(params, toks)
-    logits_q, _ = model.apply(qparams, toks)
+    logits_q, _ = qm.apply(toks)
     print(f"quantized-serving logits SQNR: {float(sqnr_db(logits_fp, logits_q)):.2f} dB")
     agree = float(jnp.mean(jnp.argmax(logits_fp, -1) == jnp.argmax(logits_q, -1)))
     print(f"greedy-token agreement: {agree:.2%}")

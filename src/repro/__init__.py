@@ -1,6 +1,26 @@
 """repro: production-grade JAX framework reproducing
 "Data-Free Quantization Through Weight Equalization and Bias Correction"
 (Nagel et al., ICCV 2019) and extending it to modern LM architectures on TPU.
+
+The public quantization surface is the pipeline API:
+
+    import repro
+    qm = repro.quantize("qwen2-0.5b-smoke", recipe="dfq-int8")
 """
 
-__version__ = "1.0.0"
+__version__ = "1.1.0"
+
+
+def __getattr__(name):
+    # Lazy: `import repro` stays cheap; the pipeline (and jax) load on first
+    # use of the public API.
+    _exports = {
+        "quantize", "QuantizedModel", "Recipe", "RecipeStep", "register_stage",
+        "list_stages", "list_recipes", "resolve_recipe", "PipelineError",
+        "RecipeError", "default_calibration",
+    }
+    if name in _exports:
+        from . import pipeline
+
+        return getattr(pipeline, name)
+    raise AttributeError(f"module 'repro' has no attribute {name!r}")

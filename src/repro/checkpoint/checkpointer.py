@@ -124,6 +124,30 @@ class Checkpointer:
             loaded = [jax.numpy.asarray(a) for a in loaded]
         return jax.tree.unflatten(treedef, loaded), step
 
+    def restore_skeleton(self, step: Optional[int] = None) -> tuple[Any, int]:
+        """Structure-less restore: rebuild the pytree from the persisted path
+        skeleton — no ``target_tree`` needed. Only valid for checkpoints whose
+        structure is plain dicts/lists of arrays (the skeleton.json format);
+        custom pytree nodes must be encoded to dicts before save (see
+        ``pipeline.artifact``)."""
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint in {self.dir}")
+        d = os.path.join(self.dir, f"step_{step}")
+        with open(os.path.join(d, "skeleton.json")) as f:
+            skeleton = json.load(f)
+        with open(os.path.join(d, "manifest.json")) as f:
+            spec = json.load(f)
+        leaves, treedef = _flatten(skeleton)
+        assert spec["n_leaves"] == len(leaves), (
+            f"checkpoint has {spec['n_leaves']} leaves, skeleton {len(leaves)}"
+        )
+        loaded = [
+            jax.numpy.asarray(np.load(os.path.join(d, f"arr_{i}.npy")))
+            for i in range(len(leaves))
+        ]
+        return jax.tree.unflatten(treedef, loaded), step
+
     # --------------------------------------------------------------- hygiene
     def _gc(self) -> None:
         steps = sorted(

@@ -54,5 +54,13 @@ from .graph import (  # noqa: F401
     VOPairOp,
     WeightSite,
 )
-from .dfq import DFQConfig, apply_dfq, bias_correct, dfq_quantize, quantize_weights  # noqa: F401
+from .dfq import (  # noqa: F401
+    DFQConfig,
+    apply_dfq,
+    bias_correct,
+    dfq_quantize,
+    quantize_weights,
+    run_plan_ops,
+    weight_quant_snr,
+)
 from .adversarial import hostile_rescale  # noqa: F401

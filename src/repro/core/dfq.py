@@ -72,14 +72,27 @@ def _maybe(params, path):
     return get_path(params, path) if path is not None and has_path(params, path) else None
 
 
-def apply_dfq(params: Mapping, plan: DFQPlan, config: DFQConfig) -> dict:
-    """Function-preserving stage: norm folding, CLE, bias absorption.
+def run_plan_ops(
+    params: Mapping,
+    plan: DFQPlan,
+    config: DFQConfig,
+    *,
+    kinds: Optional[tuple] = None,
+    iterations: int = 1,
+) -> dict:
+    """Execute (a filtered slice of) the plan's function-preserving rewrites.
 
-    Returns a new params pytree computing the SAME FP32 function (exactly,
-    except ops flagged non-exact) with per-channel ranges equalized.
+    ``kinds`` restricts execution to the given op classes (None → all ops) —
+    the pipeline's ``fold_norm`` / ``cle`` / ``bias_absorb`` stages each run
+    one slice; ``apply_dfq`` runs everything interleaved. Plan order is
+    preserved within a pass, so a filtered schedule composes to the same
+    result as the interleaved one for the emitted LM plans (bias absorption
+    commutes with the CLE rescales it follows).
     """
-    for _ in range(max(1, config.cle_iterations)):
+    for _ in range(max(1, iterations)):
         for op in plan.ops:
+            if kinds is not None and not isinstance(op, kinds):
+                continue
             if isinstance(op, NormFoldOp):
                 consumers = [get_path(params, p) for p in op.consumers]
                 cbias_paths = (
@@ -180,6 +193,16 @@ def apply_dfq(params: Mapping, plan: DFQPlan, config: DFQConfig) -> dict:
     return params
 
 
+def apply_dfq(params: Mapping, plan: DFQPlan, config: DFQConfig) -> dict:
+    """Function-preserving stage: norm folding, CLE, bias absorption.
+
+    Returns a new params pytree computing the SAME FP32 function (exactly,
+    except ops flagged non-exact) with per-channel ranges equalized. Thin
+    wrapper over ``run_plan_ops`` (the original interleaved Fig. 4 schedule).
+    """
+    return run_plan_ops(params, plan, config, iterations=config.cle_iterations)
+
+
 def quantize_weights(params: Mapping, plan: DFQPlan, config: DFQConfig) -> dict:
     """Fake-quantize every weight site (simulated INT-k inference).
 
@@ -236,15 +259,15 @@ def dfq_quantize(
     ``input_means_fn(params_equalized)`` supplies E[x] per stat_key — the
     model-side hook that runs synthetic calibration or evaluates the
     analytic clipped-normal route. Returns fake-quantized params.
+
+    Thin wrapper over the pipeline's ``"dfq-int8"`` recipe (honoring the
+    config's stage toggles); prefer ``repro.quantize`` for new code — it
+    also returns the deployable ``QuantizedModel`` with stage diagnostics.
     """
-    params = apply_dfq(params, plan, config)
-    means = {}
-    if config.bias_correct != "none" and input_means_fn is not None:
-        means = input_means_fn(params)
-    if means:
-        params = bias_correct(params, plan, config, means)
-    params = quantize_weights(params, plan, config)
-    return params
+    from ..pipeline.api import run_legacy_dfq  # deferred: core must not
+    # import the pipeline at module load (pipeline stages wrap this module)
+
+    return run_legacy_dfq(params, plan, config, input_means_fn)
 
 
 def weight_quant_snr(params_fp: Mapping, params_q: Mapping, plan: DFQPlan):

@@ -21,12 +21,14 @@ from jax.experimental import pallas as pl
 try:
     from jax.experimental.pallas import tpu as pltpu
 
+    # renamed TPUCompilerParams -> CompilerParams across jax releases
+    _CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
     def _scratch(H, hd):
         return [pltpu.VMEM((H,), jnp.float32), pltpu.VMEM((H,), jnp.float32),
                 pltpu.VMEM((H, hd), jnp.float32)]
 
     _PARAMS = lambda: dict(
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "arbitrary")
         )
     )

@@ -19,9 +19,11 @@ from jax.experimental import pallas as pl
 try:
     from jax.experimental.pallas import tpu as pltpu
 
+    # renamed TPUCompilerParams -> CompilerParams across jax releases
+    _CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
     _SCRATCH = lambda bm, bn: [pltpu.VMEM((bm, bn), jnp.float32)]
     _PARAMS = lambda: dict(
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")
         )
     )

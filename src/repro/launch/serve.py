@@ -1,7 +1,11 @@
-"""Serving driver: DFQ-quantize a model and serve batched requests through
-the prefill + decode path (INT8 weights via the QTensor kernel dispatch).
+"""Serving driver: quantize a model through the pipeline API and serve
+batched requests through the prefill + decode path (INT8 weights via the
+QTensor kernel dispatch).
 
     python -m repro.launch.serve --arch qwen2-0.5b --smoke --quantize w8a16
+    python -m repro.launch.serve --arch qwen2-0.5b --smoke \
+        --recipe serve-w8a8 --verbose --save /tmp/qwen_int8
+    python -m repro.launch.serve --load /tmp/qwen_int8
 """
 from __future__ import annotations
 
@@ -12,10 +16,9 @@ import jax
 import jax.numpy as jnp
 
 from ..configs import get_config
-from ..core import DFQConfig, apply_dfq
 from ..data import calibration_tokens
 from ..models import build_model
-from ..quantized import quantize_for_serving, serving_summary
+from ..pipeline import QuantizedModel, quantize
 
 
 def main():
@@ -23,23 +26,51 @@ def main():
     ap.add_argument("--arch", default="qwen2-0.5b")
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--quantize", choices=["none", "w8a16", "w8a8"], default="w8a16")
+    ap.add_argument("--recipe", default=None,
+                    help="pipeline recipe name (overrides --quantize)")
+    ap.add_argument("--save", default=None, metavar="DIR",
+                    help="persist the QuantizedModel after quantization")
+    ap.add_argument("--load", default=None, metavar="DIR",
+                    help="serve a saved QuantizedModel (skips quantization)")
+    ap.add_argument("--verbose", action="store_true",
+                    help="print per-site weight SQNR diagnostics")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen-len", type=int, default=32)
     args = ap.parse_args()
 
-    cfg = get_config(args.arch, smoke=args.smoke)
-    model = build_model(cfg)
-    params = model.init(jax.random.PRNGKey(0))
-    plan = model.dfq_plan()
+    if args.load:
+        if args.recipe or args.save or args.smoke or args.quantize != "w8a16":
+            print("warning: --load serves the saved artifact as-is; "
+                  "--arch/--smoke/--recipe/--quantize/--save are ignored")
+        qm = QuantizedModel.load(args.load)
+        cfg, model, params = qm.cfg, qm.model, qm.params
+        print(f"loaded QuantizedModel from {args.load} "
+              f"(arch {cfg.name}, recipe {qm.recipe.name!r})")
+    else:
+        cfg = get_config(args.arch, smoke=args.smoke)
+        model = build_model(cfg)
+        qm = None
+        if args.recipe or args.quantize != "none":
+            recipe = args.recipe or f"serve-{args.quantize}"
+            qm = quantize(model, recipe=recipe)
+            params = qm.params
+        else:
+            params = model.init(jax.random.PRNGKey(0))
 
-    if args.quantize != "none":
-        params = apply_dfq(params, plan, DFQConfig())     # CLE + absorption
-        params = quantize_for_serving(params, plan, mode=args.quantize)
-        s = serving_summary(params)
-        print(f"quantized ({args.quantize}): {s['int8_bytes']/1e6:.1f} MB "
-              f"vs fp32 {s['fp32_bytes']/1e6:.1f} MB "
+    if qm is not None:
+        s = qm.serving_summary()
+        print(f"quantized (recipe {qm.recipe.name!r}): "
+              f"{s['int8_bytes'] / 1e6:.1f} MB "
+              f"vs fp32 {s['fp32_bytes'] / 1e6:.1f} MB "
               f"({s['compression']:.2f}x)")
+        if args.verbose:
+            from ..pipeline.cli import print_site_sqnr
+
+            print_site_sqnr(qm)
+        if args.save:
+            qm.save(args.save)
+            print(f"saved QuantizedModel to {args.save}")
 
     B = args.batch
     total = args.prompt_len + args.gen_len

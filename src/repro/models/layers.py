@@ -19,6 +19,22 @@ import jax.numpy as jnp
 
 from .config import ModelConfig
 
+# shard_map moved to the jax namespace and check_rep → check_vma across
+# releases — independently (0.5/0.6 expose jax.shard_map but still take
+# check_rep), so resolve the location and the kwarg name separately.
+if hasattr(jax, "shard_map"):
+    _shard_map = jax.shard_map
+else:  # jax <= 0.4.x
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+import inspect as _inspect
+
+_SHARD_MAP_CHECK_KW = (
+    "check_vma"
+    if "check_vma" in _inspect.signature(_shard_map).parameters
+    else "check_rep"
+)
+
 
 def scan_layers(body, carry, xs, unroll: bool = False):
     """lax.scan over stacked layer params, or an unrolled python loop when
@@ -578,11 +594,11 @@ def _moe_block_shardmap(p: dict, x: jnp.ndarray, cfg: ModelConfig):
         aux = jax.lax.pmean(jax.lax.pmean(aux, mdl), dp)
         return y, aux
 
-    y, aux = jax.shard_map(
+    y, aux = _shard_map(
         local_fn,
         mesh=mesh,
         in_specs=(_moe_specs(p, dp, mdl), P(x_batch_spec, None, None)),
         out_specs=(P(x_batch_spec, None, None), P()),
-        check_vma=False,
+        **{_SHARD_MAP_CHECK_KW: False},
     )(p, x)
     return y, aux, {}

@@ -1,0 +1,199 @@
+"""The one-call quantization API the paper promises (§1).
+
+    import repro
+    qm = repro.quantize("qwen2-0.5b-smoke", recipe="dfq-int8")
+    logits, _ = qm.apply(tokens)
+
+``quantize`` resolves the architecture, runs the recipe's stages over a
+``PipelineState``, and returns a deployable ``QuantizedModel``. The default
+calibration hook is the synthetic-token one every caller used to hand-roll
+(data-free: random token ids, frames for enc-dec), built once here.
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, Callable, Mapping, Optional, Union
+
+import jax
+
+from ..core.dfq import DFQConfig
+from ..models.config import ModelConfig
+from .artifact import QuantizedModel
+from .recipes import Recipe, RecipeStep, resolve_recipe
+from .registry import get_stage
+from .state import PipelineContext, PipelineError, PipelineState
+
+
+# weight_quant stage option → DFQConfig field. The quant spec must be ONE
+# truth for the whole recipe: bias_correct computes ε = fq(W) − W from the
+# config's spec, so a quantizer choice that stayed stage-local would make
+# the correction target a quantizer that never runs.
+_WEIGHT_SPEC_OPTS = {
+    "bits": "weight_bits",
+    "per_channel": "per_channel",
+    "symmetric": "weight_symmetric",
+}
+
+
+def _fold_weight_spec_overrides(recipe: Recipe, config: DFQConfig) -> DFQConfig:
+    import dataclasses
+
+    repl = {}
+    for step in recipe.steps:
+        if step.stage == "weight_quant":
+            for opt, field in _WEIGHT_SPEC_OPTS.items():
+                if step.options.get(opt) is not None:
+                    repl[field] = step.options[opt]
+        elif step.stage == "pack":
+            # quantize_param is symmetric int8 absmax (per-channel optional);
+            # mirror that into the config spec so a bias_correct in the same
+            # recipe computes ε against the quantizer that actually ships.
+            repl["weight_bits"] = 8
+            repl["weight_symmetric"] = True
+            repl["per_channel"] = bool(step.options.get("per_channel", False))
+    return dataclasses.replace(config, **repl) if repl else config
+
+
+def run_recipe(recipe: Recipe, state: PipelineState, ctx: PipelineContext) -> PipelineState:
+    """Validate then execute a recipe's stages, timing each into the report."""
+    recipe.validate()
+    state.config = _fold_weight_spec_overrides(recipe, state.config)
+    from .state import StageRecord
+
+    for step in recipe.steps:
+        stage = get_stage(step.stage)
+        t0 = time.perf_counter()
+        state = stage.run(state, ctx, step.options)
+        if not isinstance(state, PipelineState):
+            raise PipelineError(
+                f"stage {step.stage!r} returned {type(state).__name__}, "
+                "not PipelineState — stages must return the (updated) state"
+            )
+        state.records.append(
+            StageRecord(
+                stage=step.stage,
+                options=dict(step.options),
+                seconds=time.perf_counter() - t0,
+                metrics=state.pop_metrics(),
+            )
+        )
+    return state
+
+
+def default_calibration(
+    model, cfg: ModelConfig, *, seed: int = 1, batch: int = 2, seq: int = 32
+) -> Callable[[Mapping], Mapping]:
+    """The standard data-free calibration hook: synthetic random tokens
+    (plus random frames for enc-dec) through ``model.calibration_stats``."""
+    from ..data import calibration_tokens
+
+    def calibrate(params):
+        toks = calibration_tokens(seed, batch, seq, cfg.vocab_size)
+        if cfg.is_encdec:
+            frames = jax.random.normal(
+                jax.random.PRNGKey(seed), (batch, cfg.enc_seq, cfg.d_model)
+            )
+            return model.calibration_stats(params, toks, frames)
+        return model.calibration_stats(params, toks)
+
+    return calibrate
+
+
+def _resolve_model(arch_or_model) -> tuple[Any, ModelConfig]:
+    from ..models import build_model
+
+    if isinstance(arch_or_model, str):
+        from ..configs import get_config
+
+        cfg = get_config(arch_or_model)
+        return build_model(cfg), cfg
+    if isinstance(arch_or_model, ModelConfig):
+        return build_model(arch_or_model), arch_or_model
+    cfg = getattr(arch_or_model, "cfg", None)
+    if cfg is not None and hasattr(arch_or_model, "dfq_plan"):
+        return arch_or_model, cfg
+    raise PipelineError(
+        f"cannot resolve a model from {type(arch_or_model).__name__}; pass an "
+        "arch name (e.g. 'qwen2-0.5b-smoke'), a ModelConfig, or a model "
+        "exposing .cfg and .dfq_plan()"
+    )
+
+
+def quantize(
+    arch_or_model: Union[str, ModelConfig, Any],
+    params: Optional[Mapping] = None,
+    recipe: Union[str, Recipe, list] = "dfq-int8",
+    *,
+    config: Optional[DFQConfig] = None,
+    calibration: Union[str, Callable, None] = "auto",
+    stage_options: Optional[Mapping[str, Mapping]] = None,
+    init_seed: int = 0,
+    calib_seed: int = 1,
+    calib_batch: int = 2,
+    calib_seq: int = 32,
+) -> QuantizedModel:
+    """Quantize a model with a named (or custom) recipe — the single entry
+    point for the whole repo.
+
+    arch_or_model: arch name ("qwen2-0.5b", "-smoke" suffix honored), a
+        ModelConfig, or a built model.
+    params: existing parameters (e.g. trained); None → ``model.init``.
+    recipe: built-in name, a ``Recipe``, or a list of stage names /
+        (name, options) pairs.
+    config: ``DFQConfig`` defaults for every stage (bits, n-sigma, ...).
+    calibration: "auto" → synthetic-token hook (lazy — only invoked by
+        stages that need E[x]); a callable ``params -> {stat_key: E[x]}``;
+        or None to disable.
+    stage_options: per-stage overrides, e.g. {"pack": {"per_channel": True}}.
+    """
+    model, cfg = _resolve_model(arch_or_model)
+    r = resolve_recipe(recipe)
+    if stage_options:
+        r = r.with_options(stage_options)
+    r.validate()
+
+    if params is None:
+        params = model.init(jax.random.PRNGKey(init_seed))
+    plan = model.dfq_plan()
+
+    if calibration == "auto":
+        calibrate = default_calibration(
+            model, cfg, seed=calib_seed, batch=calib_batch, seq=calib_seq
+        )
+    elif calibration is None:
+        calibrate = None
+    elif callable(calibration):
+        calibrate = calibration
+    else:
+        raise PipelineError(
+            f"calibration must be 'auto', a callable, or None; got "
+            f"{calibration!r}"
+        )
+
+    state = PipelineState(params=params, plan=plan, config=config or DFQConfig())
+    ctx = PipelineContext(model=model, cfg=cfg, calibrate=calibrate)
+    state = run_recipe(r, state, ctx)
+    return QuantizedModel(
+        model=model, cfg=cfg, params=state.params, recipe=r,
+        report=state.report, act_qparams=state.act_qparams,
+    )
+
+
+def run_legacy_dfq(params, plan, config: DFQConfig, input_means_fn) -> dict:
+    """Backend of ``repro.core.dfq_quantize``: the "dfq-int8" recipe with the
+    config's stage toggles applied, returning bare fake-quantized params."""
+    steps = [RecipeStep("fold_norm", {})]
+    if config.cle:
+        steps.append(RecipeStep("cle", {}))
+    if config.bias_absorb:
+        steps.append(RecipeStep("bias_absorb", {}))
+    if config.bias_correct != "none" and input_means_fn is not None:
+        steps.append(RecipeStep("bias_correct", {"method": "empirical"}))
+    steps.append(RecipeStep("weight_quant", {}))
+    recipe = Recipe("dfq-int8/legacy", tuple(steps), "dfq_quantize compatibility")
+    state = run_recipe(
+        recipe,
+        PipelineState(params=params, plan=plan, config=config),
+        PipelineContext(calibrate=input_means_fn),
+    )
+    return state.params

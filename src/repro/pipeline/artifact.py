@@ -1,0 +1,164 @@
+"""QuantizedModel: the deployable output of the quantization pipeline.
+
+Bundles model + (possibly int8-packed) params + recipe provenance + the
+per-stage diagnostics report, and serves through the same prefill/decode
+path as FP32 (QTensor kernel dispatch). Persists via the fault-tolerant
+checkpointer — QTensors are encoded to tagged dicts so the on-disk layout is
+a plain array pytree restorable without a target structure.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from typing import Any, Optional
+
+import jax
+
+from ..models.config import ModelConfig
+from .recipes import Recipe, RecipeStep
+from .state import PipelineError
+
+_META_FILE = "quantized_model.json"
+_QT_PREFIX = "__qtensor_"
+
+
+def _encode_qtensors(tree):
+    """QTensor leaves → tagged plain dicts (mode encoded in the key)."""
+    from ..quantized.qtensor import QTensor
+
+    def enc(x):
+        if isinstance(x, QTensor):
+            return {f"{_QT_PREFIX}{x.mode}__": {"q": x.q, "scale": x.scale}}
+        return x
+
+    return jax.tree.map(enc, tree, is_leaf=lambda x: isinstance(x, QTensor))
+
+
+def _decode_qtensors(tree):
+    from ..quantized.qtensor import QTensor
+
+    if isinstance(tree, dict):
+        if len(tree) == 1:
+            key = next(iter(tree))
+            if key.startswith(_QT_PREFIX) and key.endswith("__"):
+                mode = key[len(_QT_PREFIX):-2]
+                inner = tree[key]
+                return QTensor(inner["q"], inner["scale"], mode)
+        return {k: _decode_qtensors(v) for k, v in tree.items()}
+    if isinstance(tree, list):
+        return [_decode_qtensors(v) for v in tree]
+    return tree
+
+
+@dataclasses.dataclass
+class QuantizedModel:
+    """model + quantized params + recipe provenance + stage report."""
+
+    model: Any
+    cfg: ModelConfig
+    params: Any
+    recipe: Recipe
+    report: list  # list[dict] — StageRecord.to_dict() per executed stage
+    # {stat_key: QParams} from the act_ranges stage, for static-activation
+    # backends. In-memory only — save() persists the float ranges in the
+    # report, not these (the shipped w8a8 path quantizes dynamically).
+    act_qparams: dict = dataclasses.field(default_factory=dict)
+
+    # ----------------------------------------------------------- inference
+    def apply(self, tokens, *args, **kwargs):
+        return self.model.apply(self.params, tokens, *args, **kwargs)
+
+    def loss(self, batch, **kwargs):
+        return self.model.loss(self.params, batch, **kwargs)
+
+    def init_cache(self, batch: int, seq_len: int, **kwargs):
+        return self.model.init_cache(batch, seq_len, **kwargs)
+
+    def warm_cache(self, frames, cache):
+        return self.model.warm_cache(self.params, frames, cache)
+
+    def prefill(self, tokens, cache, **kwargs):
+        return self.model.prefill(self.params, tokens, cache, **kwargs)
+
+    def decode_step(self, token, cache):
+        return self.model.decode_step(self.params, token, cache)
+
+    # --------------------------------------------------------- diagnostics
+    def serving_summary(self) -> dict:
+        """Bytes accounting: fp vs int8 parameter payload."""
+        from ..quantized.ptq import serving_summary
+
+        return serving_summary(self.params)
+
+    def stage_record(self, stage: str) -> Optional[dict]:
+        """Last report record for ``stage`` (None if the stage didn't run)."""
+        for rec in reversed(self.report):
+            if rec["stage"] == stage:
+                return rec
+        return None
+
+    def site_sqnr_db(self) -> dict:
+        """Per-site weight SQNR from the quantizing stage (weight_quant/pack)."""
+        for name in ("pack", "weight_quant"):
+            rec = self.stage_record(name)
+            if rec and "sqnr_db" in rec.get("metrics", {}):
+                return dict(rec["metrics"]["sqnr_db"])
+        return {}
+
+    # --------------------------------------------------------- persistence
+    def save(self, directory: str) -> str:
+        """Atomic save: array payload via the checkpointer + a JSON sidecar
+        with config, recipe provenance, and the stage report."""
+        from ..checkpoint.checkpointer import Checkpointer
+
+        ck = Checkpointer(directory, keep=1)
+        ck.save(0, _encode_qtensors(self.params), blocking=True)
+        meta = {
+            "format_version": 1,
+            "config": dataclasses.asdict(self.cfg),
+            "recipe": {
+                "name": self.recipe.name,
+                "description": self.recipe.description,
+                "steps": [
+                    {"stage": s.stage, "options": dict(s.options)}
+                    for s in self.recipe.steps
+                ],
+            },
+            "report": self.report,
+        }
+        tmp = os.path.join(directory, _META_FILE + ".tmp")
+        with open(tmp, "w") as f:
+            json.dump(meta, f, indent=2, default=float)
+        os.replace(tmp, os.path.join(directory, _META_FILE))
+        return directory
+
+    @classmethod
+    def load(cls, directory: str) -> "QuantizedModel":
+        from ..checkpoint.checkpointer import Checkpointer
+        from ..models import build_model
+
+        meta_path = os.path.join(directory, _META_FILE)
+        if not os.path.exists(meta_path):
+            raise PipelineError(
+                f"{directory!r} is not a QuantizedModel directory "
+                f"(missing {_META_FILE}); save one with QuantizedModel.save()"
+            )
+        with open(meta_path) as f:
+            meta = json.load(f)
+        cfg = ModelConfig(**meta["config"])
+        model = build_model(cfg)
+        tree, _ = Checkpointer(directory, keep=1).restore_skeleton(0)
+        params = _decode_qtensors(tree)
+        recipe = Recipe(
+            meta["recipe"]["name"],
+            tuple(
+                RecipeStep(s["stage"], s["options"])
+                for s in meta["recipe"]["steps"]
+            ),
+            meta["recipe"].get("description", ""),
+        )
+        return cls(
+            model=model, cfg=cfg, params=params, recipe=recipe,
+            report=meta.get("report", []),
+        )

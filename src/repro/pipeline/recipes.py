@@ -1,0 +1,170 @@
+"""Declarative recipes: named stage sequences with per-stage options.
+
+A recipe is data, not code — swapping the weight stage for a Hessian-based
+one (SQuant) or inserting an activation-clipping stage (AACAB) is a new
+``Recipe`` over the same runner. Built-ins cover the paper's Fig. 4 flow and
+the serving deployments.
+"""
+from __future__ import annotations
+
+import dataclasses
+import difflib
+from typing import Any, Iterable, Mapping, Sequence, Union
+
+from .registry import get_stage, list_stages
+from .state import RecipeError
+
+
+@dataclasses.dataclass(frozen=True)
+class RecipeStep:
+    stage: str
+    options: Mapping[str, Any] = dataclasses.field(default_factory=dict)
+
+
+@dataclasses.dataclass(frozen=True)
+class Recipe:
+    name: str
+    steps: tuple[RecipeStep, ...]
+    description: str = ""
+
+    def validate(self) -> None:
+        """Fail fast with an actionable error before any compute runs."""
+        if not self.steps:
+            raise RecipeError(f"recipe {self.name!r} has no stages")
+        problems = []
+        for i, step in enumerate(self.steps):
+            if not isinstance(step, RecipeStep):
+                problems.append(f"step {i} is {type(step).__name__}, not RecipeStep")
+                continue
+            try:
+                stage = get_stage(step.stage)
+            except RecipeError as e:
+                problems.append(f"step {i}: {e}")
+                continue
+            if not isinstance(step.options, Mapping):
+                problems.append(
+                    f"step {i} ({step.stage!r}): options must be a mapping, "
+                    f"got {type(step.options).__name__}"
+                )
+                continue
+            unknown = set(step.options) - stage.allowed_options
+            if unknown:
+                problems.append(
+                    f"step {i} ({step.stage!r}): unknown option(s) "
+                    f"{sorted(unknown)}; allowed: "
+                    f"{sorted(stage.allowed_options) or '(none)'}"
+                )
+        if problems:
+            raise RecipeError(
+                f"recipe {self.name!r} failed validation:\n  - "
+                + "\n  - ".join(problems)
+            )
+
+    def with_options(self, overrides: Mapping[str, Mapping[str, Any]]) -> "Recipe":
+        """Merge per-stage option overrides ({stage_name: {opt: val}})."""
+        names = {s.stage for s in self.steps}
+        unknown = set(overrides) - names
+        if unknown:
+            raise RecipeError(
+                f"recipe {self.name!r} has no stage(s) {sorted(unknown)} to "
+                f"override; stages: {sorted(names)}"
+            )
+        steps = tuple(
+            RecipeStep(s.stage, {**dict(s.options), **dict(overrides.get(s.stage, {}))})
+            for s in self.steps
+        )
+        return dataclasses.replace(self, steps=steps)
+
+    def stage_names(self) -> list[str]:
+        return [s.stage for s in self.steps]
+
+
+def _r(name: str, description: str, *steps) -> Recipe:
+    return Recipe(
+        name,
+        tuple(RecipeStep(s, {}) if isinstance(s, str) else RecipeStep(*s) for s in steps),
+        description,
+    )
+
+
+BUILTIN_RECIPES: dict[str, Recipe] = {
+    r.name: r
+    for r in (
+        _r(
+            "dfq-int8",
+            "The paper's Fig. 4 flow: fold → CLE → absorb → bias-correct → "
+            "fake-quant INT8 (near-FP32 simulated inference)",
+            "fold_norm", "cle", "bias_absorb",
+            ("bias_correct", {"method": "empirical"}),
+            "weight_quant",
+        ),
+        _r(
+            "naive-int8",
+            "Per-tensor INT8 round-to-nearest, no DFQ — the collapse baseline",
+            "weight_quant",
+        ),
+        _r(
+            "cle-only",
+            "Equalization ablation: fold → CLE → fake-quant (no absorption, "
+            "no bias correction)",
+            "fold_norm", "cle", "weight_quant",
+        ),
+        _r(
+            "serve-w8a16",
+            "Deployment: fold → CLE → absorb → pack int8 weights "
+            "(dequant-in-kernel matmul)",
+            "fold_norm", "cle", "bias_absorb", ("pack", {"mode": "w8a16"}),
+        ),
+        _r(
+            "serve-w8a8",
+            "Deployment: fold → CLE → absorb → pack int8 weights with dynamic "
+            "int8 activations (MXU int8 matmul)",
+            "fold_norm", "cle", "bias_absorb", ("pack", {"mode": "w8a8"}),
+        ),
+    )
+}
+
+
+RecipeLike = Union[str, Recipe, Sequence]
+
+
+def resolve_recipe(spec: RecipeLike) -> Recipe:
+    """str → built-in; Recipe → itself; sequence of stage names /
+    (name, options) pairs / RecipeSteps → anonymous recipe."""
+    if isinstance(spec, Recipe):
+        return spec
+    if isinstance(spec, str):
+        try:
+            return BUILTIN_RECIPES[spec]
+        except KeyError:
+            hint = difflib.get_close_matches(spec, BUILTIN_RECIPES, n=1)
+            suggest = f" — did you mean {hint[0]!r}?" if hint else ""
+            raise RecipeError(
+                f"unknown recipe {spec!r}{suggest} Built-ins: "
+                f"{', '.join(sorted(BUILTIN_RECIPES))}. A custom recipe is a "
+                "Recipe instance or a list of stage names from: "
+                f"{', '.join(list_stages())}"
+            ) from None
+    if isinstance(spec, Iterable):
+        steps = []
+        for s in spec:
+            if isinstance(s, RecipeStep):
+                steps.append(s)
+            elif isinstance(s, str):
+                steps.append(RecipeStep(s, {}))
+            elif isinstance(s, (tuple, list)) and len(s) == 2:
+                steps.append(RecipeStep(s[0], dict(s[1])))
+            else:
+                raise RecipeError(
+                    f"cannot interpret recipe step {s!r}; use a stage name, "
+                    "a (name, options) pair, or a RecipeStep"
+                )
+        return Recipe("custom", tuple(steps), "ad-hoc recipe")
+    raise RecipeError(
+        f"cannot interpret recipe spec of type {type(spec).__name__}; "
+        "pass a built-in name, a Recipe, or a list of stages"
+    )
+
+
+def list_recipes() -> list[str]:
+    return sorted(BUILTIN_RECIPES)

@@ -1,0 +1,86 @@
+"""Stage registry: named, pluggable pipeline transforms.
+
+Built-in stages (``stages.py``) wrap the core DFQ transforms; external code
+registers new ones — a Hessian weight stage (SQuant-style) or an
+activation-clipping stage (AACAB-style) drops in without touching the
+runner:
+
+    @register_stage("my_stage", strength=1.0)
+    def my_stage(state, ctx, *, strength):
+        state.params = ...
+        state.note(strength=strength)
+        return state
+
+Declared keyword defaults double as the stage's option schema: a recipe
+passing an undeclared option fails validation with an actionable error.
+"""
+from __future__ import annotations
+
+import dataclasses
+import difflib
+from typing import Any, Callable, Mapping
+
+from .state import PipelineError, RecipeError
+
+_STAGES: dict[str, "Stage"] = {}
+
+
+@dataclasses.dataclass(frozen=True)
+class Stage:
+    name: str
+    fn: Callable
+    defaults: Mapping[str, Any]
+    doc: str = ""
+
+    @property
+    def allowed_options(self) -> frozenset:
+        return frozenset(self.defaults)
+
+    def run(self, state, ctx, options: Mapping[str, Any]):
+        unknown = set(options) - self.allowed_options
+        if unknown:
+            raise RecipeError(
+                f"stage {self.name!r} got unknown option(s) {sorted(unknown)}; "
+                f"allowed: {sorted(self.allowed_options) or '(none)'}"
+            )
+        merged = {**self.defaults, **options}
+        return self.fn(state, ctx, **merged)
+
+
+def register_stage(name: str, **defaults):
+    """Decorator: register ``fn(state, ctx, **options)`` under ``name``.
+
+    ``defaults`` declares every option the stage accepts, with its default.
+    """
+
+    def deco(fn):
+        if name in _STAGES:
+            raise PipelineError(
+                f"stage {name!r} is already registered "
+                f"(by {_STAGES[name].fn.__module__}.{_STAGES[name].fn.__qualname__}); "
+                "unregister_stage() first to replace it"
+            )
+        _STAGES[name] = Stage(name, fn, dict(defaults), doc=(fn.__doc__ or "").strip())
+        return fn
+
+    return deco
+
+
+def unregister_stage(name: str) -> None:
+    _STAGES.pop(name, None)
+
+
+def get_stage(name: str) -> Stage:
+    try:
+        return _STAGES[name]
+    except KeyError:
+        hint = difflib.get_close_matches(name, _STAGES, n=1)
+        suggest = f" — did you mean {hint[0]!r}?" if hint else ""
+        raise RecipeError(
+            f"unknown stage {name!r}{suggest} "
+            f"Registered stages: {', '.join(sorted(_STAGES))}"
+        ) from None
+
+
+def list_stages() -> list[str]:
+    return sorted(_STAGES)

@@ -1,0 +1,228 @@
+"""Built-in pipeline stages wrapping the core DFQ transforms.
+
+Stage order in a recipe follows the paper's Fig. 4: fold_norm → cle →
+bias_absorb → bias_correct → weight_quant (fake-quant) or pack (true-int8
+serving). ``bias_correct`` runs before weight quantization because the
+correction term ε = W̃ − W is computed from the still-FP weights.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+from ..core.bias_correction import expected_input_analytic
+from ..core.dfq import (
+    bias_correct as core_bias_correct,
+    quantize_weights as core_quantize_weights,
+    run_plan_ops,
+    weight_quant_snr,
+)
+from ..core.graph import (
+    DensePairOp,
+    HighBiasAbsorbOp,
+    NormFoldOp,
+    QKPairOp,
+    VBiasAbsorbOp,
+    VOPairOp,
+)
+from ..core.quantizer import qparams_from_range, sqnr_db
+from ..core.tree import get_path
+from .registry import register_stage
+from .state import PipelineError
+
+_CLE_KINDS = (DensePairOp, VOPairOp, QKPairOp)
+_ABSORB_KINDS = (VBiasAbsorbOp, HighBiasAbsorbOp)
+
+
+def _count_ops(plan, kinds) -> int:
+    return sum(isinstance(op, kinds) for op in plan.ops)
+
+
+@register_stage("fold_norm")
+def fold_norm_stage(state, ctx):
+    """Fold norm scale (and LayerNorm shift) into consuming linears."""
+    state.params = run_plan_ops(
+        state.params, state.plan, state.config, kinds=(NormFoldOp,), iterations=1
+    )
+    state.note(ops=_count_ops(state.plan, NormFoldOp))
+    return state
+
+
+@register_stage("cle", iterations=None, include_approx_pairs=None)
+def cle_stage(state, ctx, *, iterations, include_approx_pairs):
+    """Cross-layer equalization over the plan's exact pairs (paper §4.1)."""
+    cfg = dataclasses.replace(
+        state.config,
+        cle=True,
+        cle_include_approx_pairs=(
+            state.config.cle_include_approx_pairs
+            if include_approx_pairs is None
+            else include_approx_pairs
+        ),
+    )
+    it = iterations if iterations is not None else cfg.cle_iterations
+    state.params = run_plan_ops(
+        state.params, state.plan, cfg, kinds=_CLE_KINDS, iterations=it
+    )
+    state.note(pairs=_count_ops(state.plan, _CLE_KINDS), iterations=int(it))
+    return state
+
+
+@register_stage("bias_absorb")
+def bias_absorb_stage(state, ctx):
+    """High-bias absorption into the following layer (paper §4.1.3)."""
+    cfg = dataclasses.replace(state.config, bias_absorb=True)
+    state.params = run_plan_ops(
+        state.params, state.plan, cfg, kinds=_ABSORB_KINDS, iterations=1
+    )
+    state.note(ops=_count_ops(state.plan, _ABSORB_KINDS))
+    return state
+
+
+@register_stage("bias_correct", method="empirical")
+def bias_correct_stage(state, ctx, *, method):
+    """Quantization-bias correction b ← b − εᵀE[x] (paper §4.2).
+
+    method="empirical": E[x] from the context's calibration hook (synthetic
+    tokens — still data-free). method="analytic": closed-form clipped-normal
+    route; requires the model to expose ``analytic_input_stats()`` returning
+    ``{stat_key: (beta, gamma, activation)}``.
+    """
+    if method == "none":
+        state.note(skipped="method='none'")
+        return state
+    if method not in ("empirical", "analytic"):
+        raise PipelineError(
+            f"bias_correct: unknown method {method!r}; "
+            "use 'empirical', 'analytic', or 'none'"
+        )
+    if method == "analytic":
+        stats_fn = getattr(ctx.model, "analytic_input_stats", None)
+        if stats_fn is None:
+            raise PipelineError(
+                "bias_correct(method='analytic') needs the model to expose "
+                "analytic_input_stats() -> {stat_key: (beta, gamma, activation)} "
+                f"but {type(ctx.model).__name__} does not; use "
+                "method='empirical' (synthetic-calibration route) instead"
+            )
+        means = {
+            k: expected_input_analytic(beta, gamma, activation)
+            for k, (beta, gamma, activation) in stats_fn().items()
+        }
+    else:
+        if ctx.calibrate is None:
+            state.note(skipped="no calibration hook available")
+            return state
+        means = ctx.calibrate(state.params)
+    if not means:
+        state.note(skipped="calibration returned no statistics")
+        return state
+    state.input_means = means
+    state.params = core_bias_correct(state.params, state.plan, state.config, means)
+    corrected = [
+        s.name for s in state.plan.sites
+        if s.stat_key is not None and s.stat_key in means
+    ]
+    state.note(method=method, sites_corrected=corrected)
+    return state
+
+
+@register_stage("weight_quant", bits=None, per_channel=None, symmetric=None)
+def weight_quant_stage(state, ctx, *, bits, per_channel, symmetric):
+    """Fake-quantize every weight site (simulated INT-k inference).
+
+    Records per-site SQNR (dB) of the quantized weights against the
+    pre-quantization snapshot — the ``weight_quant_snr`` diagnostics.
+    """
+    repl = {}
+    if bits is not None:
+        repl["weight_bits"] = int(bits)
+    if per_channel is not None:
+        repl["per_channel"] = bool(per_channel)
+    if symmetric is not None:
+        repl["weight_symmetric"] = bool(symmetric)
+    cfg = dataclasses.replace(state.config, **repl) if repl else state.config
+    fp = state.params
+    state.fp_params = fp
+    state.params = core_quantize_weights(fp, state.plan, cfg)
+    snr = weight_quant_snr(fp, state.params, state.plan)
+    state.note(
+        sites=len(state.plan.sites),
+        bits=cfg.weight_bits,
+        per_channel=cfg.per_channel,
+        sqnr_db=snr,
+        sqnr_min_db=min(snr.values()) if snr else None,
+        sqnr_mean_db=(sum(snr.values()) / len(snr)) if snr else None,
+    )
+    return state
+
+
+@register_stage("act_ranges", n_sigma=None)
+def act_ranges_stage(state, ctx, *, n_sigma):
+    """Data-free activation-range setting (paper §5: range = β ± nγ).
+
+    LM route: the per-channel calibration means stand in for β; the spread
+    across channels stands in for γ (documented approximation — the capture
+    path records first moments only). Resulting QParams are stored on the
+    state / artifact for static-activation backends; the shipped w8a8 kernel
+    quantizes activations dynamically and does not consume them.
+    """
+    ns = float(n_sigma if n_sigma is not None else state.config.act_range_n_sigma)
+    means = state.input_means
+    if means is None and ctx.calibrate is not None:
+        means = ctx.calibrate(state.params)
+        state.input_means = means
+    if not means:
+        state.note(skipped="no calibration statistics available")
+        return state
+    spec = state.config.act_spec
+    ranges = {}
+    for key, m in means.items():
+        if not hasattr(m, "shape"):
+            continue
+        v = jnp.asarray(m, jnp.float32).reshape(-1)
+        sd = jnp.std(v)
+        lo, hi = jnp.min(v) - ns * sd, jnp.max(v) + ns * sd
+        state.act_qparams[key] = qparams_from_range(lo, hi, spec)
+        ranges[key] = (float(lo), float(hi))
+    state.note(n_sigma=ns, keys=sorted(ranges), ranges=ranges)
+    return state
+
+
+@register_stage("pack", mode="w8a16", per_channel=False)
+def pack_stage(state, ctx, *, mode, per_channel):
+    """Pack weight sites into int8 QTensors for true-int8 serving.
+
+    mode="w8a16": dequant-in-kernel matmul; mode="w8a8": dynamic activation
+    quant + int8 MXU. Records the bytes summary and per-site SQNR of the
+    packed (dequantized) weights vs their FP source.
+    """
+    if mode not in ("w8a16", "w8a8"):
+        raise PipelineError(
+            f"pack: unknown mode {mode!r}; use 'w8a16' or 'w8a8'"
+        )
+    from ..quantized.ptq import quantize_for_serving, serving_summary
+
+    fp = state.params
+    state.fp_params = fp
+    packed = quantize_for_serving(
+        fp, state.plan, mode=mode, per_channel=bool(per_channel)
+    )
+    snr = {
+        site.name: float(
+            sqnr_db(get_path(fp, site.w), get_path(packed, site.w).dequant())
+        )
+        for site in state.plan.sites
+    }
+    state.params = packed
+    state.packed = True
+    state.pack_mode = mode
+    state.note(
+        mode=mode,
+        per_channel=bool(per_channel),
+        sites=len(state.plan.sites),
+        sqnr_db=snr,
+        **serving_summary(packed),
+    )
+    return state

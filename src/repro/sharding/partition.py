@@ -185,8 +185,9 @@ def batch_pspec(mesh: Mesh, ndim: int = 2, batch: Optional[int] = None) -> P:
 def cache_pspecs(cache_shapes: Any, mesh: Mesh, batch: int) -> Any:
     """KV/SSM cache sharding: batch over (pod, data) when divisible, else
     sequence over "data" (the long-context B=1 case); heads over "model"."""
-    dp_axes = ("pod", "data") if "pod" in mesh.shape else ("data",)
-    dp_n = int(np.prod([mesh.shape[a] for a in dp_axes]))
+    dp_axes = ("pod", "data") if "pod" in mesh.shape else "data"
+    dp_n = int(np.prod([mesh.shape[a] for a in
+                        ((dp_axes,) if isinstance(dp_axes, str) else dp_axes)]))
     model_n = mesh.shape.get("model", 1)
 
     def spec_of(path, leaf):

@@ -2,8 +2,7 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hyp import given, settings, st
 
 from repro.core import clipped_normal_mean, clipped_normal_var, relu_normal_mean
 

@@ -1,0 +1,271 @@
+"""Pipeline subsystem: recipe validation, stage-registry dispatch,
+QuantizedModel save/load, and parity with the legacy call chains."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro
+from repro.configs import get_config
+from repro.core import DFQConfig, apply_dfq, bias_correct, dfq_quantize, quantize_weights
+from repro.data import calibration_tokens
+from repro.models import build_model
+from repro.pipeline import (
+    QuantizedModel,
+    Recipe,
+    RecipeError,
+    RecipeStep,
+    default_calibration,
+    list_recipes,
+    list_stages,
+    quantize,
+    register_stage,
+    resolve_recipe,
+    unregister_stage,
+)
+from repro.quantized import QTensor, quantize_for_serving
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_config("qwen2-0.5b", smoke=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _leaves(tree):
+    return jax.tree.leaves(tree, is_leaf=lambda x: isinstance(x, QTensor))
+
+
+# ---------------------------------------------------------------- validation
+
+def test_unknown_recipe_name_error():
+    with pytest.raises(RecipeError, match="dfq-int8"):
+        resolve_recipe("dfq-int9")
+
+
+def test_unknown_stage_error_suggests_and_lists():
+    r = Recipe("bad", (RecipeStep("clee", {}),))
+    with pytest.raises(RecipeError) as e:
+        r.validate()
+    msg = str(e.value)
+    assert "did you mean 'cle'" in msg
+    assert "weight_quant" in msg  # lists the registered stages
+
+
+def test_unknown_option_error_lists_allowed():
+    r = Recipe("bad", (RecipeStep("pack", {"modee": "w8a16"}),))
+    with pytest.raises(RecipeError, match="modee"):
+        r.validate()
+    with pytest.raises(RecipeError, match="mode"):
+        r.validate()
+
+
+def test_empty_recipe_error():
+    with pytest.raises(RecipeError, match="no stages"):
+        Recipe("empty", ()).validate()
+
+
+def test_with_options_unknown_stage_error():
+    r = resolve_recipe("serve-w8a16")
+    with pytest.raises(RecipeError, match="weight_quant"):
+        r.with_options({"weight_quant": {"bits": 4}})
+
+
+def test_builtin_recipes_validate():
+    for name in list_recipes():
+        resolve_recipe(name).validate()
+
+
+# ------------------------------------------------------------------ registry
+
+def test_registry_dispatch_custom_stage(setup):
+    cfg, model, params = setup
+
+    @register_stage("test_tag_stage", tag="default")
+    def test_tag_stage(state, ctx, *, tag):
+        state.note(tag=tag)
+        return state
+
+    try:
+        qm = quantize(
+            model, params=params,
+            recipe=[("test_tag_stage", {"tag": "hello"}), "weight_quant"],
+            calibration=None,
+        )
+        rec = qm.stage_record("test_tag_stage")
+        assert rec is not None and rec["metrics"]["tag"] == "hello"
+        assert "test_tag_stage" in list_stages()
+    finally:
+        unregister_stage("test_tag_stage")
+    assert "test_tag_stage" not in list_stages()
+
+
+# -------------------------------------------------------------------- parity
+
+def test_dfq_quantize_wrapper_delegates_to_pipeline(setup):
+    """dfq_quantize (now a thin wrapper) ≡ quantize(recipe='dfq-int8')."""
+    cfg, model, params = setup
+    plan = model.dfq_plan()
+    legacy = dfq_quantize(
+        params, plan, DFQConfig(),
+        input_means_fn=default_calibration(model, cfg),
+    )
+    qm = quantize(model, params=params, recipe="dfq-int8")
+    for a, b in zip(jax.tree.leaves(legacy), jax.tree.leaves(qm.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_dfq_int8_matches_handrolled_chain(setup):
+    """The acceptance bar: staged execution reproduces the original
+    hand-assembled apply_dfq → bias_correct → quantize_weights chain
+    bit-for-bit (this is the true legacy reference — dfq_quantize itself
+    now delegates to the pipeline, so comparing against it would be
+    circular)."""
+    cfg, model, params = setup
+    plan = model.dfq_plan()
+    eq = apply_dfq(params, plan, DFQConfig())
+    means = default_calibration(model, cfg)(eq)
+    ref = quantize_weights(
+        bias_correct(eq, plan, DFQConfig(), means), plan, DFQConfig()
+    )
+    qm = quantize(model, params=params, recipe="dfq-int8")
+    for a, b in zip(jax.tree.leaves(ref), jax.tree.leaves(qm.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_weight_quant_override_reaches_bias_correct_epsilon(setup):
+    """A per-stage bits override must also drive the ε = fq(W) − W used by
+    bias_correct — one quant spec for the whole recipe."""
+    cfg, model, params = setup
+    plan = model.dfq_plan()
+    cfg4 = DFQConfig(weight_bits=4)
+    eq = apply_dfq(params, plan, cfg4)
+    means = default_calibration(model, cfg)(eq)
+    ref = quantize_weights(bias_correct(eq, plan, cfg4, means), plan, cfg4)
+    qm = quantize(
+        model, params=params, recipe="dfq-int8",
+        stage_options={"weight_quant": {"bits": 4}},
+    )
+    assert qm.stage_record("weight_quant")["metrics"]["bits"] == 4
+    for a, b in zip(jax.tree.leaves(ref), jax.tree.leaves(qm.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_serve_w8a16_matches_legacy_serving_path(setup):
+    """'serve-w8a16' ≡ apply_dfq + quantize_for_serving."""
+    cfg, model, params = setup
+    plan = model.dfq_plan()
+    legacy = quantize_for_serving(
+        apply_dfq(params, plan, DFQConfig()), plan, mode="w8a16"
+    )
+    qm = quantize(model, params=params, recipe="serve-w8a16", calibration=None)
+    for a, b in zip(_leaves(legacy), _leaves(qm.params)):
+        if isinstance(a, QTensor):
+            assert isinstance(b, QTensor) and a.mode == b.mode
+            np.testing.assert_array_equal(np.asarray(a.q), np.asarray(b.q))
+            np.testing.assert_allclose(
+                np.asarray(a.scale), np.asarray(b.scale), rtol=1e-6
+            )
+        else:
+            np.testing.assert_allclose(
+                np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-6
+            )
+
+
+def test_naive_int8_matches_quantize_weights(setup):
+    cfg, model, params = setup
+    plan = model.dfq_plan()
+    ref = quantize_weights(
+        params, plan, DFQConfig(cle=False, bias_absorb=False)
+    )
+    qm = quantize(model, params=params, recipe="naive-int8", calibration=None)
+    for a, b in zip(jax.tree.leaves(ref), jax.tree.leaves(qm.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------- entrypoint
+
+def test_quantize_by_arch_string():
+    qm = repro.quantize("qwen2-0.5b-smoke", recipe="naive-int8",
+                        calibration=None)
+    assert isinstance(qm, QuantizedModel)
+    assert qm.cfg.name == "qwen2-0.5b-smoke"
+    assert [r["stage"] for r in qm.report] == ["weight_quant"]
+
+
+def test_report_carries_per_site_weight_sqnr(setup):
+    cfg, model, params = setup
+    qm = quantize(model, params=params, recipe="dfq-int8")
+    snr = qm.site_sqnr_db()
+    assert set(snr) == {s.name for s in model.dfq_plan().sites}
+    assert all(np.isfinite(v) for v in snr.values())
+
+
+def test_act_ranges_stage_records_ranges(setup):
+    cfg, model, params = setup
+    qm = quantize(
+        model, params=params,
+        recipe=["fold_norm", "cle", "act_ranges"],
+    )
+    rec = qm.stage_record("act_ranges")
+    assert rec is not None
+    ranges = rec["metrics"]["ranges"]
+    assert ranges, "expected at least one activation range"
+    for lo, hi in ranges.values():
+        assert lo < hi
+    # the machine-readable QParams reach the artifact
+    assert set(qm.act_qparams) == set(ranges)
+    for qp in qm.act_qparams.values():
+        assert float(jnp.min(qp.scale)) > 0
+
+
+def test_quantized_model_serves_prefill_decode(setup):
+    cfg, model, params = setup
+    qm = quantize(model, params=params, recipe="serve-w8a16",
+                  calibration=None)
+    toks = calibration_tokens(0, 2, 8, cfg.vocab_size)
+    cache = qm.init_cache(2, 16, dtype=jnp.float32)
+    logits, cache = qm.prefill(toks, cache)
+    assert logits.shape == (2, cfg.vocab_size)
+    tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+    logits2, _ = qm.decode_step(tok, cache)
+    assert logits2.shape == (2, cfg.vocab_size)
+
+
+# --------------------------------------------------------------- persistence
+
+def test_save_load_roundtrip_preserves_outputs(setup, tmp_path):
+    cfg, model, params = setup
+    qm = quantize(model, params=params, recipe="serve-w8a16",
+                  calibration=None)
+    toks = calibration_tokens(0, 2, 16, cfg.vocab_size)
+    y0, _ = qm.apply(toks)
+
+    d = str(tmp_path / "artifact")
+    qm.save(d)
+    qm2 = QuantizedModel.load(d)
+
+    assert qm2.recipe.name == "serve-w8a16"
+    assert [r["stage"] for r in qm2.report] == [r["stage"] for r in qm.report]
+    assert qm2.cfg == cfg
+    y1, _ = qm2.apply(toks)
+    np.testing.assert_array_equal(np.asarray(y0), np.asarray(y1))
+
+
+def test_save_load_roundtrip_fake_quant(setup, tmp_path):
+    cfg, model, params = setup
+    qm = quantize(model, params=params, recipe="dfq-int8")
+    d = str(tmp_path / "fq")
+    qm.save(d)
+    qm2 = QuantizedModel.load(d)
+    for a, b in zip(jax.tree.leaves(qm.params), jax.tree.leaves(qm2.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_load_missing_dir_actionable_error(tmp_path):
+    from repro.pipeline import PipelineError
+
+    with pytest.raises(PipelineError, match="quantized_model.json"):
+        QuantizedModel.load(str(tmp_path / "nope"))
