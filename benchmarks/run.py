@@ -31,8 +31,10 @@ def main() -> None:
     benches["roofline"] = roofline_rows
     if not args.skip_lm:
         from .lm_dfq import lm_dfq_all
+        from .serve_engine import serve_rows
 
         benches["lm_dfq"] = lm_dfq_all
+        benches["serve_engine"] = serve_rows
 
     selected = benches
     if args.only:

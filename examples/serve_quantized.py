@@ -1,13 +1,20 @@
-"""Batched INT8 serving example (wraps the production driver):
+"""Continuous-batching INT8 serving example (wraps the production driver,
+which runs the slot-pool engine — see src/repro/serving/):
 
     PYTHONPATH=src python examples/serve_quantized.py
+    PYTHONPATH=src python examples/serve_quantized.py --trace 12 --slots 4
+
+Extra arguments are forwarded to repro.launch.serve and override the
+example defaults (argparse last-wins).
 """
 import sys
 
 from repro.launch.serve import main
 
+DEFAULTS = [
+    "--arch", "qwen2-0.5b", "--smoke", "--quantize", "w8a16",
+    "--batch", "4", "--prompt-len", "16", "--gen-len", "16",
+]
+
 if __name__ == "__main__":
-    sys.argv = [sys.argv[0], "--arch", "qwen2-0.5b", "--smoke",
-                "--quantize", "w8a16", "--batch", "4",
-                "--prompt-len", "16", "--gen-len", "16"]
-    main()
+    main(DEFAULTS + sys.argv[1:])

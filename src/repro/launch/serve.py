@@ -1,11 +1,12 @@
-"""Serving driver: quantize a model through the pipeline API and serve
-batched requests through the prefill + decode path (INT8 weights via the
-QTensor kernel dispatch).
+"""Serving driver: quantize a model through the pipeline API and serve it
+with the continuous-batching engine (INT8 weights via the QTensor kernel
+dispatch, slot-based KV-cache pool, FIFO admission).
 
     python -m repro.launch.serve --arch qwen2-0.5b --smoke --quantize w8a16
     python -m repro.launch.serve --arch qwen2-0.5b --smoke \
         --recipe serve-w8a8 --verbose --save /tmp/qwen_int8
     python -m repro.launch.serve --load /tmp/qwen_int8
+    python -m repro.launch.serve --arch qwen2-0.5b --smoke --trace 20
 """
 from __future__ import annotations
 
@@ -13,15 +14,21 @@ import argparse
 import time
 
 import jax
-import jax.numpy as jnp
+import numpy as np
 
 from ..configs import get_config
 from ..data import calibration_tokens
 from ..models import build_model
 from ..pipeline import QuantizedModel, quantize
+from ..serving import (
+    Request,
+    ServingEngine,
+    required_cache_len,
+    synthetic_trace,
+)
 
 
-def main():
+def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen2-0.5b")
     ap.add_argument("--smoke", action="store_true")
@@ -34,10 +41,29 @@ def main():
                     help="serve a saved QuantizedModel (skips quantization)")
     ap.add_argument("--verbose", action="store_true",
                     help="print per-site weight SQNR diagnostics")
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--batch", type=int, default=4,
+                    help="without --trace: number of uniform requests")
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen-len", type=int, default=32)
-    args = ap.parse_args()
+    ap.add_argument("--slots", type=int, default=4,
+                    help="engine cache-pool size (decode batch width)")
+    ap.add_argument("--max-len", type=int, default=None,
+                    help="per-slot KV capacity (default: fits prompt+gen)")
+    ap.add_argument("--prefill-chunk", type=int, default=16)
+    ap.add_argument("--trace", type=int, default=0, metavar="N",
+                    help="replay a synthetic arrival schedule of N requests "
+                         "(mixed log-uniform lengths, Poisson arrivals)")
+    ap.add_argument("--trace-seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    def check_servable(cfg, what):
+        if cfg.family in ("ssm", "hybrid") or cfg.is_encdec:
+            ap.error(
+                f"{what}: the continuous-batching engine serves "
+                f"attention-family decoder-only models; quantize "
+                f"{cfg.family!r} archs via repro.pipeline.cli and run them "
+                f"through model.prefill/decode_step directly"
+            )
 
     if args.load:
         if args.recipe or args.save or args.smoke or args.quantize != "w8a16":
@@ -45,10 +71,12 @@ def main():
                   "--arch/--smoke/--recipe/--quantize/--save are ignored")
         qm = QuantizedModel.load(args.load)
         cfg, model, params = qm.cfg, qm.model, qm.params
+        check_servable(cfg, f"--load {args.load} (arch {cfg.name})")
         print(f"loaded QuantizedModel from {args.load} "
               f"(arch {cfg.name}, recipe {qm.recipe.name!r})")
     else:
         cfg = get_config(args.arch, smoke=args.smoke)
+        check_servable(cfg, f"--arch {args.arch}")
         model = build_model(cfg)
         qm = None
         if args.recipe or args.quantize != "none":
@@ -72,38 +100,47 @@ def main():
             qm.save(args.save)
             print(f"saved QuantizedModel to {args.save}")
 
-    B = args.batch
-    total = args.prompt_len + args.gen_len
-    prompts = calibration_tokens(0, B, args.prompt_len, cfg.vocab_size)
-    cache = model.init_cache(B, total, dtype=jnp.float32)
-    if cfg.is_encdec:
-        frames = jax.random.normal(jax.random.PRNGKey(1), (B, cfg.enc_seq, cfg.d_model))
-        cache = model.warm_cache(params, frames, cache)
+    # ---------------------------------------------------------------- engine
+    C = args.prefill_chunk
+    if args.trace:
+        requests = synthetic_trace(
+            args.trace_seed, args.trace, vocab_size=cfg.vocab_size,
+            prompt_lens=(4, args.prompt_len), gen_lens=(4, args.gen_len),
+            mean_interarrival=1.0,
+        )
+        print(f"trace: {len(requests)} requests, prompt 4..{args.prompt_len}, "
+              f"gen 4..{args.gen_len}, Poisson arrivals")
+    else:
+        prompts = np.asarray(
+            calibration_tokens(0, args.batch, args.prompt_len, cfg.vocab_size)
+        )
+        requests = [
+            Request(rid=i, prompt=prompts[i], max_new_tokens=args.gen_len)
+            for i in range(args.batch)
+        ]
 
-    prefill = jax.jit(model.prefill)
-    decode = jax.jit(model.decode_step)
+    need = max(
+        required_cache_len(len(r.prompt), r.max_new_tokens, C)
+        for r in requests
+    )
+    max_len = args.max_len or need
+    engine = ServingEngine(
+        model, params, cfg, num_slots=args.slots, max_len=max_len,
+        prefill_chunk=C,
+    )
 
     t0 = time.time()
-    logits, cache = prefill(params, prompts, cache)
-    logits.block_until_ready()
-    t_prefill = time.time() - t0
-
-    tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
-    generated = [tok]
-    t0 = time.time()
-    for _ in range(args.gen_len - 1):
-        logits, cache = decode(params, tok, cache)
-        tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
-        generated.append(tok)
-    jnp.concatenate(generated, 1).block_until_ready()
-    t_decode = time.time() - t0
-
-    out = jnp.concatenate(generated, 1)
-    print(f"prefill: {B}×{args.prompt_len} tokens in {t_prefill*1e3:.1f} ms")
-    print(f"decode: {B}×{args.gen_len} tokens in {t_decode*1e3:.1f} ms "
-          f"({B*(args.gen_len-1)/max(t_decode,1e-9):.1f} tok/s)")
-    print("sample token ids:", out[0, :12].tolist())
-    return out
+    results = engine.run(requests)
+    dt = time.time() - t0
+    gen = engine.stats["generated_tokens"]
+    print(f"served {len(results)} requests / {gen} generated tokens "
+          f"in {dt*1e3:.1f} ms ({gen / max(dt, 1e-9):.1f} tok/s)")
+    print(f"engine: {engine.stats['decode_steps']} decode steps, "
+          f"{engine.stats['prefill_chunks']} prefill chunks, "
+          f"mean slot occupancy {engine.mean_occupancy():.2f}")
+    first = results[min(results)]
+    print(f"sample token ids (rid {first.rid}):", first.tokens[:12])
+    return results
 
 
 if __name__ == "__main__":

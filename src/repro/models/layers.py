@@ -185,9 +185,19 @@ def attention_scores_softmax(
         s = jnp.einsum("bqhd,bkhd->bhqk", q, k) * scale
         s = s.astype(jnp.float32)
         if mask is not None:
-            s = jnp.where(mask[None, None], s, NEG_INF)
+            # 2-D [Tq, Tk] shared mask, or 3-D [B, Tq, Tk] per-slot mask
+            # (continuous batching: each batch row is an independent request)
+            m = mask[None, None] if mask.ndim == 2 else mask[:, None]
+            s = jnp.where(m, s, NEG_INF)
         p = jax.nn.softmax(s, axis=-1).astype(q.dtype)
         return jnp.einsum("bhqk,bkhd->bqhd", p, v)
+
+    if mask is not None and mask.ndim == 3:
+        raise NotImplementedError(
+            "per-slot (3-D) masks require the unchunked attention path — "
+            "call without chunk_kv (serving decode/prefill-chunk shapes are "
+            "small enough that chunking buys nothing)"
+        )
 
     n_kv = Tk // chunk_kv
     k_b = k.reshape(B, n_kv, chunk_kv, H, hd).transpose(1, 0, 2, 3, 4)
@@ -347,7 +357,17 @@ def attention_block(
         # cache-stream roofline term halves vs bf16.
         S = cache["k"].shape[1]
         pos = cache["pos"]
-        idx = (pos + jnp.arange(T)) % S
+        # pos may be a scalar (whole-batch serving: every row at the same
+        # offset) or a [B] vector (continuous batching: per-slot offsets, with
+        # kpos then [B, S]). The vector form scatters per row.
+        per_slot = pos.ndim == 1
+        if per_slot:
+            idx = (pos[:, None] + jnp.arange(T)[None, :]) % S      # [B, T]
+            qpos = pos[:, None] + jnp.arange(T)[None, :]           # [B, T]
+            row = jnp.arange(B)[:, None]
+        else:
+            idx = (pos + jnp.arange(T)) % S
+            qpos = pos + jnp.arange(T)
         int8_kv = "k_scale" in cache
         if int8_kv:
             def q8(t):  # [B, T, H, hd] → int8 payload + [B, T, H] scale
@@ -359,26 +379,43 @@ def attention_block(
 
             k_q, k_s = q8(k)
             v_q, v_s = q8(v)
-            ck = cache["k"].at[:, idx].set(k_q)
-            cv = cache["v"].at[:, idx].set(v_q)
-            ks = cache["k_scale"].at[:, idx].set(k_s)
-            vs = cache["v_scale"].at[:, idx].set(v_s)
-            kpos = cache["kpos"].at[idx].set(pos + jnp.arange(T))
+            if per_slot:
+                ck = cache["k"].at[row, idx].set(k_q)
+                cv = cache["v"].at[row, idx].set(v_q)
+                ks = cache["k_scale"].at[row, idx].set(k_s)
+                vs = cache["v_scale"].at[row, idx].set(v_s)
+                kpos = cache["kpos"].at[row, idx].set(qpos)
+            else:
+                ck = cache["k"].at[:, idx].set(k_q)
+                cv = cache["v"].at[:, idx].set(v_q)
+                ks = cache["k_scale"].at[:, idx].set(k_s)
+                vs = cache["v_scale"].at[:, idx].set(v_s)
+                kpos = cache["kpos"].at[idx].set(qpos)
             new_cache = {"k": ck, "v": cv, "k_scale": ks, "v_scale": vs,
                          "kpos": kpos, "pos": pos + T}
             k = (ck.astype(x.dtype) * ks.astype(x.dtype)[..., None])
             v = (cv.astype(x.dtype) * vs.astype(x.dtype)[..., None])
         else:
-            ck = cache["k"].at[:, idx].set(k.astype(cache["k"].dtype))
-            cv = cache["v"].at[:, idx].set(v.astype(cache["v"].dtype))
-            kpos = cache["kpos"].at[idx].set(pos + jnp.arange(T))
+            if per_slot:
+                ck = cache["k"].at[row, idx].set(k.astype(cache["k"].dtype))
+                cv = cache["v"].at[row, idx].set(v.astype(cache["v"].dtype))
+                kpos = cache["kpos"].at[row, idx].set(qpos)
+            else:
+                ck = cache["k"].at[:, idx].set(k.astype(cache["k"].dtype))
+                cv = cache["v"].at[:, idx].set(v.astype(cache["v"].dtype))
+                kpos = cache["kpos"].at[idx].set(qpos)
             new_cache = {"k": ck, "v": cv, "kpos": kpos, "pos": pos + T}
             k, v = ck.astype(x.dtype), cv.astype(x.dtype)
-        qpos = pos + jnp.arange(T)
-        m = (kpos >= 0)[None, :] & (kpos[None, :] <= qpos[:, None])
-        if dims.window is not None:
-            m = m & (kpos[None, :] > qpos[:, None] - dims.window)
-        mask = m  # 2-D [Tq, S]
+        if per_slot:
+            m = (kpos >= 0)[:, None, :] & (kpos[:, None, :] <= qpos[..., None])
+            if dims.window is not None:
+                m = m & (kpos[:, None, :] > qpos[..., None] - dims.window)
+            mask = m  # 3-D [B, Tq, S]
+        else:
+            m = (kpos >= 0)[None, :] & (kpos[None, :] <= qpos[:, None])
+            if dims.window is not None:
+                m = m & (kpos[None, :] > qpos[:, None] - dims.window)
+            mask = m  # 2-D [Tq, S]
     elif cache is not None and kv_input is not None:
         # cross-attention cache: static encoder K/V (computed at prefill)
         k = cache["k"].astype(x.dtype)

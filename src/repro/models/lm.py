@@ -351,9 +351,20 @@ class LMModel:
             return min(seq_len, self.cfg.sliding_window)
         return seq_len
 
-    def init_cache(self, batch: int, seq_len: int, dtype=jnp.bfloat16) -> dict:
+    def init_cache(self, batch: int, seq_len: int, dtype=jnp.bfloat16,
+                   per_slot: bool = False) -> dict:
+        """``per_slot=True`` builds the continuous-batching variant: each
+        batch row is an independent serving slot with its own write offset
+        (``pos`` [B]) and absolute slot positions (``kpos`` [B, S]), so the
+        engine can prefill/retire rows at different sequence positions."""
         cfg = self.cfg
         S = self.cache_len(seq_len)
+        if per_slot and cfg.family in ("ssm", "hybrid"):
+            raise ValueError(
+                f"per-slot caches are only supported for attention-family "
+                f"models (got family={cfg.family!r}); SSM state handoff is "
+                f"position-free but needs dedicated plumbing"
+            )
         if cfg.family == "ssm":
             _, H, G, St, _, d_conv = ssm_dims(cfg)
             return {
@@ -365,8 +376,10 @@ class LMModel:
         kv = {
             "k": jnp.zeros((cfg.n_layers, batch, S, cfg.n_kv_heads, cfg.head_dim), kv_dtype),
             "v": jnp.zeros((cfg.n_layers, batch, S, cfg.n_kv_heads, cfg.head_dim), kv_dtype),
-            "kpos": jnp.full((S,), -1, jnp.int32),
-            "pos": jnp.zeros((), jnp.int32),
+            "kpos": (jnp.full((batch, S), -1, jnp.int32) if per_slot
+                     else jnp.full((S,), -1, jnp.int32)),
+            "pos": (jnp.zeros((batch,), jnp.int32) if per_slot
+                    else jnp.zeros((), jnp.int32)),
         }
         if cfg.kv_cache_bits == 8:
             kv["k_scale"] = jnp.ones((cfg.n_layers, batch, S, cfg.n_kv_heads), jnp.float32)
@@ -384,8 +397,12 @@ class LMModel:
             }
         return kv
 
-    def _forward_cached(self, params, tokens, cache, *, chunk_kv=None):
-        """Shared prefill/decode path: runs T tokens starting at cache['pos']."""
+    def _forward_cached(self, params, tokens, cache, *, chunk_kv=None,
+                        logits_at=None):
+        """Shared prefill/decode path: runs T tokens starting at cache['pos']
+        (scalar, or [B] for per-slot caches). ``logits_at`` selects which
+        position's logits to return (default: the last — chunked-prefill
+        callers pass the final *valid* offset of a padded chunk)."""
         cfg = self.cfg
         compute = jnp.dtype(cfg.dtype)
         params = jax.tree.map(
@@ -394,7 +411,10 @@ class LMModel:
         )
         B, T = tokens.shape
         pos = cache["pos"]
-        positions = pos + jnp.arange(T)
+        if pos.ndim == 1:
+            positions = pos[:, None] + jnp.arange(T)[None, :]   # [B, T]
+        else:
+            positions = pos + jnp.arange(T)
         x = self._embed(params, tokens)
 
         if cfg.family == "ssm":
@@ -480,11 +500,17 @@ class LMModel:
             }
 
         x = apply_norm(x, params["final_norm"], cfg.norm)
-        logits = self._unembed(params, x[:, -1:, :])[:, 0]
+        if logits_at is None:
+            h_last = x[:, -1:, :]
+        else:
+            h_last = jax.lax.dynamic_slice_in_dim(x, logits_at, 1, axis=1)
+        logits = self._unembed(params, h_last)[:, 0]
         return logits, new_cache
 
-    def prefill(self, params, tokens, cache, *, chunk_kv: Optional[int] = None):
-        return self._forward_cached(params, tokens, cache, chunk_kv=chunk_kv)
+    def prefill(self, params, tokens, cache, *, chunk_kv: Optional[int] = None,
+                logits_at=None):
+        return self._forward_cached(params, tokens, cache, chunk_kv=chunk_kv,
+                                    logits_at=logits_at)
 
     def decode_step(self, params, token, cache):
         """token: [B, 1] int32 → (logits [B, V], cache)."""

@@ -1,0 +1,22 @@
+"""Continuous-batching serving for QuantizedModel artifacts.
+
+    engine = ServingEngine.from_quantized(qm, num_slots=8, max_len=128)
+    results = engine.run(synthetic_trace(0, 20, vocab_size=qm.cfg.vocab_size))
+
+See engine.py for the step loop, cache_pool.py for the slot lifecycle.
+"""
+from .cache_pool import CachePool, PoolExhausted
+from .engine import RequestResult, ServingEngine, required_cache_len
+from .scheduler import FIFOScheduler, Request
+from .trace import synthetic_trace
+
+__all__ = [
+    "CachePool",
+    "FIFOScheduler",
+    "PoolExhausted",
+    "Request",
+    "RequestResult",
+    "ServingEngine",
+    "required_cache_len",
+    "synthetic_trace",
+]

@@ -1,0 +1,76 @@
+"""Slot-based KV-cache pool for continuous batching.
+
+The pool owns ONE batched per-slot cache (``models.LMModel.init_cache`` with
+``per_slot=True``): each batch row is a serving slot with its own write
+offset (``pos[i]``) and absolute slot positions (``kpos[i]``). Allocation
+hands out the lowest free slot (deterministic — batch composition, and hence
+the parity tests, don't depend on dict ordering) and resets only the slot's
+*bookkeeping* (kpos → -1, pos → 0): stale K/V payload is left in place
+because every masked key contributes an exact 0 after the NEG_INF softmax,
+so recycled slots are bit-identical to fresh ones.
+"""
+from __future__ import annotations
+
+
+class PoolExhausted(RuntimeError):
+    """allocate() called with no free slot."""
+
+
+class CachePool:
+    def __init__(self, model, num_slots: int, max_len: int, dtype=None):
+        import jax.numpy as jnp
+
+        if num_slots < 1:
+            raise ValueError(f"num_slots must be >= 1, got {num_slots}")
+        self.num_slots = num_slots
+        self.cache: dict = model.init_cache(
+            num_slots, max_len, dtype=(jnp.float32 if dtype is None else dtype),
+            per_slot=True,
+        )
+        # the model may shrink the ring below the requested length (sliding-
+        # window attention: S = min(max_len, window)); capacity checks must
+        # see the REAL ring size or padded prefill chunks could wrap and
+        # clobber keys that are still inside the attention window
+        self.max_len = int(self.cache["kpos"].shape[-1])
+        self._free = set(range(num_slots))
+        self._allocated: set = set()
+
+    # ------------------------------------------------------------- queries
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def n_allocated(self) -> int:
+        return len(self._allocated)
+
+    def is_allocated(self, slot: int) -> bool:
+        return slot in self._allocated
+
+    def all_free(self) -> bool:
+        return not self._allocated and len(self._free) == self.num_slots
+
+    # ----------------------------------------------------------- lifecycle
+    def allocate(self) -> int:
+        """Claim the lowest free slot and reset its bookkeeping."""
+        if not self._free:
+            raise PoolExhausted(
+                f"all {self.num_slots} slots allocated — admit after release()"
+            )
+        slot = min(self._free)
+        self._free.remove(slot)
+        self._allocated.add(slot)
+        self.cache = {
+            **self.cache,
+            "kpos": self.cache["kpos"].at[slot].set(-1),
+            "pos": self.cache["pos"].at[slot].set(0),
+        }
+        return slot
+
+    def release(self, slot: int) -> None:
+        if slot not in self._allocated:
+            raise ValueError(
+                f"slot {slot} is not allocated (double free, or never claimed)"
+            )
+        self._allocated.remove(slot)
+        self._free.add(slot)

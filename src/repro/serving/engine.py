@@ -1,0 +1,283 @@
+"""Continuous-batching serving engine for (quantized) LM models.
+
+One engine step interleaves three phases over a slot-based KV-cache pool:
+
+  1. **admit** — while a slot is free and the FIFO head has arrived, claim a
+     slot (bookkeeping reset only; stale K/V is masked out exactly).
+  2. **chunked prefill** — every admitted-but-unfinished request advances by
+     one fixed-size prompt chunk (batch-1, written into its slot of the
+     pooled cache). The final chunk is zero-padded; pad writes are
+     invalidated (kpos → -1) before the cache is committed, and the first
+     generated token is read from the last *valid* position's logits.
+  3. **batched decode** — one ``decode_step`` over the full slot batch with
+     per-slot positions/masks. Finished requests retire and their slots are
+     immediately reusable; free slots ride along as masked garbage rows
+     (classic padding), which keeps every decode the same compiled shape.
+
+Because each slot's computation is row-independent (masked keys contribute
+exact zeros), a request's tokens are bit-identical whether it is served solo
+or inside a mixed batch — the batch-invariance parity tests pin this down.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .cache_pool import CachePool
+from .scheduler import FIFOScheduler, Request
+
+def required_cache_len(prompt_len: int, max_new_tokens: int,
+                       prefill_chunk: int) -> int:
+    """Ring positions a request needs: the zero-padded prefill chunks (pad
+    writes land before invalidation) and the full decoded context."""
+    padded = -(-prompt_len // prefill_chunk) * prefill_chunk
+    return max(padded, prompt_len + max_new_tokens - 1)
+
+
+# pooled-cache leaves are [L, B, S, ...] except the per-slot bookkeeping
+_SLOT_AXIS = {"kpos": 0, "pos": 0}  # default: axis 1
+
+
+def _slice_slot(cache: dict, slot) -> dict:
+    return {
+        k: jax.lax.dynamic_slice_in_dim(v, slot, 1, _SLOT_AXIS.get(k, 1))
+        for k, v in cache.items()
+    }
+
+
+def _write_slot(cache: dict, sub: dict, slot) -> dict:
+    return {
+        k: jax.lax.dynamic_update_slice_in_dim(
+            cache[k], sub[k].astype(cache[k].dtype), slot, _SLOT_AXIS.get(k, 1)
+        )
+        for k in cache
+    }
+
+
+@dataclasses.dataclass
+class _InFlight:
+    req: Request
+    slot: int
+    admitted_at: float
+    prefilled: int = 0
+    generated: list = dataclasses.field(default_factory=list)
+    cur_token: int = 0
+
+    @property
+    def prefill_done(self) -> bool:
+        return self.prefilled >= len(self.req.prompt)
+
+    @property
+    def done(self) -> bool:
+        return len(self.generated) >= self.req.max_new_tokens
+
+
+@dataclasses.dataclass
+class RequestResult:
+    rid: int
+    prompt_len: int
+    tokens: list  # generated token ids
+    arrival: float
+    admitted_at: float
+    finished_at: float
+
+
+class ServingEngine:
+    """Serve requests against one model + params with continuous batching.
+
+    num_slots: decode batch width (cache pool size).
+    max_len: per-slot ring-buffer capacity; a request needs
+        max(ceil(P/chunk)*chunk, P + G - 1) <= max_len.
+    prefill_chunk: fixed prompt-chunk length (one chunk per prefilling
+        request per engine step — bounds prefill's latency impact on
+        in-flight decodes).
+    """
+
+    def __init__(self, model, params, cfg, *, num_slots: int = 4,
+                 max_len: int = 128, prefill_chunk: int = 16,
+                 cache_dtype=jnp.float32):
+        if cfg.family in ("ssm", "hybrid") or cfg.is_encdec:
+            raise ValueError(
+                f"the serving engine supports attention-family decoder-only "
+                f"models (got {cfg.name!r}, family {cfg.family!r})"
+            )
+        self.model = model
+        self.params = params
+        self.cfg = cfg
+        self.num_slots = num_slots
+        self.prefill_chunk = prefill_chunk
+        self.pool = CachePool(model, num_slots, max_len, dtype=cache_dtype)
+        # may be < the requested max_len (sliding-window ring); admission is
+        # capped at the real ring so wrap-around never clobbers live keys
+        self.max_len = self.pool.max_len
+        self.scheduler = FIFOScheduler()
+        self.clock = 0.0
+        self._inflight: dict[int, _InFlight] = {}
+        self.results: dict[int, RequestResult] = {}
+        self.stats = {
+            "decode_steps": 0,
+            "prefill_chunks": 0,
+            "generated_tokens": 0,
+            # running aggregate, not a per-step list: a long-lived engine
+            # must not grow memory with uptime
+            "occupancy_sum": 0.0,
+            "engine_steps": 0,
+        }
+        self._prefill_fn = jax.jit(self._prefill_chunk_impl)
+        self._decode_fn = jax.jit(self._decode_impl)
+
+    @classmethod
+    def from_quantized(cls, qm, **kwargs) -> "ServingEngine":
+        """Build an engine over a pipeline ``QuantizedModel`` artifact."""
+        return cls(qm.model, qm.params, qm.cfg, **kwargs)
+
+    # -------------------------------------------------------- jitted kernels
+    def _prefill_chunk_impl(self, params, tokens, cache, slot, n_valid):
+        """One batch-1 prompt chunk into `slot` of the pooled cache.
+
+        tokens: [1, C] (zero-padded past n_valid). Pad tokens run through the
+        model — causality keeps them out of every valid position's K/V — and
+        their cache writes are invalidated before commit. Returns the greedy
+        token from the last valid position and the updated pooled cache.
+        """
+        sub = _slice_slot(cache, slot)
+        start = sub["pos"]                                   # [1]
+        logits, sub = self.model.prefill(
+            params, tokens, sub, logits_at=n_valid - 1
+        )
+        end = start + n_valid
+        sub = {
+            **sub,
+            "kpos": jnp.where(sub["kpos"] >= end[:, None], -1, sub["kpos"]),
+            "pos": end,
+        }
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)       # [1]
+        return tok, _write_slot(cache, sub, slot)
+
+    def _decode_impl(self, params, tokens, cache, active):
+        """Full-slot-batch decode. ``active`` [B] marks rows that are really
+        decoding; the rest (free, or mid-prefill) ride along for shape
+        stability, so their bookkeeping write this step — one kpos entry and
+        the pos advance — is rolled back before commit. (Their K/V payload
+        write is harmless: masked by kpos=-1 and overwritten by the slot's
+        next real token at the same ring index.)"""
+        prev_pos = cache["pos"]                              # [B]
+        logits, cache = self.model.decode_step(params, tokens, cache)
+        S = cache["kpos"].shape[1]
+        wrote = jnp.arange(S)[None, :] == (prev_pos % S)[:, None]
+        kpos = jnp.where((~active)[:, None] & wrote, -1, cache["kpos"])
+        pos = jnp.where(active, cache["pos"], prev_pos)
+        cache = {**cache, "kpos": kpos, "pos": pos}
+        return jnp.argmax(logits, -1).astype(jnp.int32), cache
+
+    # ------------------------------------------------------------ lifecycle
+    def submit(self, request: Request) -> None:
+        P, G = len(request.prompt), request.max_new_tokens
+        need = required_cache_len(P, G, self.prefill_chunk)
+        if need > self.max_len:
+            raise ValueError(
+                f"request {request.rid}: needs {need} cache positions "
+                f"(prompt {P}, gen {G}, chunk {self.prefill_chunk}) "
+                f"but max_len={self.max_len}"
+            )
+        self.scheduler.submit(request)
+
+    def _admit(self) -> None:
+        while self.pool.n_free:
+            req = self.scheduler.pop_ready(self.clock)
+            if req is None:
+                return
+            slot = self.pool.allocate()
+            self._inflight[slot] = _InFlight(
+                req=req, slot=slot, admitted_at=self.clock
+            )
+
+    def _retire(self, fl: _InFlight) -> None:
+        self.results[fl.req.rid] = RequestResult(
+            rid=fl.req.rid,
+            prompt_len=len(fl.req.prompt),
+            tokens=list(fl.generated),
+            arrival=fl.req.arrival,
+            admitted_at=fl.admitted_at,
+            finished_at=self.clock,
+        )
+        del self._inflight[fl.slot]
+        self.pool.release(fl.slot)
+
+    def _prefill_phase(self) -> None:
+        C = self.prefill_chunk
+        for slot in sorted(self._inflight):
+            fl = self._inflight[slot]
+            if fl.prefill_done:
+                continue
+            prompt = np.asarray(fl.req.prompt, np.int32)
+            n = min(C, len(prompt) - fl.prefilled)
+            chunk = np.zeros((1, C), np.int32)
+            chunk[0, :n] = prompt[fl.prefilled:fl.prefilled + n]
+            tok, self.pool.cache = self._prefill_fn(
+                self.params, jnp.asarray(chunk), self.pool.cache,
+                jnp.int32(slot), jnp.int32(n),
+            )
+            fl.prefilled += n
+            self.stats["prefill_chunks"] += 1
+            if fl.prefill_done:
+                first = int(tok[0])
+                fl.generated.append(first)
+                fl.cur_token = first
+                self.stats["generated_tokens"] += 1
+                if fl.done:
+                    self._retire(fl)
+
+    def _decode_phase(self) -> None:
+        active = [fl for fl in self._inflight.values()
+                  if fl.prefill_done and not fl.done]
+        if not active:
+            return
+        tokens = np.zeros((self.num_slots, 1), np.int32)
+        active_mask = np.zeros((self.num_slots,), bool)
+        for fl in active:
+            tokens[fl.slot, 0] = fl.cur_token
+            active_mask[fl.slot] = True
+        next_tok, self.pool.cache = self._decode_fn(
+            self.params, jnp.asarray(tokens), self.pool.cache,
+            jnp.asarray(active_mask),
+        )
+        next_np = np.asarray(next_tok)
+        self.stats["decode_steps"] += 1
+        for fl in active:
+            tok = int(next_np[fl.slot])
+            fl.generated.append(tok)
+            fl.cur_token = tok
+            self.stats["generated_tokens"] += 1
+            if fl.done:
+                self._retire(fl)
+
+    def step(self) -> None:
+        """One engine iteration: admit → chunked prefill → batched decode."""
+        self._admit()
+        self.stats["occupancy_sum"] += len(self._inflight) / self.num_slots
+        self.stats["engine_steps"] += 1
+        self._prefill_phase()
+        self._decode_phase()
+        self.clock += 1.0
+
+    def run(self, requests: Optional[Sequence[Request]] = None
+            ) -> dict[int, RequestResult]:
+        """Submit ``requests`` (if given), step until fully drained, and
+        return — draining ``self.results`` so a long-lived engine doesn't
+        retain every request it ever served."""
+        for r in requests or ():
+            self.submit(r)
+        while self.scheduler.pending() or self._inflight:
+            self.step()
+        out, self.results = self.results, {}
+        return out
+
+    # ------------------------------------------------------------- metrics
+    def mean_occupancy(self) -> float:
+        steps = self.stats["engine_steps"]
+        return self.stats["occupancy_sum"] / steps if steps else 0.0

@@ -1,0 +1,65 @@
+"""Request model + FIFO admission scheduler for the serving engine.
+
+Admission is strictly first-come-first-served: a request is admitted only
+when it is at the head of the queue, its arrival time has passed, and a
+cache slot is free. Head-of-line order is the property the scheduler tests
+pin down — later requests never jump an earlier one, even when the earlier
+one needs a slot and they would fit elsewhere.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+from typing import Optional, Sequence
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request.
+
+    prompt: token ids (any int sequence / 1-D array), length >= 1.
+    max_new_tokens: number of tokens to generate (>= 1); the first one comes
+        from the final prefill logits, the rest from decode steps.
+    arrival: engine-clock timestamp (steps) before which the request is
+        invisible to admission.
+    """
+
+    rid: int
+    prompt: Sequence[int]
+    max_new_tokens: int
+    arrival: float = 0.0
+
+    def __post_init__(self):
+        if len(self.prompt) < 1:
+            raise ValueError(f"request {self.rid}: empty prompt")
+        if self.max_new_tokens < 1:
+            raise ValueError(f"request {self.rid}: max_new_tokens must be >= 1")
+
+
+class FIFOScheduler:
+    def __init__(self):
+        self._queue: collections.deque[Request] = collections.deque()
+        # admission diagnostics (FIFO-order test anchor) — bounded so a
+        # long-lived engine doesn't grow memory with every request served
+        self.admitted_order: collections.deque[int] = collections.deque(
+            maxlen=4096
+        )
+
+    def submit(self, request: Request) -> None:
+        self._queue.append(request)
+
+    def pending(self) -> int:
+        return len(self._queue)
+
+    def peek_arrival(self) -> Optional[float]:
+        """Arrival time of the queue head (None when empty)."""
+        return self._queue[0].arrival if self._queue else None
+
+    def pop_ready(self, now: float) -> Optional[Request]:
+        """Admit the head request iff it has arrived; FIFO means nothing
+        behind a not-yet-arrived head is considered."""
+        if self._queue and self._queue[0].arrival <= now:
+            req = self._queue.popleft()
+            self.admitted_order.append(req.rid)
+            return req
+        return None

@@ -1,0 +1,192 @@
+"""Continuous-batching engine tests.
+
+The anchor is batch invariance: a request decoded solo must produce
+bit-identical token ids to the same request served inside a mixed continuous
+batch — for fp32 AND the serve-w8a16 recipe. Plus: end-to-end regression
+through save/load, engine bookkeeping, and a slow randomized soak.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+import repro
+from repro.configs import get_config
+from repro.models import build_model
+from repro.serving import Request, ServingEngine, synthetic_trace
+
+ARCH = "qwen2-0.5b"
+
+
+@pytest.fixture(scope="module")
+def fp32_setup():
+    cfg = get_config(ARCH, smoke=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return model, params, cfg
+
+
+@pytest.fixture(scope="module")
+def w8a16_setup(fp32_setup):
+    model, params, cfg = fp32_setup
+    qm = repro.quantize(model, params=params, recipe="serve-w8a16")
+    return qm
+
+
+def _mixed_trace(vocab):
+    rng = np.random.RandomState(7)
+    lens = [(5, 6), (12, 3), (3, 1), (9, 8)]  # includes a gen-at-prefill edge
+    return [
+        Request(rid=i, prompt=rng.randint(0, vocab, size=p).astype(np.int32),
+                max_new_tokens=g)
+        for i, (p, g) in enumerate(lens)
+    ]
+
+
+def _engine(model, params, cfg, **kw):
+    kw.setdefault("num_slots", 2)   # < len(trace): forces slot recycling
+    kw.setdefault("max_len", 32)
+    kw.setdefault("prefill_chunk", 8)
+    return ServingEngine(model, params, cfg, **kw)
+
+
+# ------------------------------------------------------------------- parity
+
+@pytest.mark.parametrize("variant", ["fp32", "serve-w8a16"])
+def test_batch_invariance_parity(variant, fp32_setup, w8a16_setup, request):
+    """Solo-decoded tokens == tokens from a mixed continuous batch, bit for
+    bit (same slot pool, so identical compiled shapes either way)."""
+    if variant == "fp32":
+        model, params, cfg = fp32_setup
+    else:
+        qm = w8a16_setup
+        model, params, cfg = qm.model, qm.params, qm.cfg
+    trace = _mixed_trace(cfg.vocab_size)
+
+    mixed = _engine(model, params, cfg).run(trace)
+    assert sorted(mixed) == [0, 1, 2, 3]
+
+    solo_engine = _engine(model, params, cfg)  # reused (drained) per request
+    for r in trace:
+        solo = solo_engine.run([dataclasses.replace(r)])
+        assert solo[r.rid].tokens == mixed[r.rid].tokens, (
+            f"{variant}: rid {r.rid} diverged between solo and mixed batch"
+        )
+        assert len(solo[r.rid].tokens) == r.max_new_tokens
+        assert solo_engine.pool.all_free()
+
+
+@pytest.mark.parametrize("variant", ["fp32", "serve-w8a16"])
+def test_engine_matches_naive_prefill_decode_oracle(
+        variant, fp32_setup, w8a16_setup):
+    """Independent ground truth: the engine's tokens for each request must
+    equal a plain whole-prompt ``model.prefill`` + scalar-pos ``decode_step``
+    loop (the pre-engine serving path) — this anchors chunked prefill, pad
+    invalidation, logits_at, and the decode bookkeeping rollback against a
+    code path that shares none of them."""
+    import jax.numpy as jnp
+
+    if variant == "fp32":
+        model, params, cfg = fp32_setup
+    else:
+        qm = w8a16_setup
+        model, params, cfg = qm.model, qm.params, qm.cfg
+    trace = _mixed_trace(cfg.vocab_size)
+    served = _engine(model, params, cfg).run(trace)
+
+    for r in trace:
+        cache = model.init_cache(1, 32, dtype=jnp.float32)
+        prompt = np.asarray(r.prompt, np.int32)[None, :]
+        logits, cache = model.prefill(params, prompt, cache)
+        toks = [int(jnp.argmax(logits, -1)[0])]
+        while len(toks) < r.max_new_tokens:
+            logits, cache = model.decode_step(
+                params, jnp.asarray([[toks[-1]]], jnp.int32), cache)
+            toks.append(int(jnp.argmax(logits, -1)[0]))
+        assert served[r.rid].tokens == toks, (
+            f"{variant}: rid {r.rid} diverged from the naive serving oracle"
+        )
+
+
+# ------------------------------------------------------- e2e save/load serve
+
+def test_quantize_save_load_engine_round_trip(w8a16_setup, tmp_path):
+    """quantize() → save → QuantizedModel.load → engine serve must produce
+    the same tokens as serving the in-memory artifact."""
+    from repro.pipeline import QuantizedModel
+
+    qm = w8a16_setup
+    trace = _mixed_trace(qm.cfg.vocab_size)
+    mem = ServingEngine.from_quantized(
+        qm, num_slots=2, max_len=32, prefill_chunk=8).run(trace)
+
+    qm.save(str(tmp_path / "artifact"))
+    qm2 = QuantizedModel.load(str(tmp_path / "artifact"))
+    disk = ServingEngine.from_quantized(
+        qm2, num_slots=2, max_len=32, prefill_chunk=8).run(trace)
+
+    assert {r: v.tokens for r, v in mem.items()} == \
+           {r: v.tokens for r, v in disk.items()}
+
+
+# -------------------------------------------------------------- bookkeeping
+
+def test_engine_drains_and_tracks_occupancy(fp32_setup):
+    model, params, cfg = fp32_setup
+    eng = _engine(model, params, cfg)
+    res = eng.run(_mixed_trace(cfg.vocab_size))
+    assert eng.pool.all_free()
+    assert list(eng.scheduler.admitted_order) == [0, 1, 2, 3]
+    assert 0.0 < eng.mean_occupancy() <= 1.0
+    assert eng.stats["generated_tokens"] == sum(
+        len(v.tokens) for v in res.values())
+    assert all(v.finished_at >= v.admitted_at >= v.arrival
+               for v in res.values())
+
+
+def test_engine_rejects_oversized_request(fp32_setup):
+    model, params, cfg = fp32_setup
+    eng = _engine(model, params, cfg, max_len=16)
+    with pytest.raises(ValueError, match="cache positions"):
+        eng.submit(Request(rid=0, prompt=[1] * 12, max_new_tokens=8))
+
+
+def test_engine_caps_capacity_at_sliding_window_ring():
+    """init_cache shrinks the ring to the SWA window; admission must
+    validate against the REAL ring, or padded prefill wrap-around would
+    clobber keys still inside the attention window."""
+    cfg = get_config("mixtral-8x22b", smoke=True)  # smoke window = 16
+    eng = ServingEngine(build_model(cfg), None, cfg, num_slots=2,
+                        max_len=64, prefill_chunk=8)
+    assert eng.max_len == 16 == eng.pool.max_len
+    with pytest.raises(ValueError, match="cache positions"):
+        eng.submit(Request(rid=0, prompt=[1] * 10, max_new_tokens=10))
+
+
+def test_engine_rejects_attention_free_families():
+    cfg = get_config("mamba2-2.7b", smoke=True)
+    with pytest.raises(ValueError, match="attention-family"):
+        ServingEngine(None, None, cfg)
+
+
+# -------------------------------------------------------------------- soak
+
+@pytest.mark.slow
+def test_engine_soak_randomized_arrivals(fp32_setup):
+    """N=200 randomized arrivals through a small pool: every request
+    completes with its exact token budget, FIFO order holds, pool drains."""
+    model, params, cfg = fp32_setup
+    trace = synthetic_trace(
+        42, 200, vocab_size=cfg.vocab_size,
+        prompt_lens=(2, 12), gen_lens=(1, 8), mean_interarrival=0.3,
+    )
+    eng = ServingEngine(model, params, cfg, num_slots=8, max_len=32,
+                        prefill_chunk=8)
+    res = eng.run(trace)
+    assert sorted(res) == list(range(200))
+    for r in trace:
+        assert len(res[r.rid].tokens) == r.max_new_tokens
+    assert list(eng.scheduler.admitted_order) == list(range(200))
+    assert eng.pool.all_free()
+    assert eng.mean_occupancy() > 0.3

@@ -1,0 +1,154 @@
+"""Scheduler + cache-pool unit and property tests (no model forward).
+
+The property tests drive FIFOScheduler + CachePool through randomized
+admit/complete interleavings (hypothesis via tests/_hyp.py — exact-stub
+fallback keeps them green without the dependency) and pin the engine's
+bookkeeping invariants: FIFO admission order, no slot double-allocation,
+every admitted request completes, pool fully free after drain.
+"""
+import jax.numpy as jnp
+import pytest
+
+from _hyp import given, settings, st
+from repro.serving import CachePool, FIFOScheduler, PoolExhausted, Request
+from repro.serving.scheduler import Request as SchedRequest
+
+
+class _StubModel:
+    """Just enough of LMModel for CachePool: the per-slot bookkeeping."""
+
+    def init_cache(self, batch, seq_len, dtype=None, per_slot=False):
+        assert per_slot
+        return {
+            "k": jnp.zeros((1, batch, seq_len, 1, 1)),
+            "kpos": jnp.full((batch, seq_len), -1, jnp.int32),
+            "pos": jnp.zeros((batch,), jnp.int32),
+        }
+
+
+def _pool(n=4, s=8):
+    return CachePool(_StubModel(), n, s)
+
+
+# ------------------------------------------------------------------ requests
+
+def test_request_validation():
+    with pytest.raises(ValueError, match="empty prompt"):
+        Request(rid=0, prompt=[], max_new_tokens=1)
+    with pytest.raises(ValueError, match="max_new_tokens"):
+        Request(rid=0, prompt=[1], max_new_tokens=0)
+
+
+# ----------------------------------------------------------------- scheduler
+
+def test_fifo_pop_order():
+    sched = FIFOScheduler()
+    for i in range(5):
+        sched.submit(Request(rid=i, prompt=[1], max_new_tokens=1))
+    popped = [sched.pop_ready(now=0.0).rid for _ in range(5)]
+    assert popped == [0, 1, 2, 3, 4]
+    assert sched.pop_ready(now=0.0) is None
+    assert list(sched.admitted_order) == [0, 1, 2, 3, 4]
+
+
+def test_fifo_head_of_line_arrival_gating():
+    """A not-yet-arrived head blocks everything behind it (strict FIFO)."""
+    sched = FIFOScheduler()
+    sched.submit(Request(rid=0, prompt=[1], max_new_tokens=1, arrival=5.0))
+    sched.submit(Request(rid=1, prompt=[1], max_new_tokens=1, arrival=0.0))
+    assert sched.pop_ready(now=0.0) is None
+    assert sched.peek_arrival() == 5.0
+    assert sched.pop_ready(now=5.0).rid == 0
+    assert sched.pop_ready(now=5.0).rid == 1
+
+
+# ---------------------------------------------------------------- cache pool
+
+def test_pool_allocates_lowest_free_slot():
+    pool = _pool(n=3)
+    assert [pool.allocate() for _ in range(3)] == [0, 1, 2]
+    pool.release(1)
+    pool.release(0)
+    assert pool.allocate() == 0  # lowest free, not LIFO
+    assert pool.n_free == 1 and pool.n_allocated == 2
+
+
+def test_pool_exhaustion_and_double_free():
+    pool = _pool(n=2)
+    pool.allocate(), pool.allocate()
+    with pytest.raises(PoolExhausted):
+        pool.allocate()
+    pool.release(0)
+    with pytest.raises(ValueError, match="not allocated"):
+        pool.release(0)
+    with pytest.raises(ValueError, match="not allocated"):
+        pool.release(1 + 1)  # never claimed
+
+
+def test_pool_reset_clears_only_the_claimed_slot():
+    pool = _pool(n=3, s=4)
+    # dirty every slot's bookkeeping
+    pool.cache = {
+        **pool.cache,
+        "kpos": jnp.full((3, 4), 7, jnp.int32),
+        "pos": jnp.full((3,), 9, jnp.int32),
+    }
+    slot = pool.allocate()
+    assert slot == 0
+    assert pool.cache["kpos"][0].tolist() == [-1] * 4
+    assert int(pool.cache["pos"][0]) == 0
+    assert pool.cache["kpos"][1].tolist() == [7] * 4  # untouched
+    assert int(pool.cache["pos"][2]) == 9
+
+
+# ----------------------------------------------------- property: full drain
+
+@settings(max_examples=25, deadline=None)
+@given(
+    num_slots=st.integers(1, 6),
+    n_requests=st.integers(0, 30),
+    seed=st.integers(0, 2**16),
+)
+def test_admit_complete_drain_invariants(num_slots, n_requests, seed):
+    """Randomized admit/complete interleaving of a FIFO queue over a pool:
+    admission order == submission order, slots never double-allocated,
+    every request completes, and the pool returns to fully-free."""
+    import random
+
+    rng = random.Random(seed)
+    sched = FIFOScheduler()
+    pool = _pool(n=num_slots)
+    for i in range(n_requests):
+        sched.submit(SchedRequest(
+            rid=i, prompt=[1] * rng.randint(1, 5),
+            max_new_tokens=rng.randint(1, 6),
+            arrival=float(rng.randint(0, 10)),
+        ))
+
+    inflight = {}   # slot -> [rid, remaining_steps]
+    completed = []
+    now, max_ticks = 0.0, 10_000
+    while (sched.pending() or inflight) and max_ticks:
+        max_ticks -= 1
+        while pool.n_free:
+            req = sched.pop_ready(now)
+            if req is None:
+                break
+            slot = pool.allocate()
+            assert slot not in inflight, "slot double-allocated"
+            assert pool.cache["kpos"][slot].tolist() == [-1] * pool.max_len
+            inflight[slot] = [req.rid, req.max_new_tokens]
+        assert pool.n_allocated == len(inflight) <= num_slots
+        # advance a random subset (at least one) of in-flight requests
+        for slot in sorted(inflight):
+            if inflight and rng.random() < 0.7:
+                inflight[slot][1] -= 1
+        for slot in [s for s, (_, rem) in inflight.items() if rem <= 0]:
+            completed.append(inflight.pop(slot)[0])
+            pool.release(slot)
+        now += 1.0
+
+    assert max_ticks > 0, "simulation did not drain"
+    assert sorted(completed) == list(range(n_requests))
+    assert list(sched.admitted_order) == list(range(n_requests))  # strict FIFO
+    assert pool.all_free()
