@@ -2,11 +2,15 @@
 
 Prints ``name,us_per_call,derived`` CSV rows. Accuracy tables emit their
 metric in the ``derived`` column with us_per_call as the wall time of the
-full table evaluation.
+full table evaluation. The serving benchmark additionally persists a
+machine-readable ``BENCH_serve.json`` (tok/s, speedups, occupancy, host-sync
+and dispatch counts per token) so the serving-perf trajectory is tracked
+across PRs — CI uploads it as an artifact.
 """
 from __future__ import annotations
 
 import argparse
+import functools
 import time
 
 
@@ -19,7 +23,11 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     help="comma-separated benchmark names to run")
     ap.add_argument("--skip-lm", action="store_true",
-                    help="skip the (slower) LM-family DFQ benchmarks")
+                    help="skip the (slower) LM-family DFQ and serving "
+                         "benchmarks")
+    ap.add_argument("--serve-json", default=None, metavar="PATH",
+                    help="where serve_engine persists BENCH_serve.json "
+                         "(default: benchmarks/BENCH_serve.json)")
     args, _ = ap.parse_known_args()
 
     from .kernels_bench import kernel_rows
@@ -34,11 +42,16 @@ def main() -> None:
         from .serve_engine import serve_rows
 
         benches["lm_dfq"] = lm_dfq_all
-        benches["serve_engine"] = serve_rows
+        benches["serve_engine"] = functools.partial(
+            serve_rows, json_path=args.serve_json)
 
     selected = benches
     if args.only:
         keys = args.only.split(",")
+        unknown = [k for k in keys if k not in benches]
+        if unknown:
+            ap.error(f"unknown benchmark(s) {unknown}; available with the "
+                     f"current flags: {sorted(benches)}")
         selected = {k: benches[k] for k in keys}
 
     print("name,us_per_call,derived")

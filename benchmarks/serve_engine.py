@@ -1,26 +1,45 @@
-"""Continuous-batching engine vs the static whole-batch serving baseline.
+"""Serving-engine benchmark: scheduling policy AND execution path.
 
-Both paths share the same per-slot cache machinery and chunked prefill, so
-the comparison isolates the scheduling policy:
+Two orthogonal comparisons, all sharing the per-slot cache machinery (so
+each axis is isolated):
 
-  * **static** — every request gets its own lane up front (num_slots = N);
-    lanes are never recycled, so the decode batch stays N-wide until the
-    longest request finishes (the pre-engine ``launch/serve.py`` behavior,
-    generalized to mixed lengths).
-  * **engine** — a fixed pool of K << N slots with FIFO admission; finished
-    requests retire and their slots are immediately refilled, so the decode
-    batch stays small and busy.
+  * **scheduling** — the continuous-batching engine (fixed pool of K << N
+    slots, FIFO admission, slot recycling) vs the **static** whole-batch
+    baseline (every request gets its own lane up front; the decode batch
+    stays N-wide until the longest request finishes). On a skewed
+    log-uniform trace the static batch decays to a nearly-empty wide batch
+    while the engine keeps occupancy high.
+  * **execution** — the engine's device-resident **fast** path (fused
+    decode horizons, batched multi-slot prefill, donated pooled cache) vs
+    the stepwise **slow** reference (one dispatch + one host sync per
+    generated token), swept over ``--decode-horizon``.
 
-On a skewed mixed-length trace (log-uniform lengths: many short requests, a
-few long) the static batch decays to a nearly-empty wide batch while the
-engine keeps occupancy high — that is the tokens/s gap reported here, plus
-the KV-memory gap (K vs N live slots).
+Each comparison runs on the regime it targets, over two traces per variant:
+
+  * **mixed** — skewed log-uniform lengths, high slot churn: the
+    continuous-batching stress case (headline for the scheduling win; the
+    adaptive horizon spends much of its time capped by imminent
+    retire/admit/prefill events, so sync amortization is modest here).
+  * **steady** — one wave of uniform decode-heavy requests: the classic
+    serving-throughput regime where fused horizons amortize fully (headline
+    for the host-sync reduction).
+
+Every variant must emit bit-identical tokens per trace — the parity assert
+is the whole contract of the fast path.
+
+Results are persisted to ``BENCH_serve.json`` (tok/s, speedups, occupancy,
+host-sync and dispatch counts per token) so the perf trajectory is tracked
+across PRs.
 
     PYTHONPATH=src python benchmarks/serve_engine.py
+    PYTHONPATH=src python benchmarks/serve_engine.py --smoke   # tiny dims (CI)
 """
 from __future__ import annotations
 
+import argparse
 import dataclasses
+import json
+import pathlib
 import time
 
 import jax
@@ -30,89 +49,221 @@ from repro.configs import get_config
 from repro.models import build_model
 from repro.serving import ServingEngine, synthetic_trace
 
-# mid-size config: big enough that decode cost scales with batch width on
-# CPU (smoke dims are dispatch-bound, which would mask the scheduling win)
-CFG = dataclasses.replace(
-    get_config("qwen2-0.5b", smoke=True),
-    name="qwen2-serve-bench",
-    n_layers=4, d_model=256, n_heads=8, head_dim=32, n_kv_heads=2,
-    d_ff=1024, vocab_size=2048, max_seq=256,
-)
+DEFAULT_JSON = pathlib.Path(__file__).resolve().parent / "BENCH_serve.json"
 
-N_REQUESTS = 24
-SLOTS = 8
-PREFILL_CHUNK = 16
-PROMPT_LENS = (4, 32)
-GEN_LENS = (4, 64)
+HORIZONS = (1, 4, 8)
 
 
-def _run(engine: ServingEngine, trace) -> dict:
-    """Serve ``trace`` on a warmed engine; returns tokens/s + occupancy."""
-    gen0 = engine.stats["generated_tokens"]
-    steps0 = engine.stats["decode_steps"]
-    occ0 = engine.stats["occupancy_sum"]
-    esteps0 = engine.stats["engine_steps"]
-    t0 = time.perf_counter()
-    results = engine.run(trace)
-    dt = time.perf_counter() - t0
-    esteps = engine.stats["engine_steps"] - esteps0
-    return {
-        "tok_s": (engine.stats["generated_tokens"] - gen0) / dt,
-        "decode_steps": engine.stats["decode_steps"] - steps0,
-        "occupancy": (engine.stats["occupancy_sum"] - occ0) / max(esteps, 1),
-        "seconds": dt,
-        "tokens": {r.rid: tuple(r.tokens) for r in results.values()},
+def make_setup(smoke: bool) -> dict:
+    """Benchmark dims. Default: mid-size so decode cost scales with batch
+    width on CPU (pure smoke dims are dispatch-bound, which would mask the
+    scheduling win). ``smoke``: tiny dims for the CI smoke-benchmark job."""
+    if smoke:
+        cfg = dataclasses.replace(
+            get_config("qwen2-0.5b", smoke=True),
+            name="qwen2-serve-bench-smoke",
+        )
+        return {"cfg": cfg, "n_requests": 8, "slots": 4, "prefill_chunk": 8,
+                "prompt_lens": (4, 16), "gen_lens": (4, 24),
+                "steady_prompt": 8, "steady_gen": 25, "max_len": 48}
+    cfg = dataclasses.replace(
+        get_config("qwen2-0.5b", smoke=True),
+        name="qwen2-serve-bench",
+        n_layers=4, d_model=256, n_heads=8, head_dim=32, n_kv_heads=2,
+        d_ff=1024, vocab_size=2048, max_seq=256,
+    )
+    # max_len fits max(ceil(32/16)*16, 32+64-1) and steady 16+81-1
+    return {"cfg": cfg, "n_requests": 24, "slots": 8, "prefill_chunk": 16,
+            "prompt_lens": (4, 32), "gen_lens": (4, 64),
+            "steady_prompt": 16, "steady_gen": 81, "max_len": 96}
+
+
+def _run(engine: ServingEngine, trace, repeats: int = 2) -> dict:
+    """Serve ``trace`` ``repeats`` times on a warmed engine; returns the
+    best-timed run's tokens/s (CPU wall noise) + efficiency counters
+    (per-token host syncs and device dispatches). Repeats double as a
+    determinism check — every run must produce identical tokens."""
+    best = None
+    for _ in range(repeats):
+        base = dict(engine.stats)
+        t0 = time.perf_counter()
+        results = engine.run([dataclasses.replace(r) for r in trace])
+        dt = time.perf_counter() - t0
+        d = {k: engine.stats[k] - base[k] for k in base}
+        gen = max(d["generated_tokens"], 1)
+        row = {
+            "tok_s": d["generated_tokens"] / dt,
+            "seconds": dt,
+            "decode_steps": d["decode_steps"],
+            "occupancy": d["occupancy_sum"] / max(d["engine_steps"], 1),
+            "host_syncs_per_token": d["host_syncs"] / gen,
+            "dispatches_per_token":
+                (d["decode_dispatches"] + d["prefill_dispatches"]) / gen,
+            "tokens": {r.rid: tuple(r.tokens) for r in results.values()},
+        }
+        if best is not None:
+            assert row["tokens"] == best["tokens"], "non-deterministic serve"
+        if best is None or row["tok_s"] > best["tok_s"]:
+            best = row
+    return best
+
+
+def bench_variant(label: str, model, params, setup: dict) -> dict:
+    """All scheduling/execution variants for one (model, params), over the
+    mixed (churny) and steady (decode-dominant) traces; asserts bit-exact
+    token parity across the board."""
+    cfg = setup["cfg"]
+    traces = {
+        "mixed": synthetic_trace(
+            0, setup["n_requests"], vocab_size=cfg.vocab_size,
+            prompt_lens=setup["prompt_lens"], gen_lens=setup["gen_lens"]),
+        "steady": synthetic_trace(
+            0, setup["slots"], vocab_size=cfg.vocab_size,
+            prompt_lens=(setup["steady_prompt"],) * 2,
+            gen_lens=(setup["steady_gen"],) * 2),
     }
 
-
-def bench_variant(label: str, model, params, max_len: int) -> dict:
-    warmup = synthetic_trace(1, 4, vocab_size=CFG.vocab_size,
-                             prompt_lens=PROMPT_LENS, gen_lens=(4, 8))
-    trace = synthetic_trace(0, N_REQUESTS, vocab_size=CFG.vocab_size,
-                            prompt_lens=PROMPT_LENS, gen_lens=GEN_LENS)
-
+    variants = {"static": dict(num_slots=setup["n_requests"], fast=True),
+                "slow": dict(num_slots=setup["slots"], fast=False)}
+    for h in HORIZONS:
+        variants[f"fast_h{h}"] = dict(num_slots=setup["slots"], fast=True,
+                                      decode_horizon=h)
     rows = {}
-    for mode, slots in (("static", N_REQUESTS), ("engine", SLOTS)):
-        eng = ServingEngine(model, params, CFG, num_slots=slots,
-                            max_len=max_len, prefill_chunk=PREFILL_CHUNK)
-        eng.run([dataclasses.replace(r, rid=1000 + r.rid) for r in warmup])
-        rows[mode] = _run(eng, trace)
-    # parity guard: both scheduling policies must emit identical tokens
-    assert rows["static"]["tokens"] == rows["engine"]["tokens"], (
-        "scheduling policy changed generated tokens — batch invariance broken"
-    )
-    speedup = rows["engine"]["tok_s"] / rows["static"]["tok_s"]
-    print(f"{label:12s} engine {rows['engine']['tok_s']:8.1f} tok/s "
-          f"(occ {rows['engine']['occupancy']:.2f}, "
-          f"{rows['engine']['decode_steps']} steps, {SLOTS} slots)  |  "
-          f"static {rows['static']['tok_s']:8.1f} tok/s "
-          f"(occ {rows['static']['occupancy']:.2f}, "
-          f"{rows['static']['decode_steps']} steps, {N_REQUESTS} slots)  |  "
-          f"{speedup:.2f}x")
-    return {"label": label, "speedup": speedup, **rows["engine"]}
+    for mode, kw in variants.items():
+        eng = ServingEngine(model, params, cfg, max_len=setup["max_len"],
+                            prefill_chunk=setup["prefill_chunk"], **kw)
+        eng.warmup()   # compile all pow2 prefill/horizon shapes up front
+        rows[mode] = {tname: _run(eng, trace)
+                      for tname, trace in traces.items()}
+    # parity guard: neither the scheduling policy nor the execution path may
+    # change a single generated token
+    for tname in traces:
+        ref = rows["slow"][tname]["tokens"]
+        for mode in rows:
+            assert rows[mode][tname]["tokens"] == ref, (
+                f"{label}/{mode}/{tname}: generated tokens diverged from "
+                f"the stepwise reference — fast-path/batch invariance broken"
+            )
+    for mode in rows:
+        for tname in traces:
+            del rows[mode][tname]["tokens"]
+
+    best = f"fast_h{max(HORIZONS)}"
+
+    def best_fast(tname):   # best horizon of the sweep, per trace
+        return max(rows[f"fast_h{h}"][tname]["tok_s"] for h in HORIZONS)
+
+    out = {
+        "label": label,
+        "variants": rows,
+        # headline numbers, each on the regime its optimization targets;
+        # tok/s speedups take the sweep's best horizon (that is what the
+        # sweep is for), sync reductions are pinned at horizon 8
+        "speedup_fast_vs_slow_mixed":
+            best_fast("mixed") / rows["slow"]["mixed"]["tok_s"],
+        "speedup_fast_vs_slow_steady":
+            best_fast("steady") / rows["slow"]["steady"]["tok_s"],
+        "speedup_engine_vs_static_mixed":
+            rows[best]["mixed"]["tok_s"] / rows["static"]["mixed"]["tok_s"],
+        "sync_reduction_steady_h8":
+            rows["slow"]["steady"]["host_syncs_per_token"]
+            / max(rows[best]["steady"]["host_syncs_per_token"], 1e-9),
+        "sync_reduction_mixed_h8":
+            rows["slow"]["mixed"]["host_syncs_per_token"]
+            / max(rows[best]["mixed"]["host_syncs_per_token"], 1e-9),
+    }
+    print(f"{label}:")
+    for tname in traces:
+        s, f = rows["slow"][tname], rows[best][tname]
+        print(f"  {tname:6s} slow {s['tok_s']:8.1f} tok/s "
+              f"({s['host_syncs_per_token']:.3f} syncs/tok)  |  "
+              f"fast(h={max(HORIZONS)}) {f['tok_s']:8.1f} tok/s "
+              f"({f['host_syncs_per_token']:.3f} syncs/tok)  |  "
+              f"{f['tok_s'] / s['tok_s']:.2f}x tok/s, "
+              f"{s['host_syncs_per_token'] / max(f['host_syncs_per_token'], 1e-9):.1f}x fewer syncs")
+    print(f"  engine vs static (mixed): "
+          f"{out['speedup_engine_vs_static_mixed']:.2f}x tok/s at "
+          f"occ {rows[best]['mixed']['occupancy']:.2f} vs "
+          f"{rows['static']['mixed']['occupancy']:.2f} "
+          f"with {setup['slots']} vs {setup['n_requests']} live KV slots")
+    for h in HORIZONS:
+        r = rows[f"fast_h{h}"]
+        print(f"    h={h}: steady {r['steady']['tok_s']:8.1f} tok/s "
+              f"({r['steady']['host_syncs_per_token']:.3f} syncs/tok), "
+              f"mixed {r['mixed']['tok_s']:8.1f} tok/s "
+              f"({r['mixed']['host_syncs_per_token']:.3f} syncs/tok)")
+    return out
 
 
-def main():
-    model = build_model(CFG)
+def main(argv=None) -> list[dict]:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny dims for the CI smoke-benchmark job")
+    ap.add_argument("--json", default=str(DEFAULT_JSON), metavar="PATH",
+                    help="where to persist machine-readable results")
+    args = ap.parse_args(argv)
+
+    setup = make_setup(args.smoke)
+    cfg = setup["cfg"]
+    model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
-    max_len = 96  # fits max(ceil(32/16)*16, 32+64-1)
 
-    print(f"trace: {N_REQUESTS} requests, prompt {PROMPT_LENS}, "
-          f"gen {GEN_LENS} (log-uniform), closed arrivals")
-    results = [bench_variant("fp32", model, params, max_len)]
+    print(f"mixed trace: {setup['n_requests']} requests, "
+          f"prompt {setup['prompt_lens']}, gen {setup['gen_lens']} "
+          f"(log-uniform), closed arrivals; steady trace: {setup['slots']} x "
+          f"prompt {setup['steady_prompt']} / gen {setup['steady_gen']}; "
+          f"horizons {HORIZONS}")
+    results = [bench_variant("fp32", model, params, setup)]
 
     qm = repro.quantize(model, params=params, recipe="serve-w8a16")
-    results.append(bench_variant("serve-w8a16", qm.model, qm.params, max_len))
+    results.append(bench_variant("serve-w8a16", qm.model, qm.params, setup))
+
+    write_bench_json(args.json, results, setup)
     return results
 
 
-def serve_rows():
-    """benchmarks.run harness adapter: (name, value) CSV rows."""
+def write_bench_json(path, results: list[dict], setup: dict) -> None:
+    payload = {
+        "benchmark": "serve_engine",
+        "backend": jax.default_backend(),
+        "jax": jax.__version__,
+        "traces": {
+            "mixed": {"n_requests": setup["n_requests"],
+                      "prompt_lens": list(setup["prompt_lens"]),
+                      "gen_lens": list(setup["gen_lens"])},
+            "steady": {"n_requests": setup["slots"],
+                       "prompt_len": setup["steady_prompt"],
+                       "gen_len": setup["steady_gen"]},
+        },
+        "slots": setup["slots"],
+        "prefill_chunk": setup["prefill_chunk"],
+        "horizons": list(HORIZONS),
+        "results": results,
+    }
+    p = pathlib.Path(path)
+    p.write_text(json.dumps(payload, indent=2, sort_keys=True) + "\n")
+    print(f"wrote {p}")
+
+
+def serve_rows(json_path=None):
+    """benchmarks.run harness adapter: (name, value) CSV rows; persists the
+    full payload to BENCH_serve.json as a side effect."""
+    results = main(["--json", str(json_path)] if json_path else [])
     rows = []
-    for r in main():
-        rows.append((f"{r['label']}.engine_tok_s", round(r["tok_s"], 1)))
-        rows.append((f"{r['label']}.speedup_vs_static", round(r["speedup"], 3)))
-        rows.append((f"{r['label']}.mean_occupancy", round(r["occupancy"], 3)))
+    for r in results:
+        fast = r["variants"][f"fast_h{max(HORIZONS)}"]
+        rows.append((f"{r['label']}.fast_tok_s_mixed",
+                     round(fast["mixed"]["tok_s"], 1)))
+        rows.append((f"{r['label']}.speedup_fast_vs_slow_mixed",
+                     round(r["speedup_fast_vs_slow_mixed"], 3)))
+        rows.append((f"{r['label']}.speedup_fast_vs_slow_steady",
+                     round(r["speedup_fast_vs_slow_steady"], 3)))
+        rows.append((f"{r['label']}.sync_reduction_steady_h8",
+                     round(r["sync_reduction_steady_h8"], 2)))
+        rows.append((f"{r['label']}.speedup_vs_static_mixed",
+                     round(r["speedup_engine_vs_static_mixed"], 3)))
+        rows.append((f"{r['label']}.mean_occupancy_mixed",
+                     round(fast["mixed"]["occupancy"], 3)))
     return rows
 
 

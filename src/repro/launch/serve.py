@@ -50,6 +50,17 @@ def main(argv=None):
     ap.add_argument("--max-len", type=int, default=None,
                     help="per-slot KV capacity (default: fits prompt+gen)")
     ap.add_argument("--prefill-chunk", type=int, default=16)
+    ap.add_argument("--decode-horizon", type=int, default=8,
+                    help="max decode steps fused into one device dispatch "
+                         "(the engine adapts the actual horizon to budgets "
+                         "and scheduled arrivals)")
+    ap.add_argument("--reference", action="store_true",
+                    help="use the stepwise fast=False reference path (one "
+                         "dispatch + one host sync per token) instead of "
+                         "the device-resident fast path")
+    ap.add_argument("--warmup", action="store_true",
+                    help="pre-compile all pow2 prefill/horizon shapes "
+                         "before serving (excluded from the timed run)")
     ap.add_argument("--trace", type=int, default=0, metavar="N",
                     help="replay a synthetic arrival schedule of N requests "
                          "(mixed log-uniform lengths, Poisson arrivals)")
@@ -103,13 +114,17 @@ def main(argv=None):
     # ---------------------------------------------------------------- engine
     C = args.prefill_chunk
     if args.trace:
+        if args.prompt_len < 1 or args.gen_len < 1:
+            ap.error("--trace needs --prompt-len/--gen-len >= 1")
+        p_lo, g_lo = min(4, args.prompt_len), min(4, args.gen_len)
         requests = synthetic_trace(
             args.trace_seed, args.trace, vocab_size=cfg.vocab_size,
-            prompt_lens=(4, args.prompt_len), gen_lens=(4, args.gen_len),
+            prompt_lens=(p_lo, args.prompt_len), gen_lens=(g_lo, args.gen_len),
             mean_interarrival=1.0,
         )
-        print(f"trace: {len(requests)} requests, prompt 4..{args.prompt_len}, "
-              f"gen 4..{args.gen_len}, Poisson arrivals")
+        print(f"trace: {len(requests)} requests, "
+              f"prompt {p_lo}..{args.prompt_len}, "
+              f"gen {g_lo}..{args.gen_len}, Poisson arrivals")
     else:
         prompts = np.asarray(
             calibration_tokens(0, args.batch, args.prompt_len, cfg.vocab_size)
@@ -126,17 +141,28 @@ def main(argv=None):
     max_len = args.max_len or need
     engine = ServingEngine(
         model, params, cfg, num_slots=args.slots, max_len=max_len,
-        prefill_chunk=C,
+        prefill_chunk=C, decode_horizon=args.decode_horizon,
+        fast=not args.reference,
     )
+    if args.warmup:
+        t0 = time.time()
+        engine.warmup()
+        print(f"warmup: compiled serving shapes in {time.time() - t0:.1f} s")
 
     t0 = time.time()
     results = engine.run(requests)
     dt = time.time() - t0
     gen = engine.stats["generated_tokens"]
+    path = "reference (stepwise)" if args.reference else \
+        f"fast (decode horizon {args.decode_horizon})"
     print(f"served {len(results)} requests / {gen} generated tokens "
-          f"in {dt*1e3:.1f} ms ({gen / max(dt, 1e-9):.1f} tok/s)")
-    print(f"engine: {engine.stats['decode_steps']} decode steps, "
-          f"{engine.stats['prefill_chunks']} prefill chunks, "
+          f"in {dt*1e3:.1f} ms ({gen / max(dt, 1e-9):.1f} tok/s, "
+          f"{path} path)")
+    print(f"engine: {engine.stats['decode_steps']} decode steps in "
+          f"{engine.stats['decode_dispatches']} dispatches, "
+          f"{engine.stats['prefill_chunks']} prefill chunks in "
+          f"{engine.stats['prefill_dispatches']} dispatches, "
+          f"{engine.syncs_per_token():.2f} host syncs/token, "
           f"mean slot occupancy {engine.mean_occupancy():.2f}")
     first = results[min(results)]
     print(f"sample token ids (rid {first.rid}):", first.tokens[:12])

@@ -362,12 +362,11 @@ def attention_block(
         # kpos then [B, S]). The vector form scatters per row.
         per_slot = pos.ndim == 1
         if per_slot:
-            idx = (pos[:, None] + jnp.arange(T)[None, :]) % S      # [B, T]
             qpos = pos[:, None] + jnp.arange(T)[None, :]           # [B, T]
             row = jnp.arange(B)[:, None]
         else:
-            idx = (pos + jnp.arange(T)) % S
             qpos = pos + jnp.arange(T)
+        idx = qpos % S                       # ring write offset per new token
         int8_kv = "k_scale" in cache
         if int8_kv:
             def q8(t):  # [B, T, H, hd] → int8 payload + [B, T, H] scale

@@ -402,7 +402,8 @@ class LMModel:
         """Shared prefill/decode path: runs T tokens starting at cache['pos']
         (scalar, or [B] for per-slot caches). ``logits_at`` selects which
         position's logits to return (default: the last — chunked-prefill
-        callers pass the final *valid* offset of a padded chunk)."""
+        callers pass the final *valid* offset of a padded chunk, either a
+        shared scalar or a per-row [B] vector)."""
         cfg = self.cfg
         compute = jnp.dtype(cfg.dtype)
         params = jax.tree.map(
@@ -502,6 +503,12 @@ class LMModel:
         x = apply_norm(x, params["final_norm"], cfg.norm)
         if logits_at is None:
             h_last = x[:, -1:, :]
+        elif jnp.ndim(logits_at) == 1:
+            # per-row offsets [B] (batched multi-slot prefill: each row's
+            # final valid position differs when chunks are zero-padded)
+            h_last = jnp.take_along_axis(
+                x, logits_at.astype(jnp.int32)[:, None, None], axis=1
+            )
         else:
             h_last = jax.lax.dynamic_slice_in_dim(x, logits_at, 1, axis=1)
         logits = self._unembed(params, h_last)[:, 0]

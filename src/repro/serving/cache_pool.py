@@ -51,8 +51,16 @@ class CachePool:
         return not self._allocated and len(self._free) == self.num_slots
 
     # ----------------------------------------------------------- lifecycle
-    def allocate(self) -> int:
-        """Claim the lowest free slot and reset its bookkeeping."""
+    def allocate(self, reset: bool = True) -> int:
+        """Claim the lowest free slot and reset its bookkeeping.
+
+        ``reset=False`` skips the two eager ``.at[].set`` dispatches and
+        leaves the slot's stale kpos/pos in place; the caller then owns the
+        reset (the engine's fast path folds it into the first jitted prefill
+        chunk via a ``fresh`` row mask, so admission costs zero dispatches).
+        Until that reset commits, the slot must only ride along as a masked
+        inactive row.
+        """
         if not self._free:
             raise PoolExhausted(
                 f"all {self.num_slots} slots allocated — admit after release()"
@@ -60,11 +68,12 @@ class CachePool:
         slot = min(self._free)
         self._free.remove(slot)
         self._allocated.add(slot)
-        self.cache = {
-            **self.cache,
-            "kpos": self.cache["kpos"].at[slot].set(-1),
-            "pos": self.cache["pos"].at[slot].set(0),
-        }
+        if reset:
+            self.cache = {
+                **self.cache,
+                "kpos": self.cache["kpos"].at[slot].set(-1),
+                "pos": self.cache["pos"].at[slot].set(0),
+            }
         return slot
 
     def release(self, slot: int) -> None:

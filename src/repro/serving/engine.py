@@ -5,22 +5,40 @@ One engine step interleaves three phases over a slot-based KV-cache pool:
   1. **admit** — while a slot is free and the FIFO head has arrived, claim a
      slot (bookkeeping reset only; stale K/V is masked out exactly).
   2. **chunked prefill** — every admitted-but-unfinished request advances by
-     one fixed-size prompt chunk (batch-1, written into its slot of the
-     pooled cache). The final chunk is zero-padded; pad writes are
-     invalidated (kpos → -1) before the cache is committed, and the first
-     generated token is read from the last *valid* position's logits.
-  3. **batched decode** — one ``decode_step`` over the full slot batch with
+     one fixed-size prompt chunk, written into its slot of the pooled cache.
+     The final chunk is zero-padded; pad writes are invalidated (kpos → -1)
+     before the cache is committed, and the first generated token is read
+     from the last *valid* position's logits.
+  3. **batched decode** — ``decode_step`` over the full slot batch with
      per-slot positions/masks. Finished requests retire and their slots are
      immediately reusable; free slots ride along as masked garbage rows
      (classic padding), which keeps every decode the same compiled shape.
 
+Two executions of that loop share the bookkeeping above:
+
+  * the **fast path** (default) is device-resident: all currently-prefilling
+    slots advance in ONE ``[P, C]`` dispatch (scattered into the pooled
+    cache), decode runs K steps fused in a jitted ``lax.scan`` that returns
+    a ``[B, K]`` token buffer (one dispatch, one host sync per horizon), the
+    cache argument is donated in every jit so the KV pool updates in place,
+    and slot-reset bookkeeping is folded into the first prefill chunk. The
+    host picks K adaptively — ``min(decode_horizon, min remaining budget,
+    ceil(next scheduled arrival - clock))``, K=1 while any prefill is in
+    flight — so retirement, admission, and prefill cadence land on exactly
+    the same clock ticks as the stepwise path.
+  * the **stepwise reference** (``fast=False``) dispatches one batch-1
+    prefill chunk per slot and one decode step per engine step, syncing
+    after every step — the PR-2 behavior, kept as the parity oracle.
+
 Because each slot's computation is row-independent (masked keys contribute
 exact zeros), a request's tokens are bit-identical whether it is served solo
-or inside a mixed batch — the batch-invariance parity tests pin this down.
+or inside a mixed batch, and whether decode steps run one-at-a-time or fused
+— the batch-invariance and fused-vs-stepwise parity tests pin this down.
 """
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Optional, Sequence
 
 import jax
@@ -58,6 +76,43 @@ def _write_slot(cache: dict, sub: dict, slot) -> dict:
     }
 
 
+def _gather_slots(cache: dict, slots) -> dict:
+    """Pull rows ``slots`` [P] out of the pooled cache (slot axis per leaf)."""
+    return {
+        k: jnp.take(v, slots, axis=_SLOT_AXIS.get(k, 1))
+        for k, v in cache.items()
+    }
+
+
+def _restore_rows(sub: dict, orig: dict, is_real) -> dict:
+    """Replace pad rows of the [P]-row sub-cache with their pre-prefill
+    state, so their scatter back into the pool is the identity write."""
+    out = {}
+    for k, v in sub.items():
+        shape = [1] * v.ndim
+        shape[_SLOT_AXIS.get(k, 1)] = -1
+        out[k] = jnp.where(is_real.reshape(shape), v, orig[k])
+    return out
+
+
+def _pow2_floor(n: int) -> int:
+    return 1 << (max(1, n).bit_length() - 1)
+
+
+def _pow2_ceil(n: int) -> int:
+    return 1 << (max(1, n) - 1).bit_length()
+
+
+def _scatter_slots(cache: dict, sub: dict, slots) -> dict:
+    """Write the [P]-row sub-cache back into rows ``slots`` of the pool."""
+    out = {}
+    for k, v in cache.items():
+        s = sub[k].astype(v.dtype)
+        out[k] = (v.at[slots].set(s) if _SLOT_AXIS.get(k, 1) == 0
+                  else v.at[:, slots].set(s))
+    return out
+
+
 @dataclasses.dataclass
 class _InFlight:
     req: Request
@@ -66,6 +121,8 @@ class _InFlight:
     prefilled: int = 0
     generated: list = dataclasses.field(default_factory=list)
     cur_token: int = 0
+    # fast path: slot bookkeeping reset deferred to the first prefill chunk
+    fresh: bool = False
 
     @property
     def prefill_done(self) -> bool:
@@ -74,6 +131,10 @@ class _InFlight:
     @property
     def done(self) -> bool:
         return len(self.generated) >= self.req.max_new_tokens
+
+    @property
+    def remaining(self) -> int:
+        return self.req.max_new_tokens - len(self.generated)
 
 
 @dataclasses.dataclass
@@ -95,21 +156,35 @@ class ServingEngine:
     prefill_chunk: fixed prompt-chunk length (one chunk per prefilling
         request per engine step — bounds prefill's latency impact on
         in-flight decodes).
+    decode_horizon: max decode steps fused into one device dispatch (fast
+        path). Each distinct adaptive horizon K <= decode_horizon compiles
+        its own scan, so keep it modest (compile count is bounded by it).
+    fast: use the device-resident path (default). ``fast=False`` selects the
+        stepwise reference implementation — same tokens bit-for-bit, one
+        host sync per generated token; prefer it when debugging bookkeeping
+        or when holding external references to ``pool.cache`` (the fast and
+        slow paths both DONATE the cache buffer to the jitted step, so the
+        pre-call cache object is invalidated after every dispatch).
     """
 
     def __init__(self, model, params, cfg, *, num_slots: int = 4,
                  max_len: int = 128, prefill_chunk: int = 16,
-                 cache_dtype=jnp.float32):
+                 cache_dtype=jnp.float32, decode_horizon: int = 8,
+                 fast: bool = True):
         if cfg.family in ("ssm", "hybrid") or cfg.is_encdec:
             raise ValueError(
                 f"the serving engine supports attention-family decoder-only "
                 f"models (got {cfg.name!r}, family {cfg.family!r})"
             )
+        if decode_horizon < 1:
+            raise ValueError(f"decode_horizon must be >= 1, got {decode_horizon}")
         self.model = model
         self.params = params
         self.cfg = cfg
         self.num_slots = num_slots
         self.prefill_chunk = prefill_chunk
+        self.decode_horizon = decode_horizon
+        self.fast = fast
         self.pool = CachePool(model, num_slots, max_len, dtype=cache_dtype)
         # may be < the requested max_len (sliding-window ring); admission is
         # capped at the real ring so wrap-around never clobbers live keys
@@ -119,16 +194,28 @@ class ServingEngine:
         self._inflight: dict[int, _InFlight] = {}
         self.results: dict[int, RequestResult] = {}
         self.stats = {
-            "decode_steps": 0,
-            "prefill_chunks": 0,
+            "decode_steps": 0,        # token-level steps (fast: += K/horizon)
+            "decode_dispatches": 0,   # jitted decode calls
+            "prefill_chunks": 0,      # chunk-level prefill advances
+            "prefill_dispatches": 0,  # jitted prefill calls
+            "host_syncs": 0,          # device→host materializations
             "generated_tokens": 0,
             # running aggregate, not a per-step list: a long-lived engine
             # must not grow memory with uptime
             "occupancy_sum": 0.0,
             "engine_steps": 0,
         }
-        self._prefill_fn = jax.jit(self._prefill_chunk_impl)
-        self._decode_fn = jax.jit(self._decode_impl)
+        # every jit donates the pooled cache (argnum 2): the KV pool is
+        # updated in place instead of being copied on each call, mirroring
+        # launch/steps.py / dryrun.py. The buffer passed in is INVALID after
+        # the call — the engine immediately rebinds pool.cache to the output.
+        self._prefill_fn = jax.jit(self._prefill_chunk_impl, donate_argnums=(2,))
+        self._decode_fn = jax.jit(self._decode_impl, donate_argnums=(2,))
+        self._prefill_multi_fn = jax.jit(self._prefill_multi_impl,
+                                         donate_argnums=(2,))
+        self._decode_horizon_fn = jax.jit(self._decode_horizon_impl,
+                                          static_argnames=("k",),
+                                          donate_argnums=(2,))
 
     @classmethod
     def from_quantized(cls, qm, **kwargs) -> "ServingEngine":
@@ -158,13 +245,53 @@ class ServingEngine:
         tok = jnp.argmax(logits, -1).astype(jnp.int32)       # [1]
         return tok, _write_slot(cache, sub, slot)
 
-    def _decode_impl(self, params, tokens, cache, active):
-        """Full-slot-batch decode. ``active`` [B] marks rows that are really
-        decoding; the rest (free, or mid-prefill) ride along for shape
-        stability, so their bookkeeping write this step — one kpos entry and
-        the pos advance — is rolled back before commit. (Their K/V payload
-        write is harmless: masked by kpos=-1 and overwritten by the slot's
-        next real token at the same ring index.)"""
+    def _prefill_multi_impl(self, params, tokens, cache, slots, n_valid,
+                            fresh, is_real):
+        """All currently-prefilling slots advance one chunk in ONE dispatch.
+
+        tokens: [P, C] (each row zero-padded past its n_valid); slots: [P]
+        distinct slot ids; n_valid: [P]; fresh: [P] marks rows whose slot
+        bookkeeping reset (kpos → -1, pos → 0) was deferred from
+        ``CachePool.allocate(reset=False)`` into this call. Rows are
+        gathered out of the pool, run as one batch-P prefill (row-independent
+        compute keeps each row bit-identical to its batch-1 dispatch), and
+        scattered back.
+
+        P is padded to a power of two, clamped at num_slots (bounding the
+        distinct compiled shapes to ceil(log2(num_slots))+1): pad rows
+        (``is_real`` False) carry slots that
+        are NOT prefilling, and are restored to their pre-prefill state
+        before the scatter — an identity write over unique indices, so pads
+        are exact no-ops. Returns per-row greedy tokens from each row's last
+        valid position and the updated pooled cache.
+        """
+        orig = _gather_slots(cache, slots)
+        sub = {
+            **orig,
+            "kpos": jnp.where(fresh[:, None], -1, orig["kpos"]),
+            "pos": jnp.where(fresh, 0, orig["pos"]),
+        }
+        start = sub["pos"]                                   # [P]
+        logits, sub = self.model.prefill(
+            params, tokens, sub, logits_at=n_valid - 1
+        )
+        end = start + n_valid
+        sub = {
+            **sub,
+            "kpos": jnp.where(sub["kpos"] >= end[:, None], -1, sub["kpos"]),
+            "pos": end,
+        }
+        sub = _restore_rows(sub, orig, is_real)
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)       # [P]
+        return tok, _scatter_slots(cache, sub, slots)
+
+    def _decode_masked(self, params, tokens, cache, active):
+        """One full-slot-batch decode step. ``active`` [B] marks rows that
+        are really decoding; the rest (free, or mid-prefill) ride along for
+        shape stability, so their bookkeeping write this step — one kpos
+        entry and the pos advance — is rolled back before commit. (Their K/V
+        payload write is harmless: masked by kpos=-1 and overwritten by the
+        slot's next real token at the same ring index.)"""
         prev_pos = cache["pos"]                              # [B]
         logits, cache = self.model.decode_step(params, tokens, cache)
         S = cache["kpos"].shape[1]
@@ -173,6 +300,35 @@ class ServingEngine:
         pos = jnp.where(active, cache["pos"], prev_pos)
         cache = {**cache, "kpos": kpos, "pos": pos}
         return jnp.argmax(logits, -1).astype(jnp.int32), cache
+
+    def _decode_impl(self, params, tokens, cache, active):
+        """Stepwise reference: one decode step, one host round trip."""
+        return self._decode_masked(params, tokens, cache, active)
+
+    def _decode_horizon_impl(self, params, tokens, cache, remaining, *, k):
+        """K decode steps fused on device: one dispatch, one host sync.
+
+        tokens: [B, 1] current token per slot (garbage for inactive rows);
+        remaining: [B] tokens still owed per slot (0 = free / mid-prefill).
+        Each scan step applies exactly the stepwise masked decode with
+        ``active = remaining > 0``; a row whose budget runs out freezes in
+        place (its token stops being fed forward and its bookkeeping rolls
+        back), so callers that pick ``k <= min(remaining[active])`` retire
+        rows exactly at the horizon boundary. Returns the [B, k] token
+        buffer and the updated pooled cache.
+        """
+        def body(carry, _):
+            tokens, cache, remaining = carry
+            active = remaining > 0
+            nxt, cache = self._decode_masked(params, tokens, cache, active)
+            tokens = jnp.where(active[:, None], nxt[:, None], tokens)
+            remaining = jnp.where(active, remaining - 1, remaining)
+            return (tokens, cache, remaining), nxt
+
+        (_, cache, _), toks = jax.lax.scan(
+            body, (tokens, cache, remaining), None, length=k
+        )
+        return toks.T, cache                                 # [B, k]
 
     # ------------------------------------------------------------ lifecycle
     def submit(self, request: Request) -> None:
@@ -191,22 +347,31 @@ class ServingEngine:
             req = self.scheduler.pop_ready(self.clock)
             if req is None:
                 return
-            slot = self.pool.allocate()
+            # fast path: defer the slot's bookkeeping reset into the first
+            # jitted prefill chunk (fresh mask) — admission costs 0 dispatches
+            slot = self.pool.allocate(reset=not self.fast)
             self._inflight[slot] = _InFlight(
-                req=req, slot=slot, admitted_at=self.clock
+                req=req, slot=slot, admitted_at=self.clock, fresh=self.fast
             )
 
-    def _retire(self, fl: _InFlight) -> None:
+    def _retire(self, fl: _InFlight, at: Optional[float] = None) -> None:
         self.results[fl.req.rid] = RequestResult(
             rid=fl.req.rid,
             prompt_len=len(fl.req.prompt),
             tokens=list(fl.generated),
             arrival=fl.req.arrival,
             admitted_at=fl.admitted_at,
-            finished_at=self.clock,
+            finished_at=self.clock if at is None else at,
         )
         del self._inflight[fl.slot]
         self.pool.release(fl.slot)
+
+    def _finish_prefill(self, fl: _InFlight, first: int) -> None:
+        fl.generated.append(first)
+        fl.cur_token = first
+        self.stats["generated_tokens"] += 1
+        if fl.done:
+            self._retire(fl)
 
     def _prefill_phase(self) -> None:
         C = self.prefill_chunk
@@ -224,13 +389,58 @@ class ServingEngine:
             )
             fl.prefilled += n
             self.stats["prefill_chunks"] += 1
+            self.stats["prefill_dispatches"] += 1
             if fl.prefill_done:
-                first = int(tok[0])
-                fl.generated.append(first)
-                fl.cur_token = first
-                self.stats["generated_tokens"] += 1
-                if fl.done:
-                    self._retire(fl)
+                self.stats["host_syncs"] += 1
+                self._finish_prefill(fl, int(tok[0]))
+
+    def _prefill_phase_fast(self) -> None:
+        """One [P, C] dispatch covering every prefilling slot (P padded to
+        the next power of two with identity rows); syncs only when some row
+        consumed its final prompt chunk this step."""
+        C = self.prefill_chunk
+        pending = [self._inflight[s] for s in sorted(self._inflight)
+                   if not self._inflight[s].prefill_done]
+        if not pending:
+            return
+        P = min(_pow2_ceil(len(pending)), self.num_slots)
+        # pad with slots that are NOT prefilling (there are always enough:
+        # P <= num_slots); their rows are restored before the scatter
+        busy = {fl.slot for fl in pending}
+        pads = iter(s for s in range(self.num_slots) if s not in busy)
+        tokens = np.zeros((P, C), np.int32)
+        n_valid = np.ones((P,), np.int32)   # pads select position 0's logits
+        slots = np.zeros((P,), np.int32)
+        fresh = np.zeros((P,), bool)
+        is_real = np.zeros((P,), bool)
+        for i in range(P):
+            if i < len(pending):
+                fl = pending[i]
+                prompt = np.asarray(fl.req.prompt, np.int32)
+                n = min(C, len(prompt) - fl.prefilled)
+                tokens[i, :n] = prompt[fl.prefilled:fl.prefilled + n]
+                n_valid[i], slots[i], fresh[i] = n, fl.slot, fl.fresh
+                is_real[i] = True
+            else:
+                slots[i] = next(pads)
+        tok, self.pool.cache = self._prefill_multi_fn(
+            self.params, jnp.asarray(tokens), self.pool.cache,
+            jnp.asarray(slots), jnp.asarray(n_valid), jnp.asarray(fresh),
+            jnp.asarray(is_real),
+        )
+        self.stats["prefill_chunks"] += len(pending)
+        self.stats["prefill_dispatches"] += 1
+        finishers = []
+        for i, fl in enumerate(pending):
+            fl.fresh = False
+            fl.prefilled += int(n_valid[i])
+            if fl.prefill_done:
+                finishers.append(i)
+        if finishers:
+            tok_np = np.asarray(tok)      # materialize once for all rows
+            self.stats["host_syncs"] += 1
+            for i in finishers:
+                self._finish_prefill(pending[i], int(tok_np[i]))
 
     def _decode_phase(self) -> None:
         active = [fl for fl in self._inflight.values()
@@ -248,6 +458,8 @@ class ServingEngine:
         )
         next_np = np.asarray(next_tok)
         self.stats["decode_steps"] += 1
+        self.stats["decode_dispatches"] += 1
+        self.stats["host_syncs"] += 1
         for fl in active:
             tok = int(next_np[fl.slot])
             fl.generated.append(tok)
@@ -256,14 +468,87 @@ class ServingEngine:
             if fl.done:
                 self._retire(fl)
 
+    def _choose_horizon(self, active) -> int:
+        """Adaptive K: fuse as many decode steps as possible without moving
+        any retire/admit/prefill event off its stepwise-path clock tick.
+        The result is rounded DOWN to a power of two — every cap below is an
+        upper bound, so the tick-exact schedule is preserved while the
+        number of distinct compiled scans stays log2(decode_horizon)+1."""
+        k = min(self.decode_horizon, min(fl.remaining for fl in active))
+        if any(not fl.prefill_done for fl in self._inflight.values()):
+            # a prefilling slot advances one chunk per engine tick; a long
+            # horizon would starve it, so fall back to stepwise cadence
+            return 1
+        if self.pool.n_free:
+            nxt = self.scheduler.peek_arrival()
+            if nxt is not None:
+                if nxt <= self.clock:
+                    # head is ready and a slot freed mid-step (prefill
+                    # retire): admit on the very next tick, like stepwise
+                    return 1
+                # a free slot is waiting on the FIFO head's arrival:
+                # admission must not be delayed past it by a long horizon
+                k = min(k, int(math.ceil(nxt - self.clock)))
+        return _pow2_floor(k)
+
+    def _decode_phase_fast(self) -> int:
+        """Fused decode horizon; returns the number of decode steps run (the
+        engine-clock ticks this phase consumed)."""
+        active = [fl for fl in self._inflight.values()
+                  if fl.prefill_done and not fl.done]
+        if not active:
+            return 1
+        k = self._choose_horizon(active)
+        tokens = np.zeros((self.num_slots, 1), np.int32)
+        remaining = np.zeros((self.num_slots,), np.int32)
+        for fl in active:
+            tokens[fl.slot, 0] = fl.cur_token
+            # cap at k: the scan must not generate past this horizon even if
+            # bookkeeping and the device view of the budget ever diverged
+            remaining[fl.slot] = min(fl.remaining, k)
+        toks, self.pool.cache = self._decode_horizon_fn(
+            self.params, jnp.asarray(tokens), self.pool.cache,
+            jnp.asarray(remaining), k=k,
+        )
+        toks_np = np.asarray(toks)        # the horizon's single host sync
+        self.stats["decode_steps"] += k
+        self.stats["decode_dispatches"] += 1
+        self.stats["host_syncs"] += 1
+        for fl in active:
+            new = [int(t) for t in toks_np[fl.slot, :k]]
+            fl.generated.extend(new)
+            fl.cur_token = new[-1]
+            self.stats["generated_tokens"] += k
+            if fl.done:
+                # the last token landed on the horizon's final tick — stamp
+                # completion with that tick, matching the stepwise timeline
+                self._retire(fl, at=self.clock + k - 1)
+        return k
+
     def step(self) -> None:
-        """One engine iteration: admit → chunked prefill → batched decode."""
+        """One engine iteration: admit → chunked prefill → batched decode.
+        On the fast path a fused decode horizon advances the engine clock by
+        K ticks (one tick per generated-token step, matching the stepwise
+        path's timeline)."""
         self._admit()
-        self.stats["occupancy_sum"] += len(self._inflight) / self.num_slots
-        self.stats["engine_steps"] += 1
-        self._prefill_phase()
-        self._decode_phase()
-        self.clock += 1.0
+        occ_pre = len(self._inflight) / self.num_slots
+        if self.fast:
+            self._prefill_phase_fast()
+            # a gen-at-prefill request may have retired above; ticks 2..K of
+            # the horizon see that state (no admissions can land mid-horizon
+            # — the arrival cap ends the horizon at the next arrival — and
+            # decode retires only on the final tick), so the occupancy
+            # accounting stays tick-identical to the stepwise path
+            occ_post = len(self._inflight) / self.num_slots
+            ticks = self._decode_phase_fast()
+            self.stats["occupancy_sum"] += occ_pre + occ_post * (ticks - 1)
+        else:
+            self._prefill_phase()
+            self._decode_phase()
+            ticks = 1
+            self.stats["occupancy_sum"] += occ_pre
+        self.stats["engine_steps"] += ticks
+        self.clock += float(ticks)
 
     def run(self, requests: Optional[Sequence[Request]] = None
             ) -> dict[int, RequestResult]:
@@ -277,7 +562,45 @@ class ServingEngine:
         out, self.results = self.results, {}
         return out
 
+    def warmup(self) -> None:
+        """Compile every serving shape ahead of traffic: the power-of-two
+        prefill widths and decode horizons this engine can dispatch (the
+        stepwise shapes when ``fast=False``). Runs tiny throwaway requests
+        through the real loop — results are discarded, stats and clock
+        restored — so a production engine (or a benchmark) serves steady
+        state instead of hitting XLA compiles mid-traffic."""
+        if self.scheduler.pending() or self._inflight:
+            raise RuntimeError(
+                "warmup() needs an idle engine — it runs (and discards) "
+                "throwaway requests through the serving loop"
+            )
+        snap_stats, snap_clock = dict(self.stats), self.clock
+        snap_order = list(self.scheduler.admitted_order)
+        rid = -1
+        widths = sorted({min(1 << i, self.num_slots)
+                         for i in range((self.num_slots - 1).bit_length() + 1)}
+                        ) if self.fast else [1]   # stepwise prefill is batch-1
+        for w in widths:                 # prefill widths (no decode: gen 1)
+            self.run([Request(rid=rid - j, prompt=[0], max_new_tokens=1)
+                      for j in range(w)])
+            rid -= w
+        h = self.decode_horizon if self.fast else 1
+        for i in range(h.bit_length()):  # decode horizons
+            k = 1 << i
+            if k > h:
+                break
+            self.run([Request(rid=rid, prompt=[0],
+                              max_new_tokens=min(k + 1, self.max_len))])
+            rid -= 1
+        self.stats, self.clock = snap_stats, snap_clock
+        self.scheduler.admitted_order.clear()
+        self.scheduler.admitted_order.extend(snap_order)
+
     # ------------------------------------------------------------- metrics
     def mean_occupancy(self) -> float:
         steps = self.stats["engine_steps"]
         return self.stats["occupancy_sum"] / steps if steps else 0.0
+
+    def syncs_per_token(self) -> float:
+        gen = self.stats["generated_tokens"]
+        return self.stats["host_syncs"] / gen if gen else 0.0

@@ -2,10 +2,15 @@
 
 The anchor is batch invariance: a request decoded solo must produce
 bit-identical token ids to the same request served inside a mixed continuous
-batch — for fp32 AND the serve-w8a16 recipe. Plus: end-to-end regression
-through save/load, engine bookkeeping, and a slow randomized soak.
+batch — for fp32 AND the serve-w8a16 recipe. The engine's default
+device-resident fast path (fused decode horizons + batched multi-slot
+prefill + donated pooled cache) must additionally match the ``fast=False``
+stepwise reference bit-for-bit AND tick-for-tick, with a pinned reduction in
+dispatches and host syncs. Plus: end-to-end regression through save/load,
+engine bookkeeping, and a slow randomized soak.
 """
 import dataclasses
+import math
 
 import jax
 import numpy as np
@@ -107,6 +112,132 @@ def test_engine_matches_naive_prefill_decode_oracle(
         assert served[r.rid].tokens == toks, (
             f"{variant}: rid {r.rid} diverged from the naive serving oracle"
         )
+
+
+# ------------------------------------------------- fast path vs stepwise ref
+
+@pytest.mark.parametrize("variant", ["fp32", "serve-w8a16"])
+def test_fused_vs_stepwise_parity(variant, fp32_setup, w8a16_setup):
+    """The fused fast path (decode horizons + batched multi-slot prefill +
+    donated cache + deferred slot reset) must be bit-identical to the
+    stepwise reference — tokens AND the admit/finish timeline — at every
+    horizon, including 1 (where only the dispatch batching differs)."""
+    if variant == "fp32":
+        model, params, cfg = fp32_setup
+    else:
+        qm = w8a16_setup
+        model, params, cfg = qm.model, qm.params, qm.cfg
+    trace = _mixed_trace(cfg.vocab_size)
+
+    slow_eng = _engine(model, params, cfg, fast=False)
+    slow = slow_eng.run([dataclasses.replace(r) for r in trace])
+    for horizon in (1, 3, 8):
+        fast_eng = _engine(model, params, cfg, fast=True,
+                           decode_horizon=horizon)
+        fast = fast_eng.run([dataclasses.replace(r) for r in trace])
+        for r in trace:
+            assert fast[r.rid].tokens == slow[r.rid].tokens, (
+                f"{variant}: rid {r.rid} diverged at horizon {horizon}")
+            assert fast[r.rid].admitted_at == slow[r.rid].admitted_at
+            assert fast[r.rid].finished_at == slow[r.rid].finished_at
+        # the trace includes a gen-at-prefill retire; occupancy accounting
+        # across fused horizons must still match the stepwise timeline
+        assert fast_eng.mean_occupancy() == pytest.approx(
+            slow_eng.mean_occupancy()), f"occupancy drift at h={horizon}"
+
+
+def test_fast_path_dispatch_and_sync_counts(fp32_setup):
+    """Dispatch/sync-count regression: with jitted fns wrapped in counting
+    shims, the fast path must make <= ceil(decode_tokens/horizon) decode
+    round trips and exactly one prefill dispatch per engine step regardless
+    of how many slots are prefilling."""
+    model, params, cfg = fp32_setup
+    H, G = 4, 9  # 1 token from prefill + 8 decode steps
+    eng = ServingEngine(model, params, cfg, num_slots=4, max_len=32,
+                        prefill_chunk=8, decode_horizon=H)
+    counts = {"decode": 0, "prefill": 0}
+    real_decode, real_prefill = eng._decode_horizon_fn, eng._prefill_multi_fn
+
+    def counting_decode(*a, **kw):
+        counts["decode"] += 1
+        return real_decode(*a, **kw)
+
+    def counting_prefill(*a, **kw):
+        counts["prefill"] += 1
+        return real_prefill(*a, **kw)
+
+    eng._decode_horizon_fn = counting_decode
+    eng._prefill_multi_fn = counting_prefill
+
+    # 3 same-shape requests, all at t=0: prompts prefill together in ONE
+    # dispatch, then decode in lockstep
+    trace = [Request(rid=i, prompt=[1 + i] * 8, max_new_tokens=G)
+             for i in range(3)]
+    res = eng.run(trace)
+    assert sorted(res) == [0, 1, 2]
+    assert counts["prefill"] == 1, "3 prefilling slots must share 1 dispatch"
+    assert counts["decode"] <= math.ceil((G - 1) / H)
+    assert eng.stats["decode_dispatches"] == counts["decode"]
+    assert eng.stats["prefill_dispatches"] == counts["prefill"]
+    assert eng.stats["decode_steps"] == G - 1
+    # sync accounting: one per decode horizon + one for the prefill round
+    # that finished prompts (never one per token)
+    assert eng.stats["host_syncs"] == counts["decode"] + 1
+
+
+def test_host_sync_reduction_at_horizon_8(fp32_setup):
+    """Acceptance pin: >= 4x fewer host syncs per generated token than the
+    stepwise path at horizon 8 on a decode-heavy batch."""
+    model, params, cfg = fp32_setup
+    trace = [Request(rid=i, prompt=[3 + i] * 6, max_new_tokens=17)
+             for i in range(4)]
+
+    def run(fast):
+        eng = ServingEngine(model, params, cfg, num_slots=4, max_len=32,
+                            prefill_chunk=8, decode_horizon=8, fast=fast)
+        res = eng.run([dataclasses.replace(r) for r in trace])
+        return res, eng
+
+    slow_res, slow = run(False)
+    fast_res, fast = run(True)
+    assert {r: v.tokens for r, v in fast_res.items()} == \
+           {r: v.tokens for r, v in slow_res.items()}
+    assert slow.syncs_per_token() >= 4 * fast.syncs_per_token(), (
+        f"slow {slow.syncs_per_token():.3f} vs fast "
+        f"{fast.syncs_per_token():.3f} syncs/token")
+
+
+def test_horizon_capped_by_scheduled_arrival(fp32_setup):
+    """peek_arrival feeds the adaptive horizon: a pending arrival must not
+    wait behind a long decode horizon when a slot is free."""
+    model, params, cfg = fp32_setup
+    trace = [
+        Request(rid=0, prompt=[1] * 4, max_new_tokens=20, arrival=0.0),
+        Request(rid=1, prompt=[2] * 4, max_new_tokens=4, arrival=2.0),
+    ]
+    eng = ServingEngine(model, params, cfg, num_slots=2, max_len=32,
+                        prefill_chunk=8, decode_horizon=16)
+    res = eng.run(trace)
+    # without the arrival cap the first horizon would run 16+ ticks and
+    # admit rid 1 only at its end
+    assert res[1].admitted_at == 2.0
+    ref = ServingEngine(model, params, cfg, num_slots=2, max_len=32,
+                        prefill_chunk=8, fast=False).run(
+        [dataclasses.replace(r) for r in trace])
+    assert res[1].tokens == ref[1].tokens
+    assert res[1].admitted_at == ref[1].admitted_at
+
+
+def test_pooled_cache_is_donated(fp32_setup):
+    """The engine jits donate the cache argument: after a step, the buffer
+    that went in must have been consumed in place (invalidated), not copied
+    — holding a stale reference to ``pool.cache`` across a step is an error
+    by design (README documents the caveat)."""
+    model, params, cfg = fp32_setup
+    eng = _engine(model, params, cfg)
+    before = eng.pool.cache["k"]
+    eng.run([Request(rid=0, prompt=[5] * 4, max_new_tokens=4)])
+    assert before.is_deleted(), "cache was copied, not donated"
 
 
 # ------------------------------------------------------- e2e save/load serve
