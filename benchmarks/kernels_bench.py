@@ -5,9 +5,17 @@ Wall-time on this CPU container is NOT a TPU signal, so each kernel reports:
   * derived TPU-roofline quantities: bytes moved, ideal v5e time at HBM bw,
     MXU-bound time at int8/bf16 peak, and the VMEM working set implied by
     the BlockSpec tiling (must be ≪ 16 MiB).
+
+Results persist to ``BENCH_kernels.json`` (CI uploads it from the
+bench-smoke job) so the kernel-perf trajectory is tracked across PRs:
+
+    PYTHONPATH=src python benchmarks/kernels_bench.py [--json PATH]
 """
 from __future__ import annotations
 
+import argparse
+import json
+import pathlib
 import time
 
 import jax
@@ -15,14 +23,17 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.analysis.roofline import HW_V5E
-from repro.kernels.kv_attention.ref import kv_attention_ref
+from repro.kernels.kv_attention.ref import kv_attention_ref, kv_attention_xla
 from repro.kernels.qmatmul_w8a8.ref import qmatmul_w8a8_ref
 from repro.kernels.qmatmul_w8a16.ref import qmatmul_w8a16_ref
 from repro.kernels.quantize_act.ref import quantize_act_ref
 
+DEFAULT_JSON = pathlib.Path(__file__).resolve().parent / "BENCH_kernels.json"
+
 
 def _time(fn, *args, iters=5):
-    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else fn(*args).block_until_ready()
+    out = fn(*args)                      # one warmup call, result reused
+    (out[0] if isinstance(out, tuple) else out).block_until_ready()
     t0 = time.perf_counter()
     for _ in range(iters):
         out = fn(*args)
@@ -30,16 +41,19 @@ def _time(fn, *args, iters=5):
     return (time.perf_counter() - t0) / iters * 1e6
 
 
-def kernel_rows():
+def kernel_rows(smoke: bool = False):
+    """``smoke`` shrinks every timed shape to CI-runner scale (seconds, tens
+    of MB) while keeping identical code paths; the derived roofline rows
+    always describe the production shapes."""
     rows = []
     # --- W8A8 prefill-shape GEMM: M=4096 tokens, K=N=4096 -----------------
-    M, K, N = 4096, 4096, 4096
+    M, K, N = (512, 512, 512) if smoke else (4096, 4096, 4096)
     ks = jax.random.split(jax.random.PRNGKey(0), 2)
     a_q = jax.random.randint(ks[0], (M, K), -127, 128, dtype=jnp.int8)
     w_q = jax.random.randint(ks[1], (K, N), -127, 128, dtype=jnp.int8)
     f = jax.jit(lambda a, w: qmatmul_w8a8_ref(a, w, 0.01, 0.01))
-    rows.append(("w8a8_4096x4096x4096.cpu_us", _time(f, a_q, w_q)))
-    flops = 2 * M * K * N
+    rows.append((f"w8a8_{M}x{K}x{N}.cpu_us", _time(f, a_q, w_q)))
+    flops = 2 * 4096 ** 3
     rows.append(("w8a8.v5e_int8_mxu_bound_us",
                  flops / HW_V5E["peak_flops_int8"] * 1e6))
     rows.append(("w8a8.v5e_bf16_equiv_us",
@@ -48,13 +62,13 @@ def kernel_rows():
     rows.append(("w8a8.vmem_working_set_kib", vmem / 1024))
 
     # --- W8A16 decode-shape GEMM: M=8 (batch), big K,N ---------------------
-    M, K, N = 8, 8192, 8192
+    M, K, N = (8, 1024, 1024) if smoke else (8, 8192, 8192)
     a = jax.random.normal(ks[0], (M, K), jnp.bfloat16)
     w_q = jax.random.randint(ks[1], (K, N), -127, 128, dtype=jnp.int8)
     f = jax.jit(lambda a, w: qmatmul_w8a16_ref(a, w, 0.01))
-    rows.append(("w8a16_8x8192x8192.cpu_us", _time(f, a, w_q)))
-    hbm_int8 = K * N * 1
-    hbm_bf16 = K * N * 2
+    rows.append((f"w8a16_{M}x{K}x{N}.cpu_us", _time(f, a, w_q)))
+    hbm_int8 = 8192 * 8192 * 1
+    hbm_bf16 = 8192 * 8192 * 2
     rows.append(("w8a16.v5e_hbm_bound_us_int8_weights",
                  hbm_int8 / HW_V5E["hbm_bw"] * 1e6))
     rows.append(("w8a16.v5e_hbm_bound_us_bf16_weights",
@@ -64,26 +78,74 @@ def kernel_rows():
     rows.append(("w8a16.vmem_working_set_kib", vmem / 1024))
 
     # --- dynamic activation quantize ---------------------------------------
-    M, K = 4096, 8192
+    M, K = (512, 1024) if smoke else (4096, 8192)
     x = jax.random.normal(ks[0], (M, K))
     f = jax.jit(lambda x: quantize_act_ref(x)[0])
-    rows.append(("quantize_act_4096x8192.cpu_us", _time(f, x)))
+    rows.append((f"quantize_act_{M}x{K}.cpu_us", _time(f, x)))
     rows.append(("quantize_act.v5e_hbm_bound_us",
-                 (M * K * 4 + M * K * 1) / HW_V5E["hbm_bw"] * 1e6))
+                 (4096 * 8192 * 4 + 4096 * 8192 * 1) / HW_V5E["hbm_bw"] * 1e6))
 
     # --- int8-KV decode attention (one 32k-context token, 8 kv heads) ------
-    B, S, H, hd = 8, 32768, 8, 128
+    B, S, H, hd = (2, 2048, 4, 64) if smoke else (8, 32768, 8, 128)
     kq = jax.random.randint(ks[0], (B, S, H, hd), -127, 128, dtype=jnp.int8)
     ksc = jax.random.uniform(ks[1], (B, S, H), minval=0.01, maxval=0.05)
     qv = jax.random.normal(ks[0], (B, H, hd))
     f = jax.jit(lambda q, kq, ksc: kv_attention_ref(q, kq, ksc, kq, ksc))
-    rows.append(("kv_attention_8x32k.cpu_us", _time(f, qv, kq, ksc)))
+    rows.append((f"kv_attention_{B}x{S // 1024}k.cpu_us",
+                 _time(f, qv, kq, ksc)))
+    # the serving XLA path (scale folding at score granularity) with GQA:
+    # 32 q heads read the same 8 kv heads without repeat-materialization
+    qg = jax.random.normal(ks[0], (B, 4 * H, hd))
+    f = jax.jit(lambda q, kq, ksc: kv_attention_xla(q, kq, ksc, kq, ksc))
+    rows.append((f"kv_attention_gqa4_{B}x{S // 1024}k_xla.cpu_us",
+                 _time(f, qg, kq, ksc)))
+    B, S, H, hd = 8, 32768, 8, 128           # roofline: production shape
     cache_int8 = 2 * B * S * H * (hd * 1 + 4)
     cache_bf16 = 2 * B * S * H * hd * 2
+    cache_fp32 = 2 * B * S * H * hd * 4
     rows.append(("kv_attention.v5e_cache_stream_us_int8",
                  cache_int8 / HW_V5E["hbm_bw"] * 1e6))
     rows.append(("kv_attention.v5e_cache_stream_us_bf16",
                  cache_bf16 / HW_V5E["hbm_bw"] * 1e6))
+    rows.append(("kv_attention.cache_bytes_speedup_vs_bf16",
+                 cache_bf16 / cache_int8))
+    rows.append(("kv_attention.cache_bytes_speedup_vs_fp32",
+                 cache_fp32 / cache_int8))
     vmem = 2 * 512 * H * hd * 1 + 2 * 512 * H * 4 + H * hd * 4
     rows.append(("kv_attention.vmem_working_set_kib", vmem / 1024))
     return rows
+
+
+def write_bench_json(path, rows, smoke: bool = False) -> None:
+    payload = {
+        "benchmark": "kernels",
+        "backend": jax.default_backend(),
+        "jax": jax.__version__,
+        "smoke": smoke,
+        "rows": {name: float(value) for name, value in rows},
+    }
+    p = pathlib.Path(path)
+    p.write_text(json.dumps(payload, indent=2, sort_keys=True) + "\n")
+    print(f"wrote {p}")
+
+
+def kernel_rows_persisted(json_path=None, smoke: bool = False):
+    """benchmarks.run adapter: compute the rows AND persist them."""
+    rows = kernel_rows(smoke=smoke)
+    write_bench_json(json_path or DEFAULT_JSON, rows, smoke=smoke)
+    return rows
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default=str(DEFAULT_JSON), metavar="PATH",
+                    help="where to persist machine-readable results")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny timed shapes for the CI smoke-benchmark job")
+    args = ap.parse_args(argv)
+    for name, value in kernel_rows_persisted(args.json, smoke=args.smoke):
+        print(f"{name},{value}")
+
+
+if __name__ == "__main__":
+    main()

@@ -28,14 +28,18 @@ def main() -> None:
     ap.add_argument("--serve-json", default=None, metavar="PATH",
                     help="where serve_engine persists BENCH_serve.json "
                          "(default: benchmarks/BENCH_serve.json)")
+    ap.add_argument("--kernels-json", default=None, metavar="PATH",
+                    help="where kernels_bench persists BENCH_kernels.json "
+                         "(default: benchmarks/BENCH_kernels.json)")
     args, _ = ap.parse_known_args()
 
-    from .kernels_bench import kernel_rows
+    from .kernels_bench import kernel_rows_persisted
     from .roofline_table import roofline_rows
     from .tables import ALL_TABLES
 
     benches = dict(ALL_TABLES)
-    benches["kernels"] = kernel_rows
+    benches["kernels"] = functools.partial(
+        kernel_rows_persisted, json_path=args.kernels_json)
     benches["roofline"] = roofline_rows
     if not args.skip_lm:
         from .lm_dfq import lm_dfq_all

@@ -13,6 +13,11 @@ each axis is isolated):
     decode horizons, batched multi-slot prefill, donated pooled cache) vs
     the stepwise **slow** reference (one dispatch + one host sync per
     generated token), swept over ``--decode-horizon``.
+  * **KV precision** — every (model, params) variant is additionally served
+    through the int8 pooled KV cache (``kv_bits=8``: int8 payload +
+    per-token/per-head scales, decode through the kv_attention op), with
+    its own fast-vs-stepwise parity assert; the ``kv8_vs_fp`` summary
+    records the steady-trace tok/s ratio and the KV bytes/slot reduction.
 
 Each comparison runs on the regime it targets, over two traces per variant:
 
@@ -72,14 +77,17 @@ def make_setup(smoke: bool) -> dict:
         n_layers=4, d_model=256, n_heads=8, head_dim=32, n_kv_heads=2,
         d_ff=1024, vocab_size=2048, max_seq=256,
     )
-    # max_len fits max(ceil(32/16)*16, 32+64-1) and steady 16+81-1
+    # max_len fits max(ceil(32/16)*16, 32+64-1) and steady 16+177-1; the
+    # steady trace decodes deep into the ring so the KV stream (what kv8
+    # targets) is a visible fraction of the step, not just the dense GEMMs
     return {"cfg": cfg, "n_requests": 24, "slots": 8, "prefill_chunk": 16,
             "prompt_lens": (4, 32), "gen_lens": (4, 64),
-            "steady_prompt": 16, "steady_gen": 81, "max_len": 96}
+            "steady_prompt": 16, "steady_gen": 177, "max_len": 192}
 
 
-def _run(engine: ServingEngine, trace, repeats: int = 2) -> dict:
-    """Serve ``trace`` ``repeats`` times on a warmed engine; returns the
+def _run(engine: ServingEngine, trace, repeats: int = 3) -> dict:
+    """Serve ``trace`` ``repeats`` times on a warmed engine (best-of-3: CPU
+    wall noise swamps best-of-2 at these dims); returns the
     best-timed run's tokens/s (CPU wall noise) + efficiency counters
     (per-token host syncs and device dispatches). Repeats double as a
     determinism check — every run must produce identical tokens."""
@@ -108,10 +116,13 @@ def _run(engine: ServingEngine, trace, repeats: int = 2) -> dict:
     return best
 
 
-def bench_variant(label: str, model, params, setup: dict) -> dict:
+def bench_variant(label: str, model, params, setup: dict, *,
+                  kv_bits=None, full: bool = True) -> dict:
     """All scheduling/execution variants for one (model, params), over the
     mixed (churny) and steady (decode-dominant) traces; asserts bit-exact
-    token parity across the board."""
+    token parity across the board. ``kv_bits=8`` serves through the int8
+    pooled KV cache; ``full=False`` runs only the slow reference and the
+    top-horizon fast path (the kv8 comparison points)."""
     cfg = setup["cfg"]
     traces = {
         "mixed": synthetic_trace(
@@ -123,15 +134,20 @@ def bench_variant(label: str, model, params, setup: dict) -> dict:
             gen_lens=(setup["steady_gen"],) * 2),
     }
 
-    variants = {"static": dict(num_slots=setup["n_requests"], fast=True),
-                "slow": dict(num_slots=setup["slots"], fast=False)}
-    for h in HORIZONS:
+    variants = {"slow": dict(num_slots=setup["slots"], fast=False)}
+    if full:
+        variants["static"] = dict(num_slots=setup["n_requests"], fast=True)
+    for h in (HORIZONS if full else (max(HORIZONS),)):
         variants[f"fast_h{h}"] = dict(num_slots=setup["slots"], fast=True,
                                       decode_horizon=h)
     rows = {}
+    bytes_per_slot = None
     for mode, kw in variants.items():
         eng = ServingEngine(model, params, cfg, max_len=setup["max_len"],
-                            prefill_chunk=setup["prefill_chunk"], **kw)
+                            prefill_chunk=setup["prefill_chunk"],
+                            kv_bits=kv_bits, **kw)
+        if mode != "static":
+            bytes_per_slot = eng.pool.bytes_per_slot()
         eng.warmup()   # compile all pow2 prefill/horizon shapes up front
         rows[mode] = {tname: _run(eng, trace)
                       for tname, trace in traces.items()}
@@ -149,12 +165,15 @@ def bench_variant(label: str, model, params, setup: dict) -> dict:
             del rows[mode][tname]["tokens"]
 
     best = f"fast_h{max(HORIZONS)}"
+    swept = HORIZONS if full else (max(HORIZONS),)
 
     def best_fast(tname):   # best horizon of the sweep, per trace
-        return max(rows[f"fast_h{h}"][tname]["tok_s"] for h in HORIZONS)
+        return max(rows[f"fast_h{h}"][tname]["tok_s"] for h in swept)
 
     out = {
         "label": label,
+        "kv_bits": kv_bits or 16,
+        "kv_bytes_per_slot": bytes_per_slot,
         "variants": rows,
         # headline numbers, each on the regime its optimization targets;
         # tok/s speedups take the sweep's best horizon (that is what the
@@ -163,8 +182,6 @@ def bench_variant(label: str, model, params, setup: dict) -> dict:
             best_fast("mixed") / rows["slow"]["mixed"]["tok_s"],
         "speedup_fast_vs_slow_steady":
             best_fast("steady") / rows["slow"]["steady"]["tok_s"],
-        "speedup_engine_vs_static_mixed":
-            rows[best]["mixed"]["tok_s"] / rows["static"]["mixed"]["tok_s"],
         "sync_reduction_steady_h8":
             rows["slow"]["steady"]["host_syncs_per_token"]
             / max(rows[best]["steady"]["host_syncs_per_token"], 1e-9),
@@ -172,6 +189,9 @@ def bench_variant(label: str, model, params, setup: dict) -> dict:
             rows["slow"]["mixed"]["host_syncs_per_token"]
             / max(rows[best]["mixed"]["host_syncs_per_token"], 1e-9),
     }
+    if full:
+        out["speedup_engine_vs_static_mixed"] = (
+            rows[best]["mixed"]["tok_s"] / rows["static"]["mixed"]["tok_s"])
     print(f"{label}:")
     for tname in traces:
         s, f = rows["slow"][tname], rows[best][tname]
@@ -181,12 +201,13 @@ def bench_variant(label: str, model, params, setup: dict) -> dict:
               f"({f['host_syncs_per_token']:.3f} syncs/tok)  |  "
               f"{f['tok_s'] / s['tok_s']:.2f}x tok/s, "
               f"{s['host_syncs_per_token'] / max(f['host_syncs_per_token'], 1e-9):.1f}x fewer syncs")
-    print(f"  engine vs static (mixed): "
-          f"{out['speedup_engine_vs_static_mixed']:.2f}x tok/s at "
-          f"occ {rows[best]['mixed']['occupancy']:.2f} vs "
-          f"{rows['static']['mixed']['occupancy']:.2f} "
-          f"with {setup['slots']} vs {setup['n_requests']} live KV slots")
-    for h in HORIZONS:
+    if full:
+        print(f"  engine vs static (mixed): "
+              f"{out['speedup_engine_vs_static_mixed']:.2f}x tok/s at "
+              f"occ {rows[best]['mixed']['occupancy']:.2f} vs "
+              f"{rows['static']['mixed']['occupancy']:.2f} "
+              f"with {setup['slots']} vs {setup['n_requests']} live KV slots")
+    for h in swept:
         r = rows[f"fast_h{h}"]
         print(f"    h={h}: steady {r['steady']['tok_s']:8.1f} tok/s "
               f"({r['steady']['host_syncs_per_token']:.3f} syncs/tok), "
@@ -214,15 +235,60 @@ def main(argv=None) -> list[dict]:
           f"prompt {setup['steady_prompt']} / gen {setup['steady_gen']}; "
           f"horizons {HORIZONS}")
     results = [bench_variant("fp32", model, params, setup)]
+    results.append(bench_variant("fp32-kv8", model, params, setup,
+                                 kv_bits=8, full=False))
 
     qm = repro.quantize(model, params=params, recipe="serve-w8a16")
     results.append(bench_variant("serve-w8a16", qm.model, qm.params, setup))
+    # the kv_cache stage is weight-free — the same packed params serve the
+    # int8-KV engine (what the serve-w8a16-kv8 recipe produces)
+    results.append(bench_variant("serve-w8a16-kv8", qm.model, qm.params,
+                                 setup, kv_bits=8, full=False))
 
-    write_bench_json(args.json, results, setup)
+    kv8 = _kv8_summary(results)
+    for fp_label, row in kv8.items():
+        print(f"kv8 vs fp ({fp_label}): "
+              f"steady {row['speedup_kv8_vs_fp_steady']:.2f}x tok/s, "
+              f"mixed {row['speedup_kv8_vs_fp_mixed']:.2f}x, "
+              f"{row['kv_bytes_reduction']:.2f}x fewer KV bytes/slot "
+              f"({row['kv_bytes_per_slot_fp']} -> "
+              f"{row['kv_bytes_per_slot_kv8']} B)")
+
+    write_bench_json(args.json, results, setup, kv8)
     return results
 
 
-def write_bench_json(path, results: list[dict], setup: dict) -> None:
+def _kv8_summary(results: list[dict]) -> dict:
+    """Cross-label fp-vs-kv8 headline: tok/s ratio at the top horizon and
+    the KV bytes/slot reduction (both paths individually parity-asserted
+    against their own stepwise reference in bench_variant)."""
+    by = {r["label"]: r for r in results}
+    best = f"fast_h{max(HORIZONS)}"
+    out = {}
+    for fp_label in ("fp32", "serve-w8a16"):
+        kv8_label = f"{fp_label}-kv8"
+        if fp_label not in by or kv8_label not in by:
+            continue
+        fp, k8 = by[fp_label], by[kv8_label]
+        out[fp_label] = {
+            "steady_tok_s_fp": fp["variants"][best]["steady"]["tok_s"],
+            "steady_tok_s_kv8": k8["variants"][best]["steady"]["tok_s"],
+            "speedup_kv8_vs_fp_steady":
+                k8["variants"][best]["steady"]["tok_s"]
+                / fp["variants"][best]["steady"]["tok_s"],
+            "speedup_kv8_vs_fp_mixed":
+                k8["variants"][best]["mixed"]["tok_s"]
+                / fp["variants"][best]["mixed"]["tok_s"],
+            "kv_bytes_per_slot_fp": fp["kv_bytes_per_slot"],
+            "kv_bytes_per_slot_kv8": k8["kv_bytes_per_slot"],
+            "kv_bytes_reduction":
+                fp["kv_bytes_per_slot"] / k8["kv_bytes_per_slot"],
+        }
+    return out
+
+
+def write_bench_json(path, results: list[dict], setup: dict,
+                     kv8: dict = None) -> None:
     payload = {
         "benchmark": "serve_engine",
         "backend": jax.default_backend(),
@@ -238,6 +304,7 @@ def write_bench_json(path, results: list[dict], setup: dict) -> None:
         "slots": setup["slots"],
         "prefill_chunk": setup["prefill_chunk"],
         "horizons": list(HORIZONS),
+        "kv8_vs_fp": kv8 if kv8 is not None else _kv8_summary(results),
         "results": results,
     }
     p = pathlib.Path(path)
@@ -260,10 +327,16 @@ def serve_rows(json_path=None):
                      round(r["speedup_fast_vs_slow_steady"], 3)))
         rows.append((f"{r['label']}.sync_reduction_steady_h8",
                      round(r["sync_reduction_steady_h8"], 2)))
-        rows.append((f"{r['label']}.speedup_vs_static_mixed",
-                     round(r["speedup_engine_vs_static_mixed"], 3)))
+        if "speedup_engine_vs_static_mixed" in r:
+            rows.append((f"{r['label']}.speedup_vs_static_mixed",
+                         round(r["speedup_engine_vs_static_mixed"], 3)))
         rows.append((f"{r['label']}.mean_occupancy_mixed",
                      round(fast["mixed"]["occupancy"], 3)))
+    for fp_label, row in _kv8_summary(results).items():
+        rows.append((f"{fp_label}.kv8_speedup_steady",
+                     round(row["speedup_kv8_vs_fp_steady"], 3)))
+        rows.append((f"{fp_label}.kv8_bytes_reduction",
+                     round(row["kv_bytes_reduction"], 3)))
     return rows
 
 

@@ -12,6 +12,13 @@ Three kernels (taxonomy B.12 — W8A8 / weight-only / dynamic-quant):
   * ``kv_attention``  — single-token decode attention with the int8 KV cache
                         dequantized in VMEM (one HBM pass over the cache —
                         the EXPERIMENTS §Perf C5 roofline term, fused).
+                        Handles GQA (q heads / kv heads via in-kernel
+                        reshape), ragged per-slot lengths through zero-scale
+                        masking, and ships ``quantize_kv`` /
+                        ``kv_attention_decode`` — the fused append-quantize
+                        step the serving engine's int8-KV mode decodes
+                        through (``ServingEngine(kv_bits=8)`` or a
+                        ``serve-*-kv8`` recipe).
 
 Each package: kernel.py (pl.pallas_call + BlockSpec), ops.py (jit'd public
 wrapper with padding + XLA fallback), ref.py (pure-jnp oracle).

@@ -5,10 +5,21 @@ roofline is the KV-cache stream. This kernel reads the cache as int8 (half
 the HBM bytes of bf16) and dequantizes per block inside VMEM, fused with the
 online-softmax accumulation — one HBM pass over the cache per token.
 
+Semantics shared with ``ref.kv_attention_ref`` (the bit-exact oracle):
+
+  * **zero-scale masking** — a key position whose scale is exactly 0 is
+    invalid (ragged per-slot lengths, ring-buffer holes, block padding): its
+    score is forced to ``_NEG`` before the online-softmax update, so stale
+    int8 payload contributes an exact 0. Real tokens always carry a scale
+    >= 1e-8/127 (see ``ops.quantize_kv``), so 0 is unambiguous.
+  * **GQA** — q carries ``Hq = G * Hkv`` heads in the repeat-kv convention
+    (q head ``h`` reads kv head ``h // G``), handled by a reshape instead of
+    materializing repeated K/V.
+
 Grid (B, S/blk), S innermost; per-(batch) scratch carries the online-softmax
-state (m, l [H]; acc [H, hd] fp32). Block working set at blk = 512, H = 8,
-hd = 128: k/v int8 2·512·8·128 = 1 MiB + scales 32 KiB + acc 4 KiB — well
-inside VMEM with double buffering.
+state (m, l [Hq]; acc [Hq, hd] fp32). Block working set at blk = 512,
+Hkv = 8, hd = 128: k/v int8 2·512·8·128 = 1 MiB + scales 32 KiB + acc 4 KiB
+— well inside VMEM with double buffering.
 """
 from __future__ import annotations
 
@@ -46,7 +57,7 @@ _NEG = -1e30
 
 
 def _kernel(q_ref, kq_ref, ks_ref, vq_ref, vs_ref, o_ref,
-            m_ref, l_ref, acc_ref, *, n_blk, scale):
+            m_ref, l_ref, acc_ref, *, n_blk, scale, group):
     j = pl.program_id(1)
 
     @pl.when(j == 0)
@@ -55,9 +66,15 @@ def _kernel(q_ref, kq_ref, ks_ref, vq_ref, vs_ref, o_ref,
         l_ref[...] = jnp.zeros_like(l_ref)
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    q = q_ref[0].astype(jnp.float32)                        # [H, hd]
-    k = kq_ref[0].astype(jnp.float32) * ks_ref[0][..., None]  # [blk, H, hd]
-    s = jnp.einsum("hd,khd->hk", q, k) * scale              # [H, blk]
+    q = q_ref[0].astype(jnp.float32)                        # [Hq, hd]
+    ks = ks_ref[0]                                          # [blk, Hkv]
+    k = kq_ref[0].astype(jnp.float32) * ks[..., None]       # [blk, Hkv, hd]
+    n_kv, hd = k.shape[1], k.shape[2]
+    qg = q.reshape(n_kv, group, hd)                         # repeat-kv layout
+    s = jnp.einsum("ngd,knd->ngk", qg, k) * scale           # [Hkv, G, blk]
+    # zero-scale positions are masked out exactly (ragged lengths / padding)
+    s = jnp.where((ks > 0).T[:, None, :], s, _NEG)
+    s = s.reshape(n_kv * group, -1)                         # [Hq, blk]
 
     m_new = jnp.maximum(m_ref[...], jnp.max(s, -1))
     p = jnp.exp(s - m_new[:, None])
@@ -65,7 +82,8 @@ def _kernel(q_ref, kq_ref, ks_ref, vq_ref, vs_ref, o_ref,
     l_ref[...] = l_ref[...] * corr + jnp.sum(p, -1)
     m_ref[...] = m_new
     v = vq_ref[0].astype(jnp.float32) * vs_ref[0][..., None]
-    acc_ref[...] = acc_ref[...] * corr[:, None] + jnp.einsum("hk,khd->hd", p, v)
+    pv = jnp.einsum("ngk,knd->ngd", p.reshape(n_kv, group, -1), v)
+    acc_ref[...] = acc_ref[...] * corr[:, None] + pv.reshape(n_kv * group, hd)
 
     @pl.when(j == n_blk - 1)
     def _epilogue():
@@ -76,24 +94,32 @@ def _kernel(q_ref, kq_ref, ks_ref, vq_ref, vs_ref, o_ref,
 @functools.partial(jax.jit, static_argnames=("blk", "out_dtype", "interpret"))
 def kv_attention_pallas(q, k_q, k_s, v_q, v_s, *, blk=512,
                         out_dtype=jnp.float32, interpret=False):
-    B, S, H, hd = k_q.shape
+    """q [B, Hq, hd]; k_q/v_q [B, S, Hkv, hd] int8; k_s/v_s [B, S, Hkv].
+
+    S must be a multiple of ``blk`` here — ``ops.kv_attention`` pads ragged
+    shapes with zero-scale (masked) positions before dispatching.
+    """
+    B, S, Hkv, hd = k_q.shape
+    Hq = q.shape[1]
     assert S % blk == 0
+    assert Hq % Hkv == 0
+    group = Hq // Hkv
     n_blk = S // blk
     scale = 1.0 / (hd ** 0.5)
     grid = (B, n_blk)
     return pl.pallas_call(
-        functools.partial(_kernel, n_blk=n_blk, scale=scale),
+        functools.partial(_kernel, n_blk=n_blk, scale=scale, group=group),
         grid=grid,
         in_specs=[
-            pl.BlockSpec((1, H, hd), lambda b, j: (b, 0, 0)),
-            pl.BlockSpec((1, blk, H, hd), lambda b, j: (b, j, 0, 0)),
-            pl.BlockSpec((1, blk, H), lambda b, j: (b, j, 0)),
-            pl.BlockSpec((1, blk, H, hd), lambda b, j: (b, j, 0, 0)),
-            pl.BlockSpec((1, blk, H), lambda b, j: (b, j, 0)),
+            pl.BlockSpec((1, Hq, hd), lambda b, j: (b, 0, 0)),
+            pl.BlockSpec((1, blk, Hkv, hd), lambda b, j: (b, j, 0, 0)),
+            pl.BlockSpec((1, blk, Hkv), lambda b, j: (b, j, 0)),
+            pl.BlockSpec((1, blk, Hkv, hd), lambda b, j: (b, j, 0, 0)),
+            pl.BlockSpec((1, blk, Hkv), lambda b, j: (b, j, 0)),
         ],
-        out_specs=pl.BlockSpec((1, H, hd), lambda b, j: (b, 0, 0)),
-        out_shape=jax.ShapeDtypeStruct((B, H, hd), out_dtype),
-        scratch_shapes=_scratch(H, hd),
+        out_specs=pl.BlockSpec((1, Hq, hd), lambda b, j: (b, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hq, hd), out_dtype),
+        scratch_shapes=_scratch(Hq, hd),
         interpret=interpret,
         **_PARAMS(),
     )(q, k_q, k_s.astype(jnp.float32), v_q, v_s.astype(jnp.float32))

@@ -1,21 +1,123 @@
-"""Pure-jnp oracle for single-token decode attention over an int8 KV cache."""
+"""Reference implementations for int8-KV decode attention.
+
+Two oracles with different jobs:
+
+  * ``kv_attention_ref`` — mirrors the Pallas kernel **block for block**
+    (same block order, same fp32 op sequence, same zero-scale masking), so
+    the interpret-mode kernel must match it *bit-exactly*: any divergence is
+    a BlockSpec/grid/scratch bug, not numerics. The property tests pin this
+    over ragged lengths, GQA ratios, and non-multiple-of-blk S.
+  * ``kv_attention_xla`` — the production XLA backend for non-TPU serving:
+    plain masked softmax with the per-token/per-head scales folded in at
+    score granularity (``[B, S, Hkv]``), so neither a dequantized
+    ``[B, S, H, hd]`` cache nor repeated GQA K/V is ever materialized.
+
+Both treat scale == 0 as "position invalid" (ragged per-slot lengths,
+padding); see kernel.py for why 0 is unambiguous.
+"""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
+_NEG = -1e30
+
+
+def pad_to_block(k_q, k_s, v_q, v_s, blk: int):
+    """Pad S up to a multiple of ``min(blk, S)`` with zero-scale (= masked)
+    positions. One helper shared by the op and the ref — the bit-exact
+    interpret==ref contract requires both to pad identically."""
+    S = k_q.shape[1]
+    blk_e = min(blk, S)
+    pad = (-S) % blk_e
+    if pad:
+        k_q = jnp.pad(k_q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v_q = jnp.pad(v_q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k_s = jnp.pad(k_s, ((0, 0), (0, pad), (0, 0)))
+        v_s = jnp.pad(v_s, ((0, 0), (0, pad), (0, 0)))
+    return k_q, k_s, v_q, v_s, blk_e
+
 
 def kv_attention_ref(
-    q: jnp.ndarray,        # [B, H, hd]
-    k_q: jnp.ndarray,      # [B, S, H, hd] int8
-    k_s: jnp.ndarray,      # [B, S, H] fp32 per-token, per-head scales
-    v_q: jnp.ndarray,      # [B, S, H, hd] int8
-    v_s: jnp.ndarray,      # [B, S, H]
+    q: jnp.ndarray,        # [B, Hq, hd]
+    k_q: jnp.ndarray,      # [B, S, Hkv, hd] int8
+    k_s: jnp.ndarray,      # [B, S, Hkv] fp32 per-token, per-head scales
+    v_q: jnp.ndarray,      # [B, S, Hkv, hd] int8
+    v_s: jnp.ndarray,      # [B, S, Hkv]
     out_dtype=jnp.float32,
+    *,
+    blk: int = 512,
 ) -> jnp.ndarray:
-    scale = 1.0 / (q.shape[-1] ** 0.5)
-    k = k_q.astype(jnp.float32) * k_s[..., None]
-    v = v_q.astype(jnp.float32) * v_s[..., None]
-    s = jnp.einsum("bhd,bshd->bhs", q.astype(jnp.float32), k) * scale
-    p = jax.nn.softmax(s, axis=-1)
-    return jnp.einsum("bhs,bshd->bhd", p, v).astype(out_dtype)
+    """Blocked online-softmax oracle — the kernel's math in pure jnp."""
+    B, S, Hkv, hd = k_q.shape
+    Hq = q.shape[1]
+    group = Hq // Hkv
+    k_q, k_s, v_q, v_s, blk_e = pad_to_block(k_q, k_s, v_q, v_s, blk)
+    n_blk = k_q.shape[1] // blk_e
+    scale = 1.0 / (hd ** 0.5)
+
+    qg = q.astype(jnp.float32).reshape(B, Hkv, group, hd)
+    # [n_blk, B, blk, ...] block streams, scanned in the kernel's grid order
+    def blocks(a):
+        return a.reshape(B, n_blk, blk_e, *a.shape[2:]).transpose(
+            1, 0, *range(2, a.ndim + 1))
+
+    def body(carry, inp):
+        m, l, acc = carry                       # [B, Hq], [B, Hq], [B, Hq, hd]
+        kq_b, ks_b, vq_b, vs_b = inp
+        ks_b = ks_b.astype(jnp.float32)
+        k = kq_b.astype(jnp.float32) * ks_b[..., None]      # [B, blk, Hkv, hd]
+        s = jnp.einsum("bngd,bknd->bngk", qg, k) * scale    # [B, Hkv, G, blk]
+        s = jnp.where((ks_b > 0).transpose(0, 2, 1)[:, :, None, :], s, _NEG)
+        s = s.reshape(B, Hq, -1)
+        m_new = jnp.maximum(m, jnp.max(s, -1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l = l * corr + jnp.sum(p, -1)
+        v = vq_b.astype(jnp.float32) * vs_b.astype(jnp.float32)[..., None]
+        pv = jnp.einsum("bngk,bknd->bngd", p.reshape(B, Hkv, group, -1), v)
+        acc = acc * corr[..., None] + pv.reshape(B, Hq, hd)
+        return (m_new, l, acc), None
+
+    m0 = jnp.full((B, Hq), _NEG, jnp.float32)
+    l0 = jnp.zeros((B, Hq), jnp.float32)
+    acc0 = jnp.zeros((B, Hq, hd), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        body, (m0, l0, acc0), (blocks(k_q), blocks(k_s), blocks(v_q), blocks(v_s))
+    )
+    return (acc / jnp.maximum(l, 1e-30)[..., None]).astype(out_dtype)
+
+
+def kv_attention_xla(
+    q: jnp.ndarray,        # [B, Hq, hd]
+    k_q: jnp.ndarray,      # [B, S, Hkv, hd] int8
+    k_s: jnp.ndarray,      # [B, S, Hkv]
+    v_q: jnp.ndarray,      # [B, S, Hkv, hd] int8
+    v_s: jnp.ndarray,      # [B, S, Hkv]
+    out_dtype=jnp.float32,
+    v_err: jnp.ndarray = None,   # [B, S, Hkv] optional V dequant-error means
+) -> jnp.ndarray:
+    """Serving XLA path: scales (and the optional per-token V bias
+    correction, paper §4.2 applied to the V dequant error) fold in at
+    ``[B, S, Hkv]`` score/probability granularity — the per-token-per-head
+    scale factors out of the head_dim dot product, so the int8 payload feeds
+    the einsum directly."""
+    B, S, Hkv, hd = k_q.shape
+    Hq = q.shape[1]
+    group = Hq // Hkv
+    scale = 1.0 / (hd ** 0.5)
+    qg = q.astype(jnp.float32).reshape(B, Hkv, group, hd)
+    ks_t = k_s.astype(jnp.float32).transpose(0, 2, 1)       # [B, Hkv, S]
+    s = jnp.einsum("bngd,bsnd->bngs", qg, k_q.astype(jnp.float32))
+    s = s * (ks_t * scale)[:, :, None, :]
+    s = jnp.where((ks_t > 0)[:, :, None, :], s, _NEG)
+    p = jax.nn.softmax(s, axis=-1)                          # [B, Hkv, G, S]
+    vs_t = v_s.astype(jnp.float32).transpose(0, 2, 1)
+    out = jnp.einsum("bngs,bsnd->bngd", p * vs_t[:, :, None, :],
+                     v_q.astype(jnp.float32))
+    if v_err is not None:
+        # out_d -= sum_s p_s * E_d[dequant(v_s) - v_s]: removes the mean
+        # (per-token, per-head) component of the V quantization error
+        e = jnp.einsum("bngs,bsn->bng", p, v_err.astype(jnp.float32))
+        out = out - e[..., None]
+    return out.reshape(B, Hq, hd).astype(out_dtype)

@@ -11,6 +11,7 @@ dispatch, slot-based KV-cache pool, FIFO admission).
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import time
 
 import jax
@@ -35,6 +36,13 @@ def main(argv=None):
     ap.add_argument("--quantize", choices=["none", "w8a16", "w8a8"], default="w8a16")
     ap.add_argument("--recipe", default=None,
                     help="pipeline recipe name (overrides --quantize)")
+    ap.add_argument("--kv-bits", type=int, choices=[8, 16], default=None,
+                    help="KV-cache precision: 8 = int8 payload + per-token/"
+                         "per-head scales (~4x fewer cache bytes/slot, "
+                         "decode attends through the kv_attention kernel), "
+                         "16 = fp. Default: what the recipe/artifact "
+                         "recorded (--quantize w8a16 --kv-bits 8 selects "
+                         "the serve-w8a16-kv8 recipe)")
     ap.add_argument("--save", default=None, metavar="DIR",
                     help="persist the QuantizedModel after quantization")
     ap.add_argument("--load", default=None, metavar="DIR",
@@ -91,9 +99,20 @@ def main(argv=None):
         model = build_model(cfg)
         qm = None
         if args.recipe or args.quantize != "none":
-            recipe = args.recipe or f"serve-{args.quantize}"
+            recipe = args.recipe or (
+                f"serve-{args.quantize}-kv8" if args.kv_bits == 8
+                else f"serve-{args.quantize}"
+            )
             qm = quantize(model, recipe=recipe)
-            params = qm.params
+            if (args.kv_bits is not None
+                    and qm.cfg.kv_cache_bits != args.kv_bits):
+                # an explicit --recipe may not carry a kv_cache stage: fold
+                # the requested KV precision into the artifact so a --save /
+                # --load round trip serves with the same cache as this run
+                qm.cfg = dataclasses.replace(
+                    qm.cfg, kv_cache_bits=args.kv_bits)
+                qm.model = build_model(qm.cfg)
+            cfg, model, params = qm.cfg, qm.model, qm.params
         else:
             params = model.init(jax.random.PRNGKey(0))
 
@@ -142,8 +161,11 @@ def main(argv=None):
     engine = ServingEngine(
         model, params, cfg, num_slots=args.slots, max_len=max_len,
         prefill_chunk=C, decode_horizon=args.decode_horizon,
-        fast=not args.reference,
+        fast=not args.reference, kv_bits=args.kv_bits,
     )
+    print(f"kv cache: {'int8' if engine.kv_bits == 8 else 'fp'} "
+          f"({engine.pool.bytes_per_slot() / 1e3:.1f} kB/slot, "
+          f"{args.slots} slots x {max_len} positions)")
     if args.warmup:
         t0 = time.time()
         engine.warmup()

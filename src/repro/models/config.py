@@ -31,6 +31,11 @@ class ModelConfig:
     attn_causal_segments: int = 8             # causal block skipping granularity
     kv_cache_bits: int = 16                   # 8 → int8 KV cache (per-token,
                                               # per-head absmax scales)
+    kv_bias_correct: bool = False             # int8 KV only: store per-token
+                                              # V dequant-error means and
+                                              # subtract them from attention
+                                              # output (paper §4.2 applied to
+                                              # the V quantization error)
     tie_embeddings: bool = True
     sliding_window: Optional[int] = None      # mixtral SWA
     max_seq: int = 131072

@@ -348,6 +348,7 @@ def attention_block(
             k = apply_rope(k, cos_q, sin_q)
 
     new_cache = None
+    attn_fused = None        # set by the int8 decode fast path (kv_attention)
     if cache is not None and kv_input is None:
         # Ring-buffer KV cache with explicit absolute slot positions: length
         # S = min(context, window) for SWA. ``kpos`` holds each slot's
@@ -367,59 +368,85 @@ def attention_block(
         else:
             qpos = pos + jnp.arange(T)
         idx = qpos % S                       # ring write offset per new token
-        int8_kv = "k_scale" in cache
-        if int8_kv:
-            def q8(t):  # [B, T, H, hd] → int8 payload + [B, T, H] scale
-                amax = jnp.max(jnp.abs(t.astype(jnp.float32)), axis=-1)
-                scale = jnp.maximum(amax, 1e-8) / 127.0
-                q = jnp.clip(jnp.round(t.astype(jnp.float32) / scale[..., None]),
-                             -127, 127).astype(jnp.int8)
-                return q, scale.astype(jnp.float32)
-
-            k_q, k_s = q8(k)
-            v_q, v_s = q8(v)
-            if per_slot:
-                ck = cache["k"].at[row, idx].set(k_q)
-                cv = cache["v"].at[row, idx].set(v_q)
-                ks = cache["k_scale"].at[row, idx].set(k_s)
-                vs = cache["v_scale"].at[row, idx].set(v_s)
-                kpos = cache["kpos"].at[row, idx].set(qpos)
-            else:
-                ck = cache["k"].at[:, idx].set(k_q)
-                cv = cache["v"].at[:, idx].set(v_q)
-                ks = cache["k_scale"].at[:, idx].set(k_s)
-                vs = cache["v_scale"].at[:, idx].set(v_s)
-                kpos = cache["kpos"].at[idx].set(qpos)
-            new_cache = {"k": ck, "v": cv, "k_scale": ks, "v_scale": vs,
-                         "kpos": kpos, "pos": pos + T}
-            k = (ck.astype(x.dtype) * ks.astype(x.dtype)[..., None])
-            v = (cv.astype(x.dtype) * vs.astype(x.dtype)[..., None])
-        else:
-            if per_slot:
-                ck = cache["k"].at[row, idx].set(k.astype(cache["k"].dtype))
-                cv = cache["v"].at[row, idx].set(v.astype(cache["v"].dtype))
-                kpos = cache["kpos"].at[row, idx].set(qpos)
-            else:
-                ck = cache["k"].at[:, idx].set(k.astype(cache["k"].dtype))
-                cv = cache["v"].at[:, idx].set(v.astype(cache["v"].dtype))
-                kpos = cache["kpos"].at[idx].set(qpos)
-            new_cache = {"k": ck, "v": cv, "kpos": kpos, "pos": pos + T}
-            k, v = ck.astype(x.dtype), cv.astype(x.dtype)
+        # bookkeeping + attention mask from the POST-write slot positions
         if per_slot:
+            kpos = cache["kpos"].at[row, idx].set(qpos)
             m = (kpos >= 0)[:, None, :] & (kpos[:, None, :] <= qpos[..., None])
             if dims.window is not None:
                 m = m & (kpos[:, None, :] > qpos[..., None] - dims.window)
             mask = m  # 3-D [B, Tq, S]
         else:
+            kpos = cache["kpos"].at[idx].set(qpos)
             m = (kpos >= 0)[None, :] & (kpos[None, :] <= qpos[:, None])
             if dims.window is not None:
                 m = m & (kpos[None, :] > qpos[:, None] - dims.window)
             mask = m  # 2-D [Tq, S]
+        if "k_scale" in cache:
+            from ..kernels.kv_attention.ops import (
+                append_quantize,
+                kv_attention_decode,
+            )
+
+            valid = m[:, 0, :] if per_slot else m[0][None, :]     # [B|1, S]
+            if T == 1:
+                # decode hot path: the fused append-quantize op — the new
+                # token's K/V is quantized once, scattered into the int8
+                # cache, and attention runs straight over it (Pallas on TPU,
+                # folded-scale XLA elsewhere — same backend selection as the
+                # GEMM kernels). Masking rides on the scales: invalid
+                # positions get scale 0, so no dequantized [B, S, H, hd]
+                # cache is ever materialized. The V bias correction is
+                # XLA-only, so a v_err cache routes off the Pallas kernel.
+                backend = ("pallas" if jax.default_backend() == "tpu"
+                           and "v_err" not in cache else "xla")
+                out, leaves = kv_attention_decode(
+                    q[:, 0], cache["k"], cache["k_scale"], cache["v"],
+                    cache["v_scale"], k, v, idx, valid=valid,
+                    out_dtype=x.dtype, backend=backend,
+                    cache_verr=cache.get("v_err"),
+                )
+                attn_fused = out[:, None]                   # [B, 1, Hq, hd]
+            else:
+                # chunked prefill: append-quantize once, then dequantize for
+                # the batched attention (compute-bound regime; the kernel is
+                # a single-token decode op)
+                leaves = append_quantize(
+                    cache["k"], cache["k_scale"], cache["v"],
+                    cache["v_scale"], k, v, idx,
+                    cache_verr=cache.get("v_err"),
+                )
+                ck, ks, cv, vs = leaves[:4]
+                k = ck.astype(x.dtype) * ks.astype(x.dtype)[..., None]
+                v = cv.astype(x.dtype) * vs.astype(x.dtype)[..., None]
+                if "v_err" in cache:
+                    # Σ p (ṽ − e) == Σ p ṽ − Σ p e: same correction as decode
+                    v = v - leaves[4].astype(x.dtype)[..., None]
+            new_cache = {"k": leaves[0], "k_scale": leaves[1],
+                         "v": leaves[2], "v_scale": leaves[3],
+                         "kpos": kpos, "pos": pos + T}
+            if "v_err" in cache:
+                new_cache["v_err"] = leaves[4]
+        else:
+            if per_slot:
+                ck = cache["k"].at[row, idx].set(k.astype(cache["k"].dtype))
+                cv = cache["v"].at[row, idx].set(v.astype(cache["v"].dtype))
+            else:
+                ck = cache["k"].at[:, idx].set(k.astype(cache["k"].dtype))
+                cv = cache["v"].at[:, idx].set(v.astype(cache["v"].dtype))
+            new_cache = {"k": ck, "v": cv, "kpos": kpos, "pos": pos + T}
+            k, v = ck.astype(x.dtype), cv.astype(x.dtype)
     elif cache is not None and kv_input is not None:
         # cross-attention cache: static encoder K/V (computed at prefill)
         k = cache["k"].astype(x.dtype)
         v = cache["v"].astype(x.dtype)
         new_cache = cache
+
+    if attn_fused is not None:
+        attn = attn_fused.reshape(B, T, nq * hd)
+        if capture:
+            stats["o_in"] = jnp.mean(attn.reshape(-1, nq * hd), 0)
+        out = linear(attn, p["wo"], p.get("bo"))
+        return out, new_cache, stats
 
     group = nq // nkv
     k = _repeat_kv(k, group)

@@ -352,12 +352,17 @@ class LMModel:
         return seq_len
 
     def init_cache(self, batch: int, seq_len: int, dtype=jnp.bfloat16,
-                   per_slot: bool = False) -> dict:
+                   per_slot: bool = False, kv_bits: Optional[int] = None) -> dict:
         """``per_slot=True`` builds the continuous-batching variant: each
         batch row is an independent serving slot with its own write offset
         (``pos`` [B]) and absolute slot positions (``kpos`` [B, S]), so the
-        engine can prefill/retire rows at different sequence positions."""
+        engine can prefill/retire rows at different sequence positions.
+        ``kv_bits`` overrides ``cfg.kv_cache_bits`` (8 → int8 payload +
+        per-token/per-head scales; 16 → fp payload in ``dtype``)."""
         cfg = self.cfg
+        kv_bits = cfg.kv_cache_bits if kv_bits is None else int(kv_bits)
+        if kv_bits not in (8, 16):
+            raise ValueError(f"kv_bits must be 8 or 16, got {kv_bits}")
         S = self.cache_len(seq_len)
         if per_slot and cfg.family in ("ssm", "hybrid"):
             raise ValueError(
@@ -372,7 +377,7 @@ class LMModel:
                 "conv": jnp.zeros((cfg.n_layers, batch, cfg.ssm_conv_width - 1, d_conv), dtype),
                 "pos": jnp.zeros((), jnp.int32),
             }
-        kv_dtype = jnp.int8 if cfg.kv_cache_bits == 8 else dtype
+        kv_dtype = jnp.int8 if kv_bits == 8 else dtype
         kv = {
             "k": jnp.zeros((cfg.n_layers, batch, S, cfg.n_kv_heads, cfg.head_dim), kv_dtype),
             "v": jnp.zeros((cfg.n_layers, batch, S, cfg.n_kv_heads, cfg.head_dim), kv_dtype),
@@ -381,9 +386,15 @@ class LMModel:
             "pos": (jnp.zeros((batch,), jnp.int32) if per_slot
                     else jnp.zeros((), jnp.int32)),
         }
-        if cfg.kv_cache_bits == 8:
-            kv["k_scale"] = jnp.ones((cfg.n_layers, batch, S, cfg.n_kv_heads), jnp.float32)
-            kv["v_scale"] = jnp.ones((cfg.n_layers, batch, S, cfg.n_kv_heads), jnp.float32)
+        if kv_bits == 8:
+            # scale 0 == "position invalid" (the kv_attention masking
+            # contract): an unwritten cache position is masked by
+            # construction, not just by the kpos bookkeeping
+            kv["k_scale"] = jnp.zeros((cfg.n_layers, batch, S, cfg.n_kv_heads), jnp.float32)
+            kv["v_scale"] = jnp.zeros((cfg.n_layers, batch, S, cfg.n_kv_heads), jnp.float32)
+            if cfg.kv_bias_correct:
+                kv["v_err"] = jnp.zeros(
+                    (cfg.n_layers, batch, S, cfg.n_kv_heads), jnp.float32)
         if cfg.family == "hybrid":
             _, H, G, St, _, d_conv = ssm_dims(cfg)
             n_app = cfg.n_layers // cfg.hybrid_attn_every
@@ -478,7 +489,8 @@ class LMModel:
                 "pos": pos + T,
             }
         else:
-            kv_keys = [k for k in ("k", "v", "k_scale", "v_scale") if k in cache]
+            kv_keys = [k for k in ("k", "v", "k_scale", "v_scale", "v_err")
+                       if k in cache]
 
             def body(carry, inp):
                 x = carry

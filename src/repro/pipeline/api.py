@@ -173,6 +173,16 @@ def quantize(
     state = PipelineState(params=params, plan=plan, config=config or DFQConfig())
     ctx = PipelineContext(model=model, cfg=cfg, calibrate=calibrate)
     state = run_recipe(r, state, ctx)
+    if state.kv_bits is not None and state.kv_bits != cfg.kv_cache_bits:
+        # the kv_cache stage is weight-free: fold the KV precision into the
+        # artifact's config (and rebuild the model over it) so init_cache,
+        # the serving engine, and save/load all see the recorded precision
+        import dataclasses
+
+        from ..models import build_model
+
+        cfg = dataclasses.replace(cfg, kv_cache_bits=state.kv_bits)
+        model = build_model(cfg)
     return QuantizedModel(
         model=model, cfg=cfg, params=state.params, recipe=r,
         report=state.report, act_qparams=state.act_qparams,

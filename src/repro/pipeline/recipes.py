@@ -121,6 +121,20 @@ BUILTIN_RECIPES: dict[str, Recipe] = {
             "int8 activations (MXU int8 matmul)",
             "fold_norm", "cle", "bias_absorb", ("pack", {"mode": "w8a8"}),
         ),
+        _r(
+            "serve-w8a16-kv8",
+            "serve-w8a16 plus an int8 KV cache (per-token/per-head scales; "
+            "decode attends through the kv_attention kernel)",
+            "fold_norm", "cle", "bias_absorb", ("pack", {"mode": "w8a16"}),
+            ("kv_cache", {"bits": 8}),
+        ),
+        _r(
+            "serve-w8a8-kv8",
+            "serve-w8a8 plus an int8 KV cache — the full int8 serving stack "
+            "(weights, activations, KV stream)",
+            "fold_norm", "cle", "bias_absorb", ("pack", {"mode": "w8a8"}),
+            ("kv_cache", {"bits": 8}),
+        ),
     )
 }
 

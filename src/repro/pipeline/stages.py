@@ -190,6 +190,25 @@ def act_ranges_stage(state, ctx, *, n_sigma):
     return state
 
 
+@register_stage("kv_cache", bits=8)
+def kv_cache_stage(state, ctx, *, bits):
+    """Record the serving KV-cache precision on the artifact.
+
+    bits=8 applies the paper's symmetric per-token/per-head quantizer to the
+    KV stream: caches built from the resulting QuantizedModel hold int8
+    payload + fp32 scales, and decode attends through the int8 kv_attention
+    op. A weight-free stage — ``repro.quantize`` folds ``state.kv_bits``
+    into the artifact's config so save/load/serve round-trips carry it.
+    """
+    if bits not in (8, 16):
+        raise PipelineError(
+            f"kv_cache: bits must be 8 or 16, got {bits!r}"
+        )
+    state.kv_bits = int(bits)
+    state.note(bits=int(bits))
+    return state
+
+
 @register_stage("pack", mode="w8a16", per_channel=False)
 def pack_stage(state, ctx, *, mode, per_channel):
     """Pack weight sites into int8 QTensors for true-int8 serving.

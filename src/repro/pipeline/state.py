@@ -63,6 +63,7 @@ class PipelineState:
     act_qparams: dict = dataclasses.field(default_factory=dict)
     packed: bool = False
     pack_mode: Optional[str] = None
+    kv_bits: Optional[int] = None  # set by the kv_cache stage (8 → int8 KV)
     records: list = dataclasses.field(default_factory=list)
     _pending_metrics: dict = dataclasses.field(default_factory=dict)
 

@@ -17,16 +17,26 @@ class PoolExhausted(RuntimeError):
 
 
 class CachePool:
-    def __init__(self, model, num_slots: int, max_len: int, dtype=None):
+    def __init__(self, model, num_slots: int, max_len: int, dtype=None,
+                 kv_bits=None):
+        """``dtype`` defaults to the model's activation compute dtype (halves
+        cache bytes for bf16 models vs the old fp32 default); pass an explicit
+        dtype to override. ``kv_bits=8`` selects the int8 pooled cache (int8
+        payload + per-token/per-head scales), ``kv_bits=16`` forces fp, None
+        follows ``model.cfg.kv_cache_bits``."""
         import jax.numpy as jnp
 
         if num_slots < 1:
             raise ValueError(f"num_slots must be >= 1, got {num_slots}")
         self.num_slots = num_slots
+        if dtype is None:
+            cfg = getattr(model, "cfg", None)
+            dtype = jnp.dtype(cfg.dtype) if cfg is not None else jnp.float32
+        kw = {} if kv_bits is None else {"kv_bits": kv_bits}
         self.cache: dict = model.init_cache(
-            num_slots, max_len, dtype=(jnp.float32 if dtype is None else dtype),
-            per_slot=True,
+            num_slots, max_len, dtype=dtype, per_slot=True, **kw
         )
+        self.kv_bits = 8 if "k_scale" in self.cache else 16
         # the model may shrink the ring below the requested length (sliding-
         # window attention: S = min(max_len, window)); capacity checks must
         # see the REAL ring size or padded prefill chunks could wrap and
@@ -46,6 +56,15 @@ class CachePool:
 
     def is_allocated(self, slot: int) -> bool:
         return slot in self._allocated
+
+    def bytes_per_slot(self) -> int:
+        """KV bytes one slot owns (payload + scales + correction leaves;
+        the kpos/pos bookkeeping, 4 B/position either way, is excluded) —
+        the roofline's cache-stream term per request."""
+        kv = ("k", "v", "k_scale", "v_scale", "v_err")
+        total = sum(v.size * v.dtype.itemsize
+                    for k, v in self.cache.items() if k in kv)
+        return total // self.num_slots
 
     def all_free(self) -> bool:
         return not self._allocated and len(self._free) == self.num_slots

@@ -165,12 +165,18 @@ class ServingEngine:
         or when holding external references to ``pool.cache`` (the fast and
         slow paths both DONATE the cache buffer to the jitted step, so the
         pre-call cache object is invalidated after every dispatch).
+    cache_dtype: fp payload dtype of the pooled cache; None (default) uses
+        the model's activation compute dtype.
+    kv_bits: 8 → int8 pooled KV cache (int8 payload + per-token/per-head
+        scales; decode attends through the kv_attention op), 16 → fp, None
+        → follow ``cfg.kv_cache_bits`` (so a ``*-kv8`` quantize recipe
+        carries its KV precision into the engine).
     """
 
     def __init__(self, model, params, cfg, *, num_slots: int = 4,
                  max_len: int = 128, prefill_chunk: int = 16,
-                 cache_dtype=jnp.float32, decode_horizon: int = 8,
-                 fast: bool = True):
+                 cache_dtype=None, decode_horizon: int = 8,
+                 fast: bool = True, kv_bits: Optional[int] = None):
         if cfg.family in ("ssm", "hybrid") or cfg.is_encdec:
             raise ValueError(
                 f"the serving engine supports attention-family decoder-only "
@@ -185,7 +191,9 @@ class ServingEngine:
         self.prefill_chunk = prefill_chunk
         self.decode_horizon = decode_horizon
         self.fast = fast
-        self.pool = CachePool(model, num_slots, max_len, dtype=cache_dtype)
+        self.pool = CachePool(model, num_slots, max_len, dtype=cache_dtype,
+                              kv_bits=kv_bits)
+        self.kv_bits = self.pool.kv_bits
         # may be < the requested max_len (sliding-window ring); admission is
         # capped at the real ring so wrap-around never clobbers live keys
         self.max_len = self.pool.max_len

@@ -201,12 +201,14 @@ def cache_pspecs(cache_shapes: Any, mesh: Mesh, batch: int) -> Any:
             if shape[B_dim] % dp_n == 0 and shape[B_dim] >= dp_n:
                 axes[B_dim] = dp_axes
             elif (path.endswith("/k") or path.endswith("/v")
-                  or path.endswith("_scale")):
+                  or path.endswith("_scale") or path.endswith("/v_err")):
                 S_dim = 2
                 if shape[S_dim] % dp_n == 0:
                     axes[S_dim] = dp_axes
-            if path.endswith("_scale") and len(shape) == 4:
-                # [L, B, S, H] int8-cache scales: follow the payload sharding
+            if ((path.endswith("_scale") or path.endswith("/v_err"))
+                    and len(shape) == 4):
+                # [L, B, S, H] int8-cache scales (and the optional V
+                # dequant-error means): follow the payload sharding
                 if shape[2] % model_n == 0 and shape[2] >= model_n:
                     axes[2] = "model"
             if (path.endswith("/k") or path.endswith("/v")) and len(shape) == 5:

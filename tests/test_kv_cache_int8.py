@@ -26,6 +26,24 @@ def test_int8_cache_decode_parity(arch):
     assert float(jnp.max(jnp.abs(ld - full[:, -1]))) / denom < 0.08
 
 
+def test_int8_cache_bias_correct_decode_parity():
+    """kv_bias_correct=True adds the v_err leaf and stays within the int8
+    noise bound (the correction only removes the V error's mean component,
+    it must never blow up the logits)."""
+    cfg = dataclasses.replace(get_config("qwen2-0.5b", smoke=True),
+                              kv_cache_bits=8, kv_bias_correct=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 12), 0, cfg.vocab_size)
+    full, _ = model.apply(params, toks)
+    cache = model.init_cache(2, 24, dtype=jnp.float32)
+    assert "v_err" in cache
+    _, cache = model.prefill(params, toks[:, :-1], cache)
+    ld, cache = model.decode_step(params, toks[:, -1:], cache)
+    denom = float(jnp.max(jnp.abs(full[:, -1]))) + 1e-9
+    assert float(jnp.max(jnp.abs(ld - full[:, -1]))) / denom < 0.08
+
+
 def test_int8_cache_halves_bytes():
     cfg8 = dataclasses.replace(get_config("yi-34b", smoke=True), kv_cache_bits=8)
     cfg16 = get_config("yi-34b", smoke=True)
