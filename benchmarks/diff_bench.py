@@ -1,0 +1,116 @@
+"""Diff fresh benchmark JSONs against committed baselines → CI step summary.
+
+The bench-smoke job regenerates ``BENCH_serve.json`` / ``BENCH_kernels.json``
+on every PR; this script compares them with the baselines committed under
+``benchmarks/`` and writes a markdown tok/s delta table to
+``$GITHUB_STEP_SUMMARY`` (stdout when unset), so perf regressions surface on
+the PR page instead of only inside downloaded artifacts. Non-blocking by
+design: it always exits 0 — regressions beyond the threshold are flagged in
+the table, not enforced (CPU-runner wall noise would make a hard gate flaky).
+
+    python benchmarks/diff_bench.py \
+        --pair BENCH_serve.json benchmarks/BENCH_serve.smoke.json \
+        --pair BENCH_kernels.json benchmarks/BENCH_kernels.smoke.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import pathlib
+
+# wall-time noise on shared CI runners: only call out deltas beyond this
+FLAG_PCT = 10.0
+# drop pure wall-second counters and token dumps; keep rates and ratios
+_SKIP = ("seconds", "tokens")
+
+
+def _flatten(node, prefix="") -> dict:
+    out = {}
+    if isinstance(node, dict):
+        for k, v in node.items():
+            if k in _SKIP:
+                continue
+            out.update(_flatten(v, f"{prefix}.{k}" if prefix else str(k)))
+    elif isinstance(node, list):
+        for i, v in enumerate(node):
+            # benchmark result lists carry a "label" — key on it so rows
+            # stay comparable when list order changes between runs
+            key = v["label"] if isinstance(v, dict) and "label" in v else str(i)
+            out.update(_flatten(v, f"{prefix}.{key}" if prefix else key))
+    elif isinstance(node, bool):
+        pass
+    elif isinstance(node, (int, float)):
+        out[prefix] = float(node)
+    return out
+
+
+def _is_throughput(key: str) -> bool:
+    """Headline rows only — the full payload rides in the uploaded artifact.
+    tok/s is limited to the stepwise reference and the top-horizon fast path
+    (the two ends of the sweep); ratios/speedups always make the table."""
+    if "speedup" in key or "reduction" in key or "sharded_vs_single" in key:
+        return True
+    if key.endswith(".tok_s"):
+        return "variants.slow" in key or "variants.fast_h8" in key
+    return key.endswith("tok_s_sharded") or key.endswith("tok_s_single")
+
+
+def diff_table(fresh: dict, base: dict, name: str) -> list[str]:
+    f_flat, b_flat = _flatten(fresh), _flatten(base)
+    shared = sorted(k for k in f_flat if k in b_flat)
+    rows = [k for k in shared if _is_throughput(k)]
+    lines = [f"### {name}", ""]
+    if fresh.get("smoke") != base.get("smoke"):
+        lines += ["> baseline and fresh run used different dims "
+                  "(smoke flag mismatch) — deltas are not comparable", ""]
+    if not rows:
+        lines += ["_no shared throughput metrics to compare_", ""]
+        return lines
+    lines += ["| metric | baseline | fresh | Δ |", "|---|---:|---:|---:|"]
+    flagged = 0
+    for k in rows:
+        b, f = b_flat[k], f_flat[k]
+        pct = (f - b) / b * 100 if b else float("nan")
+        mark = " ⚠️" if abs(pct) > FLAG_PCT else ""
+        flagged += bool(mark)
+        lines.append(f"| `{k}` | {b:.3f} | {f:.3f} | {pct:+.1f}%{mark} |")
+    only_f = sorted(k for k in f_flat if k not in b_flat and _is_throughput(k))
+    if only_f:
+        lines += ["", "new metrics (no baseline): "
+                  + ", ".join(f"`{k}`={f_flat[k]:.3f}" for k in only_f)]
+    lines += ["", f"{len(rows)} metrics compared, {flagged} beyond "
+              f"±{FLAG_PCT:.0f}% (informative — wall noise on shared "
+              f"runners; the trajectory lives in the committed baselines)",
+              ""]
+    return lines
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--pair", nargs=2, action="append", required=True,
+                    metavar=("FRESH", "BASELINE"),
+                    help="fresh-run JSON and its committed baseline")
+    args = ap.parse_args(argv)
+
+    lines = ["## Benchmark deltas vs committed baselines", ""]
+    for fresh_path, base_path in args.pair:
+        fp, bp = pathlib.Path(fresh_path), pathlib.Path(base_path)
+        if not fp.exists() or not bp.exists():
+            missing = fp if not fp.exists() else bp
+            lines += [f"### {fp.name}", "", f"_skipped: {missing} missing_", ""]
+            continue
+        lines += diff_table(json.loads(fp.read_text()),
+                            json.loads(bp.read_text()), fp.name)
+
+    text = "\n".join(lines)
+    summary = os.environ.get("GITHUB_STEP_SUMMARY")
+    if summary:
+        with open(summary, "a") as f:
+            f.write(text + "\n")
+    print(text)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

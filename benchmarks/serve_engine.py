@@ -18,6 +18,19 @@ each axis is isolated):
     per-token/per-head scales, decode through the kv_attention op), with
     its own fast-vs-stepwise parity assert; the ``kv8_vs_fp`` summary
     records the steady-trace tok/s ratio and the KV bytes/slot reduction.
+  * **topology** — when jax sees >= 8 devices (the bench-smoke CI job forces
+    8 virtual CPU devices), the top-horizon fast engine is additionally run
+    over a 2x4 ("data", "model") mesh and parity-asserted token-for-token
+    against its single-device twin. On CPU the collectives are pure
+    overhead, so the recorded ``sharded_vs_single`` ratio tracks sharding
+    TAX, not speedup — the point is that the deployment topology is
+    exercised (and its tokens pinned) continuously. Caveat: FORCING virtual
+    devices shrinks each CPU device's thread pool, which re-partitions
+    matmul reductions differently across compiled programs — at the full
+    (non-smoke) dims that float-level wobble can flip a greedy argmax deep
+    into the 177-step steady decode and trip the parity asserts. Run the
+    full bench on real topology or single-device; the virtual-device recipe
+    is for --smoke (what CI does).
 
 Each comparison runs on the regime it targets, over two traces per variant:
 
@@ -216,6 +229,60 @@ def bench_variant(label: str, model, params, setup: dict, *,
     return out
 
 
+def bench_sharded(label: str, model, params, setup: dict, *,
+                  kv_bits=None) -> dict:
+    """Sharded-vs-single sweep for one (model, params): the top-horizon fast
+    engine on a 2x4 ("data", "model") mesh vs single-device, both traces,
+    tokens parity-asserted. Requires >= 8 jax devices (the bench-smoke job
+    forces 8 virtual CPU devices via XLA_FLAGS)."""
+    from repro.launch.mesh import make_production_mesh
+
+    cfg = setup["cfg"]
+    mesh = make_production_mesh(shape=(2, 4))
+    traces = {
+        "mixed": synthetic_trace(
+            0, setup["n_requests"], vocab_size=cfg.vocab_size,
+            prompt_lens=setup["prompt_lens"], gen_lens=setup["gen_lens"]),
+        "steady": synthetic_trace(
+            0, setup["slots"], vocab_size=cfg.vocab_size,
+            prompt_lens=(setup["steady_prompt"],) * 2,
+            gen_lens=(setup["steady_gen"],) * 2),
+    }
+    kw = dict(num_slots=setup["slots"], max_len=setup["max_len"],
+              prefill_chunk=setup["prefill_chunk"], kv_bits=kv_bits,
+              fast=True, decode_horizon=max(HORIZONS))
+    out = {"label": label, "mesh_shape": [2, 4],
+           "mesh_axes": ["data", "model"], "traces": {}}
+    rows = {}
+    # sequential build→warm→run→discard: both engines at once would hold two
+    # full param placements + two KV pools at peak (matters at real dims)
+    for mode in ("single", "sharded"):
+        eng = ServingEngine(model, params, cfg,
+                            mesh=mesh if mode == "sharded" else None, **kw)
+        eng.warmup()
+        rows[mode] = {t: _run(eng, trace, repeats=2)
+                      for t, trace in traces.items()}
+        del eng
+    for tname in traces:
+        assert (rows["sharded"][tname]["tokens"]
+                == rows["single"][tname]["tokens"]), (
+            f"{label}/{tname}: sharded tokens diverged from single-device"
+        )
+        out["traces"][tname] = {
+            "tok_s_single": rows["single"][tname]["tok_s"],
+            "tok_s_sharded": rows["sharded"][tname]["tok_s"],
+            "sharded_vs_single":
+                rows["sharded"][tname]["tok_s"]
+                / rows["single"][tname]["tok_s"],
+        }
+        r = out["traces"][tname]
+        print(f"  sharded 2x4 {label}/{tname}: "
+              f"{r['tok_s_sharded']:8.1f} vs single "
+              f"{r['tok_s_single']:8.1f} tok/s "
+              f"({r['sharded_vs_single']:.2f}x, tokens identical)")
+    return out
+
+
 def main(argv=None) -> list[dict]:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
@@ -254,7 +321,30 @@ def main(argv=None) -> list[dict]:
               f"({row['kv_bytes_per_slot_fp']} -> "
               f"{row['kv_bytes_per_slot_kv8']} B)")
 
-    write_bench_json(args.json, results, setup, kv8)
+    sharded = []
+    # >1 CPU device only happens when virtual devices are FORCED — at full
+    # dims that repartitions matmul reductions enough to flip deep-decode
+    # argmaxes and trip the parity asserts (module docstring), so the full
+    # sweep only runs on real multi-device topology
+    forced_virtual = jax.default_backend() == "cpu"
+    if jax.device_count() >= 8 and (args.smoke or not forced_virtual):
+        print("sharded sweep (2x4 mesh, tokens parity-asserted):")
+        sharded.append(bench_sharded("fp32", model, params, setup))
+        sharded.append(bench_sharded("serve-w8a16", qm.model, qm.params,
+                                     setup))
+        sharded.append(bench_sharded("serve-w8a16-kv8", qm.model, qm.params,
+                                     setup, kv_bits=8))
+    elif jax.device_count() >= 8:
+        print("sharded sweep skipped: full dims on forced virtual CPU "
+              "devices break cross-program bit parity (see module "
+              "docstring); run with --smoke or on real topology")
+    else:
+        print(f"sharded sweep skipped: {jax.device_count()} device(s); set "
+              f"XLA_FLAGS=--xla_force_host_platform_device_count=8 and "
+              f"--smoke")
+
+    write_bench_json(args.json, results, setup, kv8, sharded=sharded,
+                     smoke=args.smoke)
     return results
 
 
@@ -288,11 +378,14 @@ def _kv8_summary(results: list[dict]) -> dict:
 
 
 def write_bench_json(path, results: list[dict], setup: dict,
-                     kv8: dict = None) -> None:
+                     kv8: dict = None, sharded: list = None,
+                     smoke: bool = False) -> None:
     payload = {
         "benchmark": "serve_engine",
         "backend": jax.default_backend(),
         "jax": jax.__version__,
+        "smoke": smoke,
+        "sharded": sharded or [],
         "traces": {
             "mixed": {"n_requests": setup["n_requests"],
                       "prompt_lens": list(setup["prompt_lens"]),

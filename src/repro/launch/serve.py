@@ -7,6 +7,10 @@ dispatch, slot-based KV-cache pool, FIFO admission).
         --recipe serve-w8a8 --verbose --save /tmp/qwen_int8
     python -m repro.launch.serve --load /tmp/qwen_int8
     python -m repro.launch.serve --arch qwen2-0.5b --smoke --trace 20
+
+    # tensor-parallel sharded serving (8 virtual CPU devices):
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        python -m repro.launch.serve --arch qwen2-0.5b --smoke --mesh 2x4
 """
 from __future__ import annotations
 
@@ -43,8 +47,19 @@ def main(argv=None):
                          "16 = fp. Default: what the recipe/artifact "
                          "recorded (--quantize w8a16 --kv-bits 8 selects "
                          "the serve-w8a16-kv8 recipe)")
+    ap.add_argument("--mesh", default=None, metavar="DxM",
+                    help="serve sharded over a device mesh, e.g. 2x4 = "
+                         "(\"data\": 2, \"model\": 4) — slots shard over "
+                         "data, weights TP over model (a P x D x M form adds "
+                         "the leading \"pod\" axis). Needs D*M devices: on "
+                         "CPU set XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=N. "
+                         "Default: the mesh recorded in a --load artifact, "
+                         "else single-device")
     ap.add_argument("--save", default=None, metavar="DIR",
-                    help="persist the QuantizedModel after quantization")
+                    help="persist the QuantizedModel after quantization "
+                         "(with --mesh: the serve-mode partition specs are "
+                         "recorded in the artifact)")
     ap.add_argument("--load", default=None, metavar="DIR",
                     help="serve a saved QuantizedModel (skips quantization)")
     ap.add_argument("--verbose", action="store_true",
@@ -75,6 +90,24 @@ def main(argv=None):
     ap.add_argument("--trace-seed", type=int, default=0)
     args = ap.parse_args(argv)
 
+    # validate --mesh BEFORE any quantization runs: a typo'd shape or a
+    # too-small host must not discard minutes of pipeline work
+    cli_shape = None
+    if args.mesh:
+        try:
+            cli_shape = tuple(int(s) for s in args.mesh.lower().split("x"))
+        except ValueError:
+            cli_shape = ()
+        if len(cli_shape) not in (2, 3) or any(s < 1 for s in cli_shape):
+            ap.error(f"--mesh wants DxM (or PxDxM), e.g. 2x4; got {args.mesh!r}")
+        need = int(np.prod(cli_shape))
+        if need > jax.device_count():
+            ap.error(
+                f"--mesh {args.mesh} needs {need} devices but jax sees "
+                f"{jax.device_count()}; on CPU set XLA_FLAGS="
+                f"--xla_force_host_platform_device_count={need}"
+            )
+
     def check_servable(cfg, what):
         if cfg.family in ("ssm", "hybrid") or cfg.is_encdec:
             ap.error(
@@ -85,9 +118,10 @@ def main(argv=None):
             )
 
     if args.load:
-        if args.recipe or args.save or args.smoke or args.quantize != "w8a16":
+        if args.recipe or args.smoke or args.quantize != "w8a16":
             print("warning: --load serves the saved artifact as-is; "
-                  "--arch/--smoke/--recipe/--quantize/--save are ignored")
+                  "--arch/--smoke/--recipe/--quantize are ignored "
+                  "(--save re-saves it, recording specs when --mesh is set)")
         qm = QuantizedModel.load(args.load)
         cfg, model, params = qm.cfg, qm.model, qm.params
         check_servable(cfg, f"--load {args.load} (arch {cfg.name})")
@@ -99,10 +133,17 @@ def main(argv=None):
         model = build_model(cfg)
         qm = None
         if args.recipe or args.quantize != "none":
-            recipe = args.recipe or (
-                f"serve-{args.quantize}-kv8" if args.kv_bits == 8
-                else f"serve-{args.quantize}"
-            )
+            recipe = args.recipe
+            if recipe is None:
+                from ..pipeline.recipes import BUILTIN_RECIPES
+
+                recipe = (f"serve-{args.quantize}-kv8" if args.kv_bits == 8
+                          else f"serve-{args.quantize}")
+                # --mesh prefers the -tp recipe variant (adds the shard
+                # stage, so the artifact records the parallelism plan); the
+                # engine serves any recipe sharded either way
+                if args.mesh and f"{recipe}-tp" in BUILTIN_RECIPES:
+                    recipe = f"{recipe}-tp"
             qm = quantize(model, recipe=recipe)
             if (args.kv_bits is not None
                     and qm.cfg.kv_cache_bits != args.kv_bits):
@@ -116,6 +157,32 @@ def main(argv=None):
         else:
             params = model.init(jax.random.PRNGKey(0))
 
+    # ------------------------------------------------------------------ mesh
+    mesh = None
+    mesh_src, shape = None, None
+    if cli_shape is not None:               # validated up front, pre-pipeline
+        shape, mesh_src = cli_shape, "--mesh"
+    elif qm is not None and qm.shard_mode and qm.sharding.get("mesh_shape"):
+        shape = tuple(qm.sharding["mesh_shape"])
+        mesh_src = "artifact-recorded mesh"
+        need = int(np.prod(shape))
+        if need > jax.device_count():
+            # artifact-recorded topology on a smaller host: serve unsharded
+            print(f"note: {mesh_src} {'x'.join(map(str, shape))} needs "
+                  f"{need} devices but jax sees {jax.device_count()}; on CPU "
+                  f"set XLA_FLAGS=--xla_force_host_platform_device_count="
+                  f"{need} — serving single-device")
+            shape = None
+    if shape is not None:
+        from .mesh import make_production_mesh
+
+        mesh = make_production_mesh(shape=shape)
+        print(f"mesh ({mesh_src}): "
+              f"{dict(zip(mesh.axis_names, (mesh.shape[a] for a in mesh.axis_names)))}")
+    elif qm is not None and qm.shard_mode and not mesh_src:
+        print(f"note: artifact records {qm.shard_mode!r} sharding; pass "
+              f"--mesh DxM to serve it across a device mesh")
+
     if qm is not None:
         s = qm.serving_summary()
         print(f"quantized (recipe {qm.recipe.name!r}): "
@@ -127,8 +194,10 @@ def main(argv=None):
 
             print_site_sqnr(qm)
         if args.save:
-            qm.save(args.save)
-            print(f"saved QuantizedModel to {args.save}")
+            qm.save(args.save, mesh=mesh)
+            print(f"saved QuantizedModel to {args.save}"
+                  + (" (serve-mode specs recorded)"
+                     if mesh is not None and qm.shard_mode else ""))
 
     # ---------------------------------------------------------------- engine
     C = args.prefill_chunk
@@ -161,7 +230,7 @@ def main(argv=None):
     engine = ServingEngine(
         model, params, cfg, num_slots=args.slots, max_len=max_len,
         prefill_chunk=C, decode_horizon=args.decode_horizon,
-        fast=not args.reference, kv_bits=args.kv_bits,
+        fast=not args.reference, kv_bits=args.kv_bits, mesh=mesh,
     )
     print(f"kv cache: {'int8' if engine.kv_bits == 8 else 'fp'} "
           f"({engine.pool.bytes_per_slot() / 1e3:.1f} kB/slot, "
@@ -177,6 +246,8 @@ def main(argv=None):
     gen = engine.stats["generated_tokens"]
     path = "reference (stepwise)" if args.reference else \
         f"fast (decode horizon {args.decode_horizon})"
+    if mesh is not None:
+        path += f", sharded {'x'.join(str(mesh.shape[a]) for a in mesh.axis_names)}"
     print(f"served {len(results)} requests / {gen} generated tokens "
           f"in {dt*1e3:.1f} ms ({gen / max(dt, 1e-9):.1f} tok/s, "
           f"{path} path)")

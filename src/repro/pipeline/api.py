@@ -186,6 +186,7 @@ def quantize(
     return QuantizedModel(
         model=model, cfg=cfg, params=state.params, recipe=r,
         report=state.report, act_qparams=state.act_qparams,
+        sharding={"mode": state.shard_mode} if state.shard_mode else {},
     )
 
 

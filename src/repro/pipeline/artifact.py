@@ -64,6 +64,11 @@ class QuantizedModel:
     # backends. In-memory only — save() persists the float ranges in the
     # report, not these (the shipped w8a8 path quantizes dynamically).
     act_qparams: dict = dataclasses.field(default_factory=dict)
+    # serving parallelism plan from the shard stage: {"mode": "tp"} plus,
+    # once save(mesh=...) ran, the concrete mesh shape/axes and the per-leaf
+    # serve-mode PartitionSpecs the engine will apply. Round-trips through
+    # save/load so a deployment host serves the recorded topology.
+    sharding: dict = dataclasses.field(default_factory=dict)
 
     # ----------------------------------------------------------- inference
     def apply(self, tokens, *args, **kwargs):
@@ -98,6 +103,24 @@ class QuantizedModel:
                 return rec
         return None
 
+    @property
+    def shard_mode(self):
+        """"tp" when the recipe carried a shard stage, else None."""
+        return self.sharding.get("mode")
+
+    def serve_pspecs(self, mesh) -> Any:
+        """Serve-mode PartitionSpec pytree for this artifact's params over
+        ``mesh`` (int8 payload + scale co-sharded on "model", no FSDP)."""
+        import jax
+
+        from ..sharding import params_pspecs
+
+        shapes = jax.tree.map(
+            lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), self.params
+        )
+        heads = {"n_q": self.cfg.n_heads, "n_kv": self.cfg.n_kv_heads}
+        return params_pspecs(shapes, mesh, heads, mode="serve")
+
     def site_sqnr_db(self) -> dict:
         """Per-site weight SQNR from the quantizing stage (weight_quant/pack)."""
         for name in ("pack", "weight_quant"):
@@ -107,13 +130,27 @@ class QuantizedModel:
         return {}
 
     # --------------------------------------------------------- persistence
-    def save(self, directory: str) -> str:
+    def save(self, directory: str, mesh=None) -> str:
         """Atomic save: array payload via the checkpointer + a JSON sidecar
-        with config, recipe provenance, and the stage report."""
+        with config, recipe provenance, and the stage report. For a sharded
+        artifact (shard stage in the recipe), passing the deployment ``mesh``
+        additionally records the concrete serve-mode PartitionSpec per param
+        leaf — the deployment topology ships WITH the weights."""
         from ..checkpoint.checkpointer import Checkpointer
 
         ck = Checkpointer(directory, keep=1)
         ck.save(0, _encode_qtensors(self.params), blocking=True)
+        sharding = dict(self.sharding)
+        if mesh is not None and self.shard_mode:
+            from ..sharding.partition import spec_paths
+
+            specs = self.serve_pspecs(mesh)
+            sharding.update(
+                mesh_shape=[int(mesh.shape[a]) for a in mesh.axis_names],
+                mesh_axes=list(mesh.axis_names),
+                specs={path: str(spec) for path, spec in spec_paths(specs)},
+            )
+            self.sharding = sharding
         meta = {
             "format_version": 1,
             "config": dataclasses.asdict(self.cfg),
@@ -125,6 +162,7 @@ class QuantizedModel:
                     for s in self.recipe.steps
                 ],
             },
+            "sharding": sharding,
             "report": self.report,
         }
         tmp = os.path.join(directory, _META_FILE + ".tmp")
@@ -161,4 +199,5 @@ class QuantizedModel:
         return cls(
             model=model, cfg=cfg, params=params, recipe=recipe,
             report=meta.get("report", []),
+            sharding=meta.get("sharding", {}),
         )

@@ -135,6 +135,35 @@ BUILTIN_RECIPES: dict[str, Recipe] = {
             "fold_norm", "cle", "bias_absorb", ("pack", {"mode": "w8a8"}),
             ("kv_cache", {"bits": 8}),
         ),
+        # every serve-* deployment has a -tp twin (same stages + shard[tp])
+        # so --mesh never has to drop the topology from a saved artifact
+        _r(
+            "serve-w8a16-tp",
+            "serve-w8a16 deployed tensor-parallel: int8 weights + scales "
+            "co-sharded over the mesh's \"model\" axis, KV pool sharded "
+            "slot-wise over \"data\"",
+            "fold_norm", "cle", "bias_absorb", ("pack", {"mode": "w8a16"}),
+            ("shard", {"mode": "tp"}),
+        ),
+        _r(
+            "serve-w8a8-tp",
+            "serve-w8a8 deployed tensor-parallel across a device mesh",
+            "fold_norm", "cle", "bias_absorb", ("pack", {"mode": "w8a8"}),
+            ("shard", {"mode": "tp"}),
+        ),
+        _r(
+            "serve-w8a16-kv8-tp",
+            "serve-w8a16-kv8 deployed tensor-parallel across a device mesh",
+            "fold_norm", "cle", "bias_absorb", ("pack", {"mode": "w8a16"}),
+            ("kv_cache", {"bits": 8}), ("shard", {"mode": "tp"}),
+        ),
+        _r(
+            "serve-w8a8-kv8-tp",
+            "the full int8 serving stack (weights, activations, KV stream) "
+            "deployed tensor-parallel across a device mesh",
+            "fold_norm", "cle", "bias_absorb", ("pack", {"mode": "w8a8"}),
+            ("kv_cache", {"bits": 8}), ("shard", {"mode": "tp"}),
+        ),
     )
 }
 

@@ -209,6 +209,27 @@ def kv_cache_stage(state, ctx, *, bits):
     return state
 
 
+@register_stage("shard", mode="tp")
+def shard_stage(state, ctx, *, mode):
+    """Record the serving parallelism plan on the artifact.
+
+    mode="tp": serve the model tensor-parallel — weights placed under the
+    serve-mode partition specs (Megatron TP over the mesh's "model" axis,
+    int8 QTensor scales co-sharded with their payload columns, no FSDP
+    factor) and the pooled KV cache sharded slot-wise over "data". A
+    weight-free stage, like ``kv_cache``: the per-layer DFQ metadata (scales,
+    corrected biases) shards with its tensor, so no re-quantization is
+    needed — ``ServingEngine(mesh=...)`` applies the recorded plan at load.
+    """
+    if mode not in ("tp", "none"):
+        raise PipelineError(
+            f"shard: unknown mode {mode!r}; use 'tp' or 'none'"
+        )
+    state.shard_mode = None if mode == "none" else mode
+    state.note(mode=mode)
+    return state
+
+
 @register_stage("pack", mode="w8a16", per_channel=False)
 def pack_stage(state, ctx, *, mode, per_channel):
     """Pack weight sites into int8 QTensors for true-int8 serving.

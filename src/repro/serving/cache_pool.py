@@ -18,12 +18,17 @@ class PoolExhausted(RuntimeError):
 
 class CachePool:
     def __init__(self, model, num_slots: int, max_len: int, dtype=None,
-                 kv_bits=None):
+                 kv_bits=None, mesh=None):
         """``dtype`` defaults to the model's activation compute dtype (halves
         cache bytes for bf16 models vs the old fp32 default); pass an explicit
         dtype to override. ``kv_bits=8`` selects the int8 pooled cache (int8
         payload + per-token/per-head scales), ``kv_bits=16`` forces fp, None
-        follows ``model.cfg.kv_cache_bits``."""
+        follows ``model.cfg.kv_cache_bits``. ``mesh`` places the pool on a
+        device mesh under the serve-mode cache specs (slots over "data", KV
+        heads over "model", scale/v_err leaves following their payload) —
+        ``self.shardings`` then holds the per-leaf NamedShardings the engine
+        pins as jit out_shardings so the pool stays sharded across steps."""
+        import jax
         import jax.numpy as jnp
 
         if num_slots < 1:
@@ -37,6 +42,19 @@ class CachePool:
             num_slots, max_len, dtype=dtype, per_slot=True, **kw
         )
         self.kv_bits = 8 if "k_scale" in self.cache else 16
+        self.mesh = mesh
+        self.shardings = None
+        if mesh is not None:
+            from ..sharding import named_shardings, serve_cache_pspecs
+
+            specs = serve_cache_pspecs(
+                jax.tree.map(
+                    lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), self.cache
+                ),
+                mesh,
+            )
+            self.shardings = named_shardings(specs, mesh)
+            self.cache = jax.device_put(self.cache, self.shardings)
         # the model may shrink the ring below the requested length (sliding-
         # window attention: S = min(max_len, window)); capacity checks must
         # see the REAL ring size or padded prefill chunks could wrap and

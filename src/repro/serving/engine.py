@@ -171,12 +171,24 @@ class ServingEngine:
         scales; decode attends through the kv_attention op), 16 → fp, None
         → follow ``cfg.kv_cache_bits`` (so a ``*-kv8`` quantize recipe
         carries its KV precision into the engine).
+    mesh: a jax ``Mesh`` ("data", "model" [, leading "pod"]) for sharded
+        serving. Params are placed under the serve-mode partition specs
+        (Megatron TP on "model", int8 QTensor scales co-sharded with their
+        payload columns, no FSDP factor — weights stay resident) and the
+        pooled cache under the serve cache specs (slots over "data", KV
+        heads over "model"). All four jitted paths pin the cache's
+        NamedShardings as out_shardings — with donation preserved, so the
+        sharded pool still updates in place — and GSPMD partitions the
+        step. Per-slot computation is row-independent, so slot sharding is
+        exact; TP's row-parallel psum reorders reductions (float-level
+        wobble vs single-device; the parity tests pin the tolerance).
     """
 
     def __init__(self, model, params, cfg, *, num_slots: int = 4,
                  max_len: int = 128, prefill_chunk: int = 16,
                  cache_dtype=None, decode_horizon: int = 8,
-                 fast: bool = True, kv_bits: Optional[int] = None):
+                 fast: bool = True, kv_bits: Optional[int] = None,
+                 mesh=None):
         if cfg.family in ("ssm", "hybrid") or cfg.is_encdec:
             raise ValueError(
                 f"the serving engine supports attention-family decoder-only "
@@ -191,8 +203,18 @@ class ServingEngine:
         self.prefill_chunk = prefill_chunk
         self.decode_horizon = decode_horizon
         self.fast = fast
+        self.mesh = mesh
+        if mesh is not None:
+            from ..sharding import named_shardings, params_pspecs
+
+            heads = {"n_q": cfg.n_heads, "n_kv": cfg.n_kv_heads}
+            p_shapes = jax.tree.map(
+                lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), params
+            )
+            specs = params_pspecs(p_shapes, mesh, heads, mode="serve")
+            self.params = jax.device_put(params, named_shardings(specs, mesh))
         self.pool = CachePool(model, num_slots, max_len, dtype=cache_dtype,
-                              kv_bits=kv_bits)
+                              kv_bits=kv_bits, mesh=mesh)
         self.kv_bits = self.pool.kv_bits
         # may be < the requested max_len (sliding-window ring); admission is
         # capped at the real ring so wrap-around never clobbers live keys
@@ -217,13 +239,23 @@ class ServingEngine:
         # updated in place instead of being copied on each call, mirroring
         # launch/steps.py / dryrun.py. The buffer passed in is INVALID after
         # the call — the engine immediately rebinds pool.cache to the output.
-        self._prefill_fn = jax.jit(self._prefill_chunk_impl, donate_argnums=(2,))
-        self._decode_fn = jax.jit(self._decode_impl, donate_argnums=(2,))
-        self._prefill_multi_fn = jax.jit(self._prefill_multi_impl,
-                                         donate_argnums=(2,))
+        # Under a mesh the cache's NamedShardings are additionally pinned as
+        # out_shardings (tokens replicate — they're host-bound anyway): the
+        # in/out shardings then match leaf-for-leaf, which is what keeps
+        # donation's in-place buffer reuse valid for the sharded pool, and
+        # GSPMD can't drift the pool's layout between steps (a drift would
+        # force a recompile per step).
+        kw: dict = {"donate_argnums": (2,)}
+        if mesh is not None:
+            from jax.sharding import NamedSharding, PartitionSpec
+
+            rep = NamedSharding(mesh, PartitionSpec())
+            kw["out_shardings"] = (rep, self.pool.shardings)
+        self._prefill_fn = jax.jit(self._prefill_chunk_impl, **kw)
+        self._decode_fn = jax.jit(self._decode_impl, **kw)
+        self._prefill_multi_fn = jax.jit(self._prefill_multi_impl, **kw)
         self._decode_horizon_fn = jax.jit(self._decode_horizon_impl,
-                                          static_argnames=("k",),
-                                          donate_argnums=(2,))
+                                          static_argnames=("k",), **kw)
 
     @classmethod
     def from_quantized(cls, qm, **kwargs) -> "ServingEngine":

@@ -3,4 +3,5 @@ from .partition import (  # noqa: F401
     cache_pspecs,
     named_shardings,
     params_pspecs,
+    serve_cache_pspecs,
 )

@@ -51,15 +51,50 @@ def _leaf_spec(path: str, shape, mesh: Mesh, n_stacked: int,
         stays f-sharded through the pair and one all-reduce of [B,T,D]
         partial sums closes the block,
       * non-divisible dims replicate (graceful degradation).
+
+    ``mode="decode"`` drops the FSDP factor (resident serving weights);
+    ``mode="serve"`` is decode placement PLUS co-sharded quantized leaves:
+    a per-channel QTensor scale lands on the same "model" shard as its int8
+    payload's out-feature columns, so a TP shard dequantizes locally without
+    gathering foreign scales.
     """
     axes: list = [None] * len(shape)
     if len(shape) == 0:
         return P()
     model_n = mesh.shape.get("model", 1)
     data_n = mesh.shape.get("data", 1)
-    if mode == "decode":
+    if mode in ("decode", "serve"):
         data_n = 10 ** 9  # nothing divides this → no FSDP factor on weights
     heads = heads or {}
+    n_q, n_kv = heads.get("n_q", 0), heads.get("n_kv", 0)
+
+    def head_ok(n):
+        return n > 0 and n % model_n == 0
+
+    is_attn = "/attn/" in path or "/cross/" in path
+    name = path.rsplit("/", 1)[-1]
+    if name in ("q", "scale"):           # QTensor children: rules key off the
+        parent = path.rsplit("/", 3)[-2]  # parent weight's name (wq/wd/...)
+        if name == "scale":
+            # The scale's channel dim mirrors the parent weight's OUT-feature
+            # dim. Serve mode co-shards it with the int8 payload: a
+            # column-parallel weight's scale follows its columns onto "model";
+            # row-parallel weights shard the IN dim, so their scales (and all
+            # per-tensor size-1 scales — never divisible) replicate.
+            if mode != "serve":
+                return P()
+            out = len(shape) - 1
+            tp_ok = _divisible(shape[out], model_n) and parent not in _ROW_PARALLEL
+            if is_attn and parent == "wq":
+                tp_ok = tp_ok and head_ok(n_q)
+            elif is_attn and parent in ("wk", "wv"):
+                tp_ok = tp_ok and head_ok(n_kv)
+            elif parent == "in_proj":
+                tp_ok = False
+            if tp_ok:
+                axes[out] = "model"
+            return P(*axes)
+        name = parent
 
     is_embed = path.endswith("embed") or path.endswith("lm_head") or path.endswith("dec_pos")
     if is_embed and len(shape) == 2:
@@ -80,19 +115,7 @@ def _leaf_spec(path: str, shape, mesh: Mesh, n_stacked: int,
     if len(free) < 2:
         return P()  # 1-D (biases/norm scales): replicate — sharding is noise
 
-    name = path.rsplit("/", 1)[-1]
-    if name in ("q", "scale"):           # QTensor children: rules key off the
-        parts = path.rsplit("/", 3)      # parent weight's name (wq/wd/...)
-        if name == "scale":
-            return P()                    # scales are tiny — replicate
-        name = parts[-2]
     in_dim, out_dim = free[-2], free[-1]
-    is_attn = "/attn/" in path or "/cross/" in path
-    n_q, n_kv = heads.get("n_q", 0), heads.get("n_kv", 0)
-
-    def head_ok(n):
-        return n > 0 and n % model_n == 0
-
     if name in _ROW_PARALLEL:
         tp_ok = _divisible(shape[in_dim], model_n)
         if name == "wo":
@@ -141,6 +164,31 @@ def _walk(tree, prefix=""):
         yield prefix, tree
 
 
+def _rebuild(tree, flat: dict, prefix: str = ""):
+    """Re-nest a {path: spec} mapping into the shape tree's structure (the
+    inverse of ``_walk`` — one implementation for every *_pspecs builder)."""
+    if isinstance(tree, dict):
+        return {k: _rebuild(v, flat, f"{prefix}/{k}") for k, v in tree.items()}
+    if isinstance(tree, (list, tuple)):
+        t = [_rebuild(v, flat, f"{prefix}/{i}") for i, v in enumerate(tree)]
+        return type(tree)(t) if not hasattr(tree, "_fields") else type(tree)(*t)
+    if type(tree).__name__ == "QTensor":
+        from ..quantized.qtensor import QTensor
+
+        return QTensor(_rebuild(tree.q, flat, f"{prefix}/q"),
+                       _rebuild(tree.scale, flat, f"{prefix}/scale"), tree.mode)
+    return flat[prefix]
+
+
+def _dp_world(mesh: Mesh):
+    """(dp_axes, dp_n): the data-parallel axis spec (with the leading "pod"
+    when present) and its total world size."""
+    dp_axes = ("pod", "data") if "pod" in mesh.shape else "data"
+    dp_n = int(np.prod([mesh.shape[a] for a in
+                        ((dp_axes,) if isinstance(dp_axes, str) else dp_axes)]))
+    return dp_axes, dp_n
+
+
 def params_pspecs(params_shapes: Any, mesh: Mesh, heads: Optional[dict] = None,
                   mode: str = "train") -> Any:
     """PartitionSpec pytree matching a params (or optimizer-state) pytree of
@@ -153,21 +201,7 @@ def params_pspecs(params_shapes: Any, mesh: Mesh, heads: Optional[dict] = None,
 
     paths = dict(_walk(params_shapes))
     flat_specs = {p: spec_of(p, l) for p, l in paths.items()}
-
-    def rebuild(tree, prefix=""):
-        if isinstance(tree, dict):
-            return {k: rebuild(v, f"{prefix}/{k}") for k, v in tree.items()}
-        if isinstance(tree, (list, tuple)):
-            t = [rebuild(v, f"{prefix}/{i}") for i, v in enumerate(tree)]
-            return type(tree)(t) if not hasattr(tree, "_fields") else type(tree)(*t)
-        if type(tree).__name__ == "QTensor":
-            from ..quantized.qtensor import QTensor
-
-            return QTensor(rebuild(tree.q, f"{prefix}/q"),
-                           rebuild(tree.scale, f"{prefix}/scale"), tree.mode)
-        return flat_specs[prefix]
-
-    return rebuild(params_shapes)
+    return _rebuild(params_shapes, flat_specs)
 
 
 def batch_pspec(mesh: Mesh, ndim: int = 2, batch: Optional[int] = None) -> P:
@@ -185,9 +219,7 @@ def batch_pspec(mesh: Mesh, ndim: int = 2, batch: Optional[int] = None) -> P:
 def cache_pspecs(cache_shapes: Any, mesh: Mesh, batch: int) -> Any:
     """KV/SSM cache sharding: batch over (pod, data) when divisible, else
     sequence over "data" (the long-context B=1 case); heads over "model"."""
-    dp_axes = ("pod", "data") if "pod" in mesh.shape else "data"
-    dp_n = int(np.prod([mesh.shape[a] for a in
-                        ((dp_axes,) if isinstance(dp_axes, str) else dp_axes)]))
+    dp_axes, dp_n = _dp_world(mesh)
     model_n = mesh.shape.get("model", 1)
 
     def spec_of(path, leaf):
@@ -230,15 +262,50 @@ def cache_pspecs(cache_shapes: Any, mesh: Mesh, batch: int) -> Any:
 
     paths = dict(_walk(cache_shapes))
     flat = {p: spec_of(p, l) for p, l in paths.items()}
+    return _rebuild(cache_shapes, flat)
 
-    def rebuild(tree, prefix=""):
-        if isinstance(tree, dict):
-            return {k: rebuild(v, f"{prefix}/{k}") for k, v in tree.items()}
-        if isinstance(tree, (list, tuple)):
-            return type(tree)(rebuild(v, f"{prefix}/{i}") for i, v in enumerate(tree))
-        return flat[prefix]
 
-    return rebuild(cache_shapes)
+def serve_cache_pspecs(cache_shapes: Any, mesh: Mesh) -> Any:
+    """Serving (per-slot pooled) cache sharding for the continuous-batching
+    engine: the SLOT axis shards over "data" and KV heads over "model".
+
+    Layouts: k/v [L, B, S, H, hd]; k_scale/v_scale/v_err [L, B, S, H];
+    kpos [B, S]; pos [B] — B is the slot axis. Rules:
+
+      * slots over ("pod",) "data" when the pool size divides the DP world —
+        no MIN_SHARD_DIM floor here: slot pools are inherently small and
+        every slot's computation is row-independent, so slot sharding is
+        exact (it never changes a reduction order),
+      * KV heads over "model" when divisible (head-parallel attention — each
+        head's softmax·V stays device-local),
+      * the int8-cache scale leaves (k_scale/v_scale) and the V dequant-error
+        means (v_err) FOLLOW their payload tensor: same slot axis, same head
+        axis, so a shard dequantizes its own cache columns locally,
+      * anything non-divisible replicates (graceful degradation).
+    """
+    dp_axes, dp_n = _dp_world(mesh)
+    model_n = mesh.shape.get("model", 1)
+
+    def spec_of(path, leaf):
+        shape = leaf.shape
+        axes: list = [None] * len(shape)
+        name = path.rsplit("/", 1)[-1]
+        if name in ("kpos", "pos"):                     # [B, S] / [B]
+            if shape and shape[0] % dp_n == 0 and shape[0] >= dp_n:
+                axes[0] = dp_axes
+            return P(*axes)
+        if name in ("k", "v", "k_scale", "v_scale", "v_err") and len(shape) >= 4:
+            if shape[1] % dp_n == 0 and shape[1] >= dp_n:
+                axes[1] = dp_axes                       # slot axis
+            H_dim = 3                                   # heads (payload + scales)
+            if shape[H_dim] % model_n == 0 and shape[H_dim] >= model_n:
+                axes[H_dim] = "model"
+            return P(*axes)
+        return P(*axes)
+
+    paths = dict(_walk(cache_shapes))
+    flat = {p: spec_of(p, l) for p, l in paths.items()}
+    return _rebuild(cache_shapes, flat)
 
 
 def named_shardings(spec_tree: Any, mesh: Mesh) -> Any:
@@ -247,3 +314,22 @@ def named_shardings(spec_tree: Any, mesh: Mesh) -> Any:
         spec_tree,
         is_leaf=lambda x: isinstance(x, P),
     )
+
+
+def spec_paths(spec_tree: Any, prefix: str = ""):
+    """Yield (path, PartitionSpec) pairs from a spec pytree. A dedicated
+    walker: PartitionSpec subclasses tuple on some jax versions, so the
+    generic ``_walk`` would iterate INTO the spec instead of yielding it."""
+    if isinstance(spec_tree, P):
+        yield prefix, spec_tree
+    elif isinstance(spec_tree, dict):
+        for k, v in spec_tree.items():
+            yield from spec_paths(v, f"{prefix}/{k}")
+    elif isinstance(spec_tree, (list, tuple)):
+        for i, v in enumerate(spec_tree):
+            yield from spec_paths(v, f"{prefix}/{i}")
+    elif type(spec_tree).__name__ == "QTensor":
+        yield from spec_paths(spec_tree.q, f"{prefix}/q")
+        yield from spec_paths(spec_tree.scale, f"{prefix}/scale")
+    else:
+        yield prefix, spec_tree
