@@ -2,45 +2,39 @@
 
 Groups every collective in an optimized per-device module by (op, shape) and
 ranks by bytes: the hypothesis generator for the perf loop.
+
+Built on ``analysis.lint.hlo_model``'s real instruction parser rather than a
+regex per line — the old regex dropped any result type carrying a layout
+annotation (``{1,0:T(8,128)}`` nests parens) or a tuple (async
+``all-reduce-start`` results), silently under-counting exactly the largest
+collectives. ``shape_bytes`` now warns (once per dtype) and counts 0 for
+dtypes it does not know instead of silently skipping them.
 """
 from __future__ import annotations
 
-import collections
-import re
-
-from .roofline import _DTYPE_BYTES, _SHAPE_RE
+from .lint.hlo_model import COLLECTIVE_OPS, parse_hlo_module, type_bytes
 
 
 def shape_bytes(type_str: str) -> int:
-    total = 0
-    for dt, dims in _SHAPE_RE.findall(type_str):
-        if dt not in _DTYPE_BYTES:
-            continue
-        n = 1
-        for d in dims.split(",") if dims else []:
-            n *= int(d)
-        total += n * _DTYPE_BYTES[dt]
-    return total
+    """Total payload bytes of an HLO type string (arrays, tuples, layouts).
+    Unknown dtypes contribute 0 — with a warning, never silently."""
+    return type_bytes(type_str, warn_unknown=True)
 
 
 def top_collectives(hlo_text: str, k: int = 15):
-    agg = collections.Counter()
-    count = collections.Counter()
-    for line in hlo_text.splitlines():
-        s = line.strip()
-        m = re.match(
-            r"(?:ROOT\s+)?%?[\w.\-]+\s*=\s*((?:\([^)]*\))|(?:[a-z0-9\[\],{}: ]+?))\s+"
-            r"([a-z\-]+?)(-start|-done)?\(", s)
-        if not m:
+    """Top-k collectives by aggregate result bytes: rows of
+    ``(bytes, count, base_opcode, result_type[:70])``. Async pairs count
+    once (``-done`` halves are skipped; a ``-start``'s operand/result tuple
+    is halved so the transferred payload is not double-counted)."""
+    module = parse_hlo_module(hlo_text)
+    agg: dict = {}
+    for instr in module.collectives():
+        if instr.base_opcode not in COLLECTIVE_OPS:
             continue
-        tstr, base, phase = m.groups()
-        if base in ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
-                    "collective-permute") and phase != "-done":
-            key = (base, tstr[:70])
-            agg[key] += shape_bytes(tstr)
-            count[key] += 1
-    rows = [(b, n, base, t) for (base, t), b in agg.items()
-            for n in [count[(base, t)]]]
+        key = (instr.base_opcode, instr.result_type[:70])
+        b, n = agg.get(key, (0, 0))
+        agg[key] = (b + instr.result_bytes(), n + 1)
+    rows = [(b, n, base, t) for (base, t), (b, n) in agg.items()]
     rows.sort(reverse=True)
     return rows[:k]
 

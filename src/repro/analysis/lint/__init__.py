@@ -1,0 +1,64 @@
+"""QuantLint: static contract linting for the compiled serving graphs.
+
+Five PRs of serving-stack invariants (int8-everywhere decode, scale/payload
+co-sharding, cache donation, bounded TP collectives, warmup shape closure)
+are enforced *dynamically* by parity tests — which can silently stop
+exercising the property they pin: a dtype upcast or a GSPMD-inserted
+all-gather makes the path slower but still bit-correct, so tier-1 stays
+green. This package checks the structural properties directly, the way the
+paper reasons about quantization (§1.1, §4: quality is decided by *which*
+ops run in int8 and *where* scales fold, not by any particular run):
+
+  * ``hlo_model``  — a real instruction model over optimized per-device HLO
+    (opcode, flattened result types, operands, input_output_alias), not a
+    regex-per-line Counter,
+  * ``extract``    — traces/lowers the four engine jits (prefill, decode,
+    fused horizon, batched prefill) and the standalone kernels for a
+    recipe + mesh WITHOUT running them,
+  * ``rules``      — the rule registry (``@register_rule``) with the five
+    core rules: dtype-ledger, collective-budget, donation-audit,
+    recompilation-guard, scale-coupling,
+  * ``contracts``  — per-recipe contract snapshots checked into
+    ``contracts/<recipe>[.mesh].json``; ``--update`` regenerates them,
+    ``--check`` diffs and fails CI on drift,
+  * ``cli``        — ``python -m repro.analysis.lint --check|--update``.
+
+Import note: ``hlo_model`` and ``rules`` are dependency-light (no jax at
+import time for the parser); ``extract`` pulls in the serving stack and is
+imported lazily.
+"""
+from __future__ import annotations
+
+from .hlo_model import HloInstr, HloModule, parse_hlo_module, type_bytes
+from .rules import (
+    Finding,
+    list_rules,
+    register_rule,
+    run_rules,
+)
+
+__all__ = [
+    "HloInstr",
+    "HloModule",
+    "parse_hlo_module",
+    "type_bytes",
+    "Finding",
+    "register_rule",
+    "run_rules",
+    "list_rules",
+    "build_graph",
+    "graph_from_engine",
+    "lint_engine",
+]
+
+
+def __getattr__(name):  # lazy: extract imports jax + the serving stack
+    if name in ("build_graph", "graph_from_engine", "LintGraph", "JitArtifact"):
+        from . import extract
+
+        return getattr(extract, name)
+    if name == "lint_engine":
+        from .cli import lint_engine
+
+        return lint_engine
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -1,0 +1,15 @@
+"""``python -m repro.analysis.lint`` — see cli.py for the flag reference.
+
+The TP recipes lint under the (2, 4) CI reference mesh, which needs 8
+devices; on a CPU host that means forcing virtual devices BEFORE jax
+initializes its backend, so this shim sets XLA_FLAGS first (and defers to
+any value the caller already exported — the CI job sets it explicitly).
+"""
+import os
+import sys
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+from .cli import main  # noqa: E402  (env must be set before jax imports)
+
+sys.exit(main())

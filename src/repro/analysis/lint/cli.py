@@ -1,0 +1,246 @@
+"""QuantLint entry points.
+
+    # regenerate the checked-in contracts (after an INTENTIONAL graph change
+    # or a jax upgrade; review the printed diff before committing):
+    python -m repro.analysis.lint --update
+
+    # CI / local gate: fail on any contract drift or rule violation
+    python -m repro.analysis.lint --check
+
+    # one recipe, with a JSON report + markdown summary (the CI job wires
+    # --summary "$GITHUB_STEP_SUMMARY"):
+    python -m repro.analysis.lint --check --recipes serve-w8a16-tp \
+        --report lint_report.json --summary summary.md
+
+TP recipes lint under the CI reference mesh (2x4 = 8 devices);
+``python -m repro.analysis.lint`` forces 8 virtual CPU devices via
+XLA_FLAGS automatically (see __main__.py) unless the variable is already
+set.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import sys
+from typing import Optional
+
+DEFAULT_RECIPES = (
+    "serve-w8a16",
+    "serve-w8a8-kv8",
+    "serve-w8a16-tp",
+    "serve-w8a8-kv8-tp",
+)
+
+
+def _severity_counts(findings) -> dict:
+    out = {"error": 0, "warn": 0, "info": 0}
+    for f in findings:
+        out[f.severity] += 1
+    return out
+
+
+def format_findings(findings, *, show_info: bool = True) -> str:
+    lines = []
+    for f in findings:
+        if f.severity == "info" and not show_info:
+            continue
+        lines.append("  " + f.format())
+    return "\n".join(lines)
+
+
+def lint_graph(graph, contract: Optional[dict]):
+    """Run the full rule set over one extracted graph; contract-level
+    preconditions (missing contract, stale engine fingerprint) surface as
+    findings rather than exceptions so the report always renders."""
+    from .rules import Finding, run_rules
+
+    pre: list = []
+    if contract is not None and contract.get("engine") != graph.engine:
+        pre.append(Finding(
+            "contract", "error", "", "engine",
+            f"engine fingerprint drifted from the contract: contract "
+            f"{contract.get('engine')} vs graph {graph.engine} — the "
+            f"contract no longer describes this serving geometry; "
+            f"regenerate with --update",
+        ))
+    return pre + run_rules(graph, contract)
+
+
+def lint_recipe(recipe: str, *, update: bool = False,
+                arch: str = "qwen2-0.5b") -> dict:
+    """Extract + lint one recipe against its checked-in contract (or
+    regenerate the contract when ``update``). Returns a JSON-able result:
+    {stem, findings, counts, diff, ok}."""
+    from ...pipeline.recipes import contract_stem, lint_mesh_shape
+    from . import contracts
+    from .extract import build_graph
+    from .rules import Finding
+
+    mesh_shape = lint_mesh_shape(recipe)
+    stem = contract_stem(recipe, mesh_shape)
+    graph = build_graph(recipe, mesh_shape, arch=arch)
+    old = contracts.load_contract(stem)
+    diff: list = []
+    if update:
+        fresh = contracts.snapshot(graph)
+        diff = contracts.diff_contracts(old, fresh)
+        path = contracts.save_contract(stem, fresh)
+        findings = lint_graph(graph, fresh)
+        action = f"wrote {path}"
+    else:
+        findings = lint_graph(graph, old)
+        if old is None:
+            findings.insert(0, Finding(
+                "contract", "error", "", stem,
+                f"no contract at {contracts.contract_path(stem)} — generate "
+                f"one with: python -m repro.analysis.lint --update "
+                f"--recipes {recipe}",
+            ))
+        else:
+            diff = contracts.diff_contracts(old, contracts.snapshot(graph))
+        action = "checked"
+    counts = _severity_counts(findings)
+    return {
+        "recipe": recipe,
+        "stem": stem,
+        "mesh": "x".join(map(str, mesh_shape)) if mesh_shape else None,
+        "action": action,
+        "findings": [dataclasses.asdict(f) for f in findings],
+        "counts": counts,
+        "diff": diff,
+        "ok": counts["error"] == 0,
+        "_findings": findings,   # live objects for printing; stripped in report
+    }
+
+
+def lint_engine(engine, recipe: str, *, verbose: bool = True) -> list:
+    """Lint a LIVE ServingEngine (the ``serve.py --lint`` path). When the
+    engine's geometry matches the recipe's checked-in contract the full
+    budget checks run; otherwise (custom slots/chunk/horizon) the linter
+    falls back to the structural rules only, so a one-off serving config
+    never false-positives on budget pins."""
+    from ...pipeline.recipes import contract_stem
+    from . import contracts
+    from .extract import graph_from_engine
+
+    graph = graph_from_engine(engine, recipe=recipe)
+    stem = contract_stem(recipe, graph.mesh_shape)
+    contract = contracts.load_contract(stem)
+    structural_only = (contract is not None
+                       and contract.get("engine") != graph.engine)
+    if structural_only:
+        contract = None
+    from .rules import run_rules
+
+    findings = run_rules(graph, contract)
+    if verbose:
+        counts = _severity_counts(findings)
+        mode = ("structural rules only — engine geometry differs from the "
+                "checked-in contract" if structural_only
+                else "no contract — structural rules only" if contract is None
+                else f"contract {stem}")
+        print(f"graph lint ({mode}): {counts['error']} error(s), "
+              f"{counts['warn']} warning(s), {counts['info']} info")
+        txt = format_findings(findings)
+        if txt:
+            print(txt)
+    return findings
+
+
+def write_summary(path: str, results: list[dict], mode: str) -> None:
+    with open(path, "a") as f:
+        f.write(f"## Graph lint ({mode})\n\n")
+        f.write("| recipe | mesh | errors | warns | contract drift |\n")
+        f.write("|---|---|---|---|---|\n")
+        for r in results:
+            drift = "; ".join(r["diff"][:4]) or "none"
+            if len(r["diff"]) > 4:
+                drift += f" (+{len(r['diff']) - 4} more)"
+            f.write(f"| {r['recipe']} | {r['mesh'] or '-'} | "
+                    f"{r['counts']['error']} | {r['counts']['warn']} | "
+                    f"{drift} |\n")
+        f.write("\n")
+        errs = [f for r in results for f in r["findings"]
+                if f["severity"] == "error"]
+        if errs:
+            f.write("### Errors\n\n")
+            for e in errs:
+                loc = f"{e['jit']}:{e['where']}" if e["where"] else e["jit"]
+                f.write(f"- **{e['rule']}** @ `{loc}`: {e['message']}\n")
+            f.write("\n")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis.lint",
+        description="QuantLint: static contract linter for the compiled "
+                    "int8 serving graphs")
+    mode = ap.add_mutually_exclusive_group(required=True)
+    mode.add_argument("--check", action="store_true",
+                      help="lint against the checked-in contracts; exit 1 "
+                           "on any error or contract drift (the blocking "
+                           "CI gate)")
+    mode.add_argument("--update", action="store_true",
+                      help="regenerate the contract snapshots from the "
+                           "current graphs (review the printed diff!)")
+    mode.add_argument("--list-rules", action="store_true",
+                      help="print the registered rule names and exit")
+    ap.add_argument("--recipes", default=",".join(DEFAULT_RECIPES),
+                    help="comma-separated recipe names "
+                         f"(default: {','.join(DEFAULT_RECIPES)})")
+    ap.add_argument("--arch", default="qwen2-0.5b",
+                    help="smoke arch the graphs are extracted from")
+    ap.add_argument("--report", default=None, metavar="PATH",
+                    help="write the full findings as JSON (the CI artifact)")
+    ap.add_argument("--summary", default=None, metavar="PATH",
+                    help="append a markdown summary table (CI wires "
+                         "$GITHUB_STEP_SUMMARY here)")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        from .rules import list_rules
+
+        for name in list_rules():
+            print(name)
+        return 0
+
+    from ...pipeline.state import RecipeError
+
+    results = []
+    ok = True
+    for recipe in [r for r in args.recipes.split(",") if r]:
+        try:
+            res = lint_recipe(recipe.strip(), update=args.update,
+                              arch=args.arch)
+        except RecipeError as e:
+            print(f"== {recipe.strip()}: {e}", file=sys.stderr)
+            return 2
+        findings = res.pop("_findings")
+        results.append(res)
+        ok = ok and res["ok"]
+        where = f" [{res['mesh']}]" if res["mesh"] else ""
+        print(f"== {res['recipe']}{where}: {res['action']} — "
+              f"{res['counts']['error']} error(s), "
+              f"{res['counts']['warn']} warning(s), "
+              f"{res['counts']['info']} info")
+        txt = format_findings(findings)
+        if txt:
+            print(txt)
+        for line in res["diff"]:
+            print(f"  drift: {line}")
+
+    if args.report:
+        with open(args.report, "w") as f:
+            json.dump({"mode": "update" if args.update else "check",
+                       "ok": ok, "recipes": results}, f, indent=2)
+            f.write("\n")
+    if args.summary:
+        write_summary(args.summary, results,
+                      "update" if args.update else "check")
+    if args.check and not ok:
+        print("graph lint FAILED — fix the violation or, if the change is "
+              "intentional, run `python -m repro.analysis.lint --update` "
+              "and commit the contract diff", file=sys.stderr)
+        return 1
+    return 0

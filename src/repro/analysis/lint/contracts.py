@@ -1,0 +1,179 @@
+"""Per-recipe contract snapshots: the checked-in source of truth for what
+each compiled serve graph is ALLOWED to look like.
+
+A contract (``contracts/<recipe>[.<DxM>].json``) pins, per jit:
+
+  * the s8-convert ledger (count + bytes of every int8→float convert in the
+    traced jaxpr),
+  * the collective budget (count + result bytes per collective kind in the
+    optimized per-device HLO),
+  * the donation audit (cache-pool leaves vs ``input_output_alias``),
+
+plus the engine fingerprint (arch + serving knobs — a contract only applies
+to the geometry it was generated under), the warmup shape set, and an
+explicit ``known_debt`` list. Debt entries are the deliberate violations the
+linter tolerates — e.g. the PR-5 pooled ``take``/``.at[].set`` prefill
+gathers under TP, and the chunked-prefill batched dequant of the int8 cache
+— each carrying a ``why`` so removing the debt later (ROADMAP shard_map
+gather item) forces a contract update that SHOWS the win.
+
+``--update`` regenerates snapshots (auto-deriving the debt list from the
+current graph); ``--check`` diffs and turns any drift into a blocking
+failure. Legitimate ``--update`` occasions: an intentional serving-path
+change, or a jax/XLA upgrade that re-shapes the compiled modules (the
+jaxpr-level ledger is version-stable; the HLO collective split is not).
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Optional
+
+from .rules import (
+    collective_table,
+    convert_ledger,
+    donation_info,
+    is_cache_dequant,
+    pool_collective_hits,
+    s8_convert_records,
+)
+
+CONTRACT_DIR = os.path.join(os.path.dirname(__file__), "contracts")
+
+_DEBT_WHY = {
+    "dtype-ledger": (
+        "chunked prefill dequantizes the slot's int8 ring once per chunk "
+        "(batched attention over the gathered sub-cache); fusing the "
+        "scale-fold into the prefill contraction is open ROADMAP work"
+    ),
+    "collective-budget": (
+        "GSPMD materializes the pooled take/.at[].set pair as whole-leaf "
+        "collectives on the sharded prefill paths (PR-5 known-bad case); "
+        "the ROADMAP shard_map-gather item removes this — deleting this "
+        "entry then makes the win visible in the contract diff"
+    ),
+}
+
+
+def contract_path(stem: str) -> str:
+    return os.path.join(CONTRACT_DIR, f"{stem}.json")
+
+
+def load_contract(stem: str) -> Optional[dict]:
+    path = contract_path(stem)
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        return json.load(f)
+
+
+def save_contract(stem: str, contract: dict) -> str:
+    os.makedirs(CONTRACT_DIR, exist_ok=True)
+    path = contract_path(stem)
+    with open(path, "w") as f:
+        json.dump(contract, f, indent=2, sort_keys=True)
+        f.write("\n")
+    return path
+
+
+def snapshot(graph) -> dict:
+    """Build a contract from a lint graph, auto-deriving ``known_debt``:
+    every prefill-path full-cache dequant and every pool-leaf collective in
+    the CURRENT graph becomes an explicit debt entry (with a ``why``), so a
+    fresh ``--update`` never silently blesses *new* decode-path violations —
+    those have no debt channel and stay hard errors."""
+    debt: list = []
+    jits: dict = {}
+    for name, art in sorted(graph.jits.items()):
+        entry: dict = {"kind": art.kind}
+        if art.jaxpr is not None:
+            entry["s8_converts"] = convert_ledger(art.jaxpr)
+            if art.kind != "decode":
+                for r in s8_convert_records(art.jaxpr):
+                    if (not r.fused and not r.in_pallas
+                            and is_cache_dequant(r, art)):
+                        debt.append({
+                            "rule": "dtype-ledger", "jit": name,
+                            "shape": list(r.shape), "dtype": r.dtype,
+                            "why": _DEBT_WHY["dtype-ledger"],
+                        })
+        if art.module is not None:
+            entry["collectives"] = {
+                op: list(row)
+                for op, row in sorted(collective_table(art.module).items())
+            }
+            entry["donation"] = donation_info(art.module, art)
+            for hit in pool_collective_hits(art.module, art):
+                debt.append({
+                    "rule": "collective-budget", "jit": name,
+                    "op": hit["op"], "type": hit["type"],
+                    "bytes": hit["bytes"],
+                    "why": _DEBT_WHY["collective-budget"],
+                })
+        jits[name] = entry
+    return {
+        "recipe": graph.recipe,
+        "mesh": ("x".join(map(str, graph.mesh_shape))
+                 if graph.mesh_shape else None),
+        "engine": dict(graph.engine),
+        "warmup_shapes": sorted([j, int(d)] for j, d in graph.warmup_shapes),
+        "jits": jits,
+        "known_debt": debt,
+    }
+
+
+def diff_contracts(old: Optional[dict], new: dict) -> list[str]:
+    """Human-readable drift lines between two contracts (for --update
+    output and the CI step summary). Empty list = identical."""
+    if old is None:
+        return [f"new contract ({len(new.get('jits', {}))} jits, "
+                f"{len(new.get('known_debt', []))} known_debt entries)"]
+    lines: list[str] = []
+    for key in ("recipe", "mesh", "engine"):
+        if old.get(key) != new.get(key):
+            lines.append(f"{key}: {old.get(key)} -> {new.get(key)}")
+    if old.get("warmup_shapes") != new.get("warmup_shapes"):
+        o = {tuple(s) for s in old.get("warmup_shapes", [])}
+        n = {tuple(s) for s in new.get("warmup_shapes", [])}
+        for s in sorted(n - o):
+            lines.append(f"warmup shape added: {s}")
+        for s in sorted(o - n):
+            lines.append(f"warmup shape removed: {s}")
+    o_jits, n_jits = old.get("jits", {}), new.get("jits", {})
+    for name in sorted(set(o_jits) | set(n_jits)):
+        if name not in o_jits:
+            lines.append(f"{name}: new jit")
+            continue
+        if name not in n_jits:
+            lines.append(f"{name}: jit removed")
+            continue
+        o, n = o_jits[name], n_jits[name]
+        if o.get("s8_converts") != n.get("s8_converts"):
+            ol, nl = o.get("s8_converts") or {}, n.get("s8_converts") or {}
+            lines.append(
+                f"{name}: s8-convert ledger {ol.get('count')} ops / "
+                f"{ol.get('bytes')} B -> {nl.get('count')} ops / "
+                f"{nl.get('bytes')} B")
+        oc, nc = o.get("collectives") or {}, n.get("collectives") or {}
+        for op in sorted(set(oc) | set(nc)):
+            if oc.get(op) != nc.get(op):
+                lines.append(
+                    f"{name}: {op} {oc.get(op, [0, 0])} -> "
+                    f"{nc.get(op, [0, 0])} [count, bytes]")
+        if (o.get("donation") or {}).get("ok") != \
+                (n.get("donation") or {}).get("ok"):
+            lines.append(f"{name}: donation ok "
+                         f"{(o.get('donation') or {}).get('ok')} -> "
+                         f"{(n.get('donation') or {}).get('ok')}")
+    o_debt = {json.dumps(d, sort_keys=True)
+              for d in old.get("known_debt", [])}
+    n_debt = {json.dumps(d, sort_keys=True)
+              for d in new.get("known_debt", [])}
+    for d in sorted(n_debt - o_debt):
+        e = json.loads(d)
+        lines.append(f"known_debt added: {e.get('rule')} @ {e.get('jit')}")
+    for d in sorted(o_debt - n_debt):
+        e = json.loads(d)
+        lines.append(f"known_debt REMOVED (a win): {e.get('rule')} @ "
+                     f"{e.get('jit')}")
+    return lines

@@ -1,0 +1,348 @@
+"""Instruction-level model of optimized HLO text.
+
+``analysis/hlo_diag.py`` grew out of a regex-per-line Counter; that was fine
+for ranking collectives but is too lossy to *enforce* anything: it drops
+instructions whose result is a tuple containing layout annotations (the
+``{0:T(256)}`` tiling syntax nests parentheses, which breaks a ``[^)]*``
+scan), it cannot see the module-level ``input_output_alias`` map donation
+produces, and it has no notion of operands. This module parses the text XLA
+emits (``compiled.as_text()``) into a small object model the lint rules (and
+the fixed ``hlo_diag``) operate on:
+
+  * :class:`HloInstr` — name, opcode, flattened result types, operand names,
+    enclosing computation, raw line,
+  * :class:`HloModule` — the computations, the entry computation, the
+    ``input_output_alias`` map, and the entry parameter layouts.
+
+Pure text processing: no jax import, so the parser is usable from fixtures
+and from ``hlo_diag`` without pulling in the accelerator stack.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+import warnings
+from typing import Optional
+
+# HLO dtype → bytes. Mirrors roofline._DTYPE_BYTES but owned here so the
+# parser stays import-light; unknown dtypes WARN and count 0 (never a silent
+# skip — a new dtype showing up in a budget is itself a signal).
+DTYPE_BYTES = {
+    "pred": 1, "s2": 1, "u2": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1,
+    "s16": 2, "u16": 2, "s32": 4, "u32": 4, "s64": 8, "u64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3b11fnuz": 1, "f8e4m3fnuz": 1,
+    "f8e5m2fnuz": 1, "bf16": 2, "f16": 2, "f32": 4, "f64": 8,
+    "c64": 8, "c128": 16, "token": 0, "opaque": 0,
+}
+
+COLLECTIVE_OPS = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute", "collective-broadcast", "ragged-all-to-all",
+)
+
+_WARNED_DTYPES: set = set()
+
+
+def _balanced(s: str, i: int, open_ch: str, close_ch: str) -> int:
+    """Index of the close bracket matching ``s[i] == open_ch``."""
+    depth = 0
+    for j in range(i, len(s)):
+        if s[j] == open_ch:
+            depth += 1
+        elif s[j] == close_ch:
+            depth -= 1
+            if depth == 0:
+                return j
+    raise ValueError(f"unbalanced {open_ch!r} at {i} in {s[:120]!r}")
+
+
+def _scan_type(s: str, i: int) -> tuple[str, int]:
+    """Scan one HLO type starting at ``s[i]``; returns (type_str, next_i).
+
+    Handles tuple types ``(f32[4]{0}, s32[])``, array layouts with nested
+    parens (``f32[8,128]{1,0:T(8,128)}``), and scalar types (``f32[]``).
+    """
+    if s[i] == "(":
+        j = _balanced(s, i, "(", ")")
+        return s[i : j + 1], j + 1
+    m = re.match(r"[a-z][a-z0-9]*", s[i:])
+    if not m:
+        raise ValueError(f"no type at {i} in {s[:120]!r}")
+    j = i + m.end()
+    if j < len(s) and s[j] == "[":
+        j = _balanced(s, j, "[", "]") + 1
+    if j < len(s) and s[j] == "{":
+        j = _balanced(s, j, "{", "}") + 1
+    return s[i:j], j
+
+
+def _split_top(s: str, sep: str = ",") -> list[str]:
+    """Split on ``sep`` at bracket depth 0 ((), [], {} all tracked)."""
+    out, depth, start = [], 0, 0
+    for i, c in enumerate(s):
+        if c in "([{":
+            depth += 1
+        elif c in ")]}":
+            depth -= 1
+        elif c == sep and depth == 0:
+            out.append(s[start:i])
+            start = i + 1
+    out.append(s[start:])
+    return [p.strip() for p in out if p.strip()]
+
+
+def flatten_type(type_str: str) -> list[str]:
+    """Tuple type → leaf array types (a non-tuple flattens to itself)."""
+    t = type_str.strip()
+    if t.startswith("("):
+        leaves: list[str] = []
+        for part in _split_top(t[1:-1]):
+            leaves.extend(flatten_type(part))
+        return leaves
+    return [t]
+
+
+_ARRAY_RE = re.compile(r"^([a-z][a-z0-9]*)(?:\[([0-9,]*)\])?")
+
+
+def parse_array_type(type_str: str) -> tuple[str, tuple[int, ...]]:
+    """``'f32[2,4]{1,0}'`` → ``('f32', (2, 4))``; scalars give ``()``."""
+    m = _ARRAY_RE.match(type_str.strip())
+    if not m:
+        raise ValueError(f"not an array type: {type_str!r}")
+    dims = m.group(2)
+    return m.group(1), tuple(int(d) for d in dims.split(",")) if dims else ()
+
+
+def type_bytes(type_str: str, warn_unknown: bool = True) -> int:
+    """Total bytes of a (possibly tuple) HLO type.
+
+    Unknown dtypes contribute 0 **with a warning** — the old silent-skip
+    behavior hid brand-new dtypes from every byte budget.
+    """
+    total = 0
+    for leaf in flatten_type(type_str):
+        try:
+            dt, dims = parse_array_type(leaf)
+        except ValueError:
+            continue
+        if dt not in DTYPE_BYTES:
+            if warn_unknown and dt not in _WARNED_DTYPES:
+                _WARNED_DTYPES.add(dt)
+                warnings.warn(
+                    f"unknown HLO dtype {dt!r} in {leaf!r}: counting 0 bytes "
+                    f"— add it to repro.analysis.lint.hlo_model.DTYPE_BYTES",
+                    stacklevel=2,
+                )
+            continue
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class HloInstr:
+    """One instruction: ``%name = <type> opcode(operands), attrs...``."""
+
+    name: str
+    opcode: str                 # full opcode, e.g. "all-reduce-start"
+    result_type: str            # raw type string (may be a tuple)
+    result_leaves: list[str]    # flattened leaf array types
+    operands: list[str]         # operand instruction names (no leading %)
+    computation: str
+    is_root: bool
+    raw: str
+
+    @property
+    def base_opcode(self) -> str:
+        """Opcode with the async ``-start``/``-done`` suffix stripped."""
+        for suf in ("-start", "-done"):
+            if self.opcode.endswith(suf):
+                return self.opcode[: -len(suf)]
+        return self.opcode
+
+    @property
+    def async_phase(self) -> Optional[str]:
+        for suf in ("-start", "-done"):
+            if self.opcode.endswith(suf):
+                return suf
+        return None
+
+    def result_bytes(self) -> int:
+        """Bytes of the materialized result. Async ``-start`` ops carry an
+        (operands..., results...) tuple — count half so a start/done pair
+        totals one payload, same as the synchronous form."""
+        b = type_bytes(self.result_type)
+        if self.async_phase == "-start" and self.result_type.lstrip().startswith("("):
+            return b // 2
+        return b
+
+    def result_shapes(self) -> list[tuple[str, tuple[int, ...]]]:
+        out = []
+        for leaf in self.result_leaves:
+            try:
+                out.append(parse_array_type(leaf))
+            except ValueError:
+                pass
+        return out
+
+
+@dataclasses.dataclass
+class HloModule:
+    """Parsed module: computations, entry, alias map, entry param layouts."""
+
+    name: str
+    computations: dict[str, list[HloInstr]]
+    entry: str
+    # input_output_alias: {output tuple index: (param number, param tuple idx)}
+    alias: dict[tuple[int, ...], tuple[int, tuple[int, ...]]]
+    entry_param_types: list[str]    # from entry_computation_layout
+    entry_result_types: list[str]
+
+    def instructions(self, computation: Optional[str] = None):
+        if computation is not None:
+            yield from self.computations.get(computation, [])
+            return
+        for instrs in self.computations.values():
+            yield from instrs
+
+    def collectives(self, computation: Optional[str] = None) -> list[HloInstr]:
+        """Every collective instruction (sync or ``-start``; ``-done`` halves
+        are bookkeeping for a ``-start`` already counted and are skipped)."""
+        return [
+            i
+            for i in self.instructions(computation)
+            if i.base_opcode in COLLECTIVE_OPS and i.async_phase != "-done"
+        ]
+
+    def aliased_param_types(self) -> list[str]:
+        """Entry parameter types (one per aliased param) named by the
+        ``input_output_alias`` map, when the entry layout is available."""
+        out = []
+        for _, (param, _) in sorted(self.alias.items()):
+            if param < len(self.entry_param_types):
+                out.append(self.entry_param_types[param])
+        return out
+
+
+_ALIAS_ENTRY_RE = re.compile(
+    r"\{\s*([\d,\s]*)\}\s*:\s*\(\s*(\d+)\s*,\s*\{([\d,\s]*)\}\s*,\s*"
+    r"(?:may|must)-alias\s*\)"
+)
+_COMP_HEADER_RE = re.compile(
+    r"^(ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->\s*.+\{$"
+)
+_INSTR_RE = re.compile(r"^(ROOT\s+)?%?([\w.\-]+)\s*=\s*")
+_IDX_COMMENT_RE = re.compile(r"/\*[^*]*\*/")
+
+
+def _parse_idx(s: str) -> tuple[int, ...]:
+    return tuple(int(x) for x in s.replace(" ", "").split(",") if x != "")
+
+
+def _parse_module_header(line: str, mod: "HloModule") -> None:
+    m = re.match(r"HloModule\s+([\w.\-]+)", line)
+    if m:
+        mod.name = m.group(1)
+    i = line.find("input_output_alias=")
+    if i >= 0:
+        j = line.index("{", i)
+        block = line[j : _balanced(line, j, "{", "}") + 1]
+        for out_idx, param, param_idx in (
+            (g.group(1), g.group(2), g.group(3))
+            for g in _ALIAS_ENTRY_RE.finditer(block)
+        ):
+            mod.alias[_parse_idx(out_idx)] = (int(param), _parse_idx(param_idx))
+    i = line.find("entry_computation_layout=")
+    if i >= 0:
+        j = line.index("{", i)
+        block = line[j + 1 : _balanced(line, j, "{", "}")]
+        block = _IDX_COMMENT_RE.sub("", block)
+        arrow = block.find("->")
+        params = block[:arrow].strip() if arrow >= 0 else block.strip()
+        results = block[arrow + 2 :].strip() if arrow >= 0 else ""
+        if params.startswith("("):
+            mod.entry_param_types = _split_top(params[1:-1])
+        elif params:
+            mod.entry_param_types = [params]
+        if results.startswith("("):
+            mod.entry_result_types = _split_top(results[1:-1])
+        elif results:
+            mod.entry_result_types = [results]
+
+
+def _parse_instr(line: str, computation: str) -> Optional[HloInstr]:
+    m = _INSTR_RE.match(line)
+    if not m:
+        return None
+    is_root, name = bool(m.group(1)), m.group(2)
+    rest = line[m.end():]
+    try:
+        type_str, i = _scan_type(rest, 0)
+    except ValueError:
+        return None
+    while i < len(rest) and rest[i] == " ":
+        i += 1
+    op_m = re.match(r"[a-zA-Z][\w\-]*", rest[i:])
+    if not op_m:
+        return None
+    opcode = op_m.group(0)
+    i += op_m.end()
+    operands: list[str] = []
+    if i < len(rest) and rest[i] == "(":
+        j = _balanced(rest, i, "(", ")")
+        operands = re.findall(r"%([\w.\-]+)", rest[i : j + 1])
+    return HloInstr(
+        name=name,
+        opcode=opcode,
+        result_type=type_str,
+        result_leaves=flatten_type(type_str),
+        operands=operands,
+        computation=computation,
+        is_root=is_root,
+        raw=line,
+    )
+
+
+def parse_hlo_module(hlo_text: str) -> HloModule:
+    """Parse ``compiled.as_text()`` (or a hand-written fixture) into an
+    :class:`HloModule`. Lines that are not module headers, computation
+    headers, or instructions are ignored — the parser is intentionally
+    tolerant so lint fixtures can be minimal."""
+    mod = HloModule(
+        name="", computations={}, entry="", alias={},
+        entry_param_types=[], entry_result_types=[],
+    )
+    comp: Optional[str] = None
+    for raw in hlo_text.splitlines():
+        line = raw.strip()
+        if not line or line.startswith("//") or line.startswith("#"):
+            continue
+        if line.startswith("HloModule"):
+            _parse_module_header(line, mod)
+            continue
+        hm = _COMP_HEADER_RE.match(line)
+        if hm and " = " not in line:
+            comp = hm.group(2)
+            mod.computations.setdefault(comp, [])
+            if hm.group(1):
+                mod.entry = comp
+            continue
+        if line == "}":
+            comp = None
+            continue
+        if comp is None:
+            # tolerate bare instruction fixtures with no ENTRY wrapper
+            if " = " in line:
+                comp = mod.entry = mod.entry or "entry"
+                mod.computations.setdefault(comp, [])
+            else:
+                continue
+        instr = _parse_instr(line, comp)
+        if instr is not None:
+            mod.computations[comp].append(instr)
+    if not mod.entry and mod.computations:
+        mod.entry = next(iter(mod.computations))
+    return mod

@@ -23,4 +23,64 @@ Three kernels (taxonomy B.12 — W8A8 / weight-only / dynamic-quant):
 Each package: kernel.py (pl.pallas_call + BlockSpec), ops.py (jit'd public
 wrapper with padding + XLA fallback), ref.py (pure-jnp oracle).
 Kernels VALIDATE in interpret mode on CPU; TPU is the compile target.
+
+``serving_kernel_specs`` / ``lower_serving_kernels`` expose the standalone
+kernels to the graph linter (analysis/lint): representative smoke-shape
+argument sets, and the traced-but-never-run lowered modules built from them.
 """
+from __future__ import annotations
+
+
+def serving_kernel_specs(*, head_dim: int = 16, n_kv_heads: int = 2,
+                         n_q_heads: int = 4, seq: int = 32, batch: int = 2,
+                         d_in: int = 64, d_out: int = 128) -> dict:
+    """{name: (fn, args, kwargs)} for each standalone serving kernel at a
+    representative smoke shape — everything the lint layer needs to trace
+    (``jax.make_jaxpr``) or lower (``jax.jit(...).lower``) the kernels
+    without running them. Shapes default to the smoke-config attention
+    geometry so kernel contracts line up with the engine contracts."""
+    import jax.numpy as jnp
+
+    from .kv_attention.ops import kv_attention_decode
+    from .qmatmul_w8a8.ops import qmatmul_w8a8
+    from .qmatmul_w8a16.ops import qmatmul_w8a16
+    from .quantize_act.ops import quantize_act
+
+    B, S, Hq, Hkv, hd = batch, seq, n_q_heads, n_kv_heads, head_dim
+    M, K, N = 8, d_in, d_out
+    a = jnp.zeros((M, K), jnp.float32)
+    w_q = jnp.zeros((K, N), jnp.int8)
+    w_scale = jnp.ones((N,), jnp.float32)
+    a_q = jnp.zeros((M, K), jnp.int8)
+    a_scale = jnp.ones((M,), jnp.float32)
+    return {
+        "qmatmul_w8a16": (
+            qmatmul_w8a16, (a, w_q, w_scale), {"out_dtype": jnp.float32}),
+        "qmatmul_w8a8": (
+            qmatmul_w8a8, (a_q, w_q, a_scale, w_scale), {}),
+        "quantize_act": (quantize_act, (a,), {}),
+        "kv_attention_decode": (
+            kv_attention_decode,
+            (jnp.zeros((B, Hq, hd), jnp.float32),        # q
+             jnp.zeros((B, S, Hkv, hd), jnp.int8),       # cache_k
+             jnp.ones((B, S, Hkv), jnp.float32),         # cache_ks
+             jnp.zeros((B, S, Hkv, hd), jnp.int8),       # cache_v
+             jnp.ones((B, S, Hkv), jnp.float32),         # cache_vs
+             jnp.zeros((B, 1, Hkv, hd), jnp.float32),    # k_new
+             jnp.zeros((B, 1, Hkv, hd), jnp.float32),    # v_new
+             jnp.zeros((B, 1), jnp.int32)),              # idx
+            {"valid": jnp.ones((B, S), bool)},
+        ),
+    }
+
+
+def lower_serving_kernels(**shape_kw) -> dict:
+    """{name: jax.stages.Lowered} for every standalone serving kernel —
+    traced and lowered (StableHLO), NOT compiled or run."""
+    import jax
+
+    out = {}
+    for name, (fn, args, kw) in serving_kernel_specs(**shape_kw).items():
+        out[name] = jax.jit(lambda *a, _fn=fn, _kw=kw: _fn(*a, **_kw)
+                            ).lower(*args)
+    return out

@@ -88,6 +88,11 @@ def main(argv=None):
                     help="replay a synthetic arrival schedule of N requests "
                          "(mixed log-uniform lengths, Poisson arrivals)")
     ap.add_argument("--trace-seed", type=int, default=0)
+    ap.add_argument("--lint", action="store_true",
+                    help="run the QuantLint graph linter over this engine's "
+                         "compiled serve paths before serving (warn-only "
+                         "here; `python -m repro.analysis.lint --check` is "
+                         "the blocking CI gate)")
     args = ap.parse_args(argv)
 
     # validate --mesh BEFORE any quantization runs: a typo'd shape or a
@@ -235,6 +240,16 @@ def main(argv=None):
     print(f"kv cache: {'int8' if engine.kv_bits == 8 else 'fp'} "
           f"({engine.pool.bytes_per_slot() / 1e3:.1f} kB/slot, "
           f"{args.slots} slots x {max_len} positions)")
+    if args.lint:
+        from ..analysis.lint import lint_engine
+
+        recipe_name = qm.recipe.name if qm is not None else "fp32"
+        t0 = time.time()
+        findings = lint_engine(engine, recipe_name)
+        n_err = sum(f.severity == "error" for f in findings)
+        print(f"--lint: {'FAIL' if n_err else 'pass'} "
+              f"({time.time() - t0:.1f} s; warn-only at runtime — serving "
+              f"continues)")
     if args.warmup:
         t0 = time.time()
         engine.warmup()

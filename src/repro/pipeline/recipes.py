@@ -211,3 +211,20 @@ def resolve_recipe(spec: RecipeLike) -> Recipe:
 
 def list_recipes() -> list[str]:
     return sorted(BUILTIN_RECIPES)
+
+
+def lint_mesh_shape(recipe_name: str):
+    """The mesh shape the graph linter checks a recipe under: the CI
+    reference topology (2 data x 4 model — the tier1-multidevice job's 8
+    virtual devices) for ``-tp`` recipes, single-device otherwise."""
+    return (2, 4) if recipe_name.endswith("-tp") else None
+
+
+def contract_stem(recipe_name: str, mesh_shape=None) -> str:
+    """Filename stem of a recipe's lint contract:
+    ``<recipe>`` single-device, ``<recipe>.<DxM>`` under a mesh — so the
+    same recipe can pin contracts for several topologies side by side."""
+    resolve_recipe(recipe_name)  # fail fast (with did-you-mean) on typos
+    if mesh_shape:
+        return f"{recipe_name}.{'x'.join(str(int(s)) for s in mesh_shape)}"
+    return recipe_name

@@ -602,13 +602,93 @@ class ServingEngine:
         out, self.results = self.results, {}
         return out
 
+    # ------------------------------------------------- static introspection
+    # The lint layer (analysis/lint) reasons about the serve paths WITHOUT
+    # running them: which jits exist, what shapes they can be dispatched at,
+    # and what warmup() compiles. warmup() itself is driven off the same
+    # enumeration so the two can never drift apart.
+
+    def warmup_shapes(self) -> set:
+        """The (jit, dim) pairs ``warmup()`` compiles: every power-of-two
+        prefill batch width (clamped at num_slots) and decode-scan horizon
+        on the fast path; the batch-1 stepwise shapes otherwise."""
+        if not self.fast:
+            return {("prefill", 1), ("decode", 1)}
+        widths = {min(1 << i, self.num_slots)
+                  for i in range((self.num_slots - 1).bit_length() + 1)}
+        horizons = {1 << i for i in range(self.decode_horizon.bit_length())
+                    if 1 << i <= self.decode_horizon}
+        return ({("prefill_multi", w) for w in widths}
+                | {("decode_horizon", k) for k in horizons})
+
+    def dispatch_shapes(self) -> set:
+        """Every (jit, dim) the serving loop can actually dispatch: prefill
+        widths ``min(pow2_ceil(P), num_slots)`` for 1 <= P <= num_slots
+        pending rows, horizons ``pow2_floor(k)`` for 1 <= k <=
+        decode_horizon. The recompilation-guard lint rule checks this set is
+        CLOSED under ``warmup_shapes()`` — a live step never compiles."""
+        if not self.fast:
+            return {("prefill", 1), ("decode", 1)}
+        widths = {min(_pow2_ceil(n), self.num_slots)
+                  for n in range(1, self.num_slots + 1)}
+        horizons = {_pow2_floor(k)
+                    for k in range(1, self.decode_horizon + 1)}
+        return ({("prefill_multi", w) for w in widths}
+                | {("decode_horizon", k) for k in horizons})
+
+    def serve_jit_specs(self) -> dict:
+        """{name: (jit_fn, impl_fn, args, static_kwargs)} for every jitted
+        serve path, with representative arguments at the widest warmed shape
+        (prefill_multi at P=num_slots, decode_horizon at k=decode_horizon).
+        ``params``/``cache`` are the engine's live (possibly sharded) arrays
+        so lowering sees the real placements; tracing/lowering never
+        executes, so donation does not invalidate the pool."""
+        B, C = self.num_slots, self.prefill_chunk
+        cache = self.pool.cache
+        return {
+            "prefill": (
+                self._prefill_fn, self._prefill_chunk_impl,
+                (self.params, jnp.zeros((1, C), jnp.int32), cache,
+                 jnp.int32(0), jnp.int32(C)),
+                {},
+            ),
+            "decode": (
+                self._decode_fn, self._decode_impl,
+                (self.params, jnp.zeros((B, 1), jnp.int32), cache,
+                 jnp.ones((B,), bool)),
+                {},
+            ),
+            "prefill_multi": (
+                self._prefill_multi_fn, self._prefill_multi_impl,
+                (self.params, jnp.zeros((B, C), jnp.int32), cache,
+                 jnp.arange(B, dtype=jnp.int32), jnp.ones((B,), jnp.int32),
+                 jnp.zeros((B,), bool), jnp.ones((B,), bool)),
+                {},
+            ),
+            "decode_horizon": (
+                self._decode_horizon_fn, self._decode_horizon_impl,
+                (self.params, jnp.zeros((B, 1), jnp.int32), cache,
+                 jnp.full((B,), self.decode_horizon, jnp.int32)),
+                {"k": self.decode_horizon},
+            ),
+        }
+
+    def lowered_serve_jits(self) -> dict:
+        """{name: jax.stages.Lowered} for the four serve jits — traced and
+        lowered (StableHLO), NOT compiled or run."""
+        return {
+            name: fn.lower(*args, **kw)
+            for name, (fn, _, args, kw) in self.serve_jit_specs().items()
+        }
+
     def warmup(self) -> None:
-        """Compile every serving shape ahead of traffic: the power-of-two
-        prefill widths and decode horizons this engine can dispatch (the
-        stepwise shapes when ``fast=False``). Runs tiny throwaway requests
-        through the real loop — results are discarded, stats and clock
-        restored — so a production engine (or a benchmark) serves steady
-        state instead of hitting XLA compiles mid-traffic."""
+        """Compile every serving shape ahead of traffic — exactly the
+        ``warmup_shapes()`` set: the power-of-two prefill widths and decode
+        horizons this engine can dispatch (the stepwise shapes when
+        ``fast=False``). Runs tiny throwaway requests through the real loop
+        — results are discarded, stats and clock restored — so a production
+        engine (or a benchmark) serves steady state instead of hitting XLA
+        compiles mid-traffic."""
         if self.scheduler.pending() or self._inflight:
             raise RuntimeError(
                 "warmup() needs an idle engine — it runs (and discards) "
@@ -616,19 +696,15 @@ class ServingEngine:
             )
         snap_stats, snap_clock = dict(self.stats), self.clock
         snap_order = list(self.scheduler.admitted_order)
+        shapes = self.warmup_shapes()
         rid = -1
-        widths = sorted({min(1 << i, self.num_slots)
-                         for i in range((self.num_slots - 1).bit_length() + 1)}
-                        ) if self.fast else [1]   # stepwise prefill is batch-1
+        widths = sorted(w for j, w in shapes if j.startswith("prefill"))
         for w in widths:                 # prefill widths (no decode: gen 1)
             self.run([Request(rid=rid - j, prompt=[0], max_new_tokens=1)
                       for j in range(w)])
             rid -= w
-        h = self.decode_horizon if self.fast else 1
-        for i in range(h.bit_length()):  # decode horizons
-            k = 1 << i
-            if k > h:
-                break
+        horizons = sorted(k for j, k in shapes if j.startswith("decode"))
+        for k in horizons:               # decode horizons
             self.run([Request(rid=rid, prompt=[0],
                               max_new_tokens=min(k + 1, self.max_len))])
             rid -= 1

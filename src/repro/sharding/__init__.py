@@ -3,5 +3,7 @@ from .partition import (  # noqa: F401
     cache_pspecs,
     named_shardings,
     params_pspecs,
+    payload_scale_pairs,
     serve_cache_pspecs,
+    spec_paths,
 )

@@ -316,6 +316,22 @@ def named_shardings(spec_tree: Any, mesh: Mesh) -> Any:
     )
 
 
+def payload_scale_pairs(tree: Any, prefix: str = "") -> list:
+    """Every (q_path, scale_path) pair of QTensor leaves in a params pytree,
+    in ``_walk`` path notation — the scale-coupling lint rule checks each
+    pair shares its out-feature sharding axis."""
+    pairs: list = []
+    if type(tree).__name__ == "QTensor":
+        pairs.append((f"{prefix}/q", f"{prefix}/scale"))
+    elif isinstance(tree, dict):
+        for k, v in tree.items():
+            pairs.extend(payload_scale_pairs(v, f"{prefix}/{k}"))
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            pairs.extend(payload_scale_pairs(v, f"{prefix}/{i}"))
+    return pairs
+
+
 def spec_paths(spec_tree: Any, prefix: str = ""):
     """Yield (path, PartitionSpec) pairs from a spec pytree. A dedicated
     walker: PartitionSpec subclasses tuple on some jax versions, so the

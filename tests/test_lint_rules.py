@@ -1,0 +1,360 @@
+"""QuantLint rule-engine tests on hand-written miniature jaxprs/HLO.
+
+Each of the five core rules gets a fixture that passes plus a
+deliberately-broken twin (injected f32 cache dequant, dropped donation,
+extra / unpinned all-gather, new post-warmup shape, decoupled scale
+sharding) asserting the rule fires with an actionable message naming the
+jit and instruction. The HLO parser and the repaired ``hlo_diag`` are
+covered on the exact inputs the old regex dropped: layout-annotated types
+(nested parens) and tuple-typed async collectives.
+"""
+import warnings
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.analysis import hlo_diag
+from repro.analysis.lint import parse_hlo_module, type_bytes
+from repro.analysis.lint.contracts import diff_contracts
+from repro.analysis.lint.extract import JitArtifact, LintGraph
+from repro.analysis.lint.rules import (
+    Finding,
+    is_cache_dequant,
+    register_rule,
+    run_rules,
+    s8_convert_records,
+)
+
+# miniature cache geometry: one ring is [S, H, hd] = [8, 2, 4]
+CACHE_DIMS = (8, 2, 4)
+
+
+def _graph(jits, mesh_shape=None, **kw):
+    return LintGraph(recipe="mini", mesh_shape=mesh_shape, engine={},
+                     jits=jits, **kw)
+
+
+def _artifact(name, kind, **kw):
+    kw.setdefault("cache_payload_dims", CACHE_DIMS)
+    return JitArtifact(name=name, kind=kind, **kw)
+
+
+# ------------------------------------------------------------ hlo_model
+def test_parser_layout_annotated_types():
+    mod = parse_hlo_module(
+        "%f = f32[8,128]{1,0:T(8,128)} fusion(%a, %b), kind=kLoop\n"
+    )
+    (i,) = list(mod.instructions())
+    assert i.opcode == "fusion"
+    assert i.operands == ["a", "b"]
+    dt, dims = i.result_shapes()[0]
+    assert (dt, dims) == ("f32", (8, 128))
+    assert i.result_bytes() == 8 * 128 * 4
+
+
+def test_parser_async_tuple_collective():
+    text = """
+    ENTRY %main (p: f32[1024]) -> f32[1024] {
+      %p = f32[1024]{0} parameter(0)
+      %ar = (f32[1024]{0}, f32[1024]{0}) all-reduce-start(%p), to_apply=%add
+      ROOT %ard = f32[1024]{0} all-reduce-done(%ar)
+    }
+    """
+    mod = parse_hlo_module(text)
+    colls = mod.collectives()
+    assert [c.name for c in colls] == ["ar"]        # -done is skipped
+    assert colls[0].base_opcode == "all-reduce"
+    # (operands..., results...) tuple counts half: one payload per pair
+    assert colls[0].result_bytes() == 1024 * 4
+
+
+def test_parser_alias_map_and_entry_layout():
+    text = (
+        "HloModule m, input_output_alias={ {0}: (1, {}, may-alias), "
+        "{1}: (2, {}, may-alias) }, entry_computation_layout="
+        "{(f32[4]{0}, s8[2,8]{1,0}, f32[2]{0})->(s8[2,8]{1,0}, f32[2]{0})}\n"
+    )
+    mod = parse_hlo_module(text)
+    assert mod.alias == {(0,): (1, ()), (1,): (2, ())}
+    assert mod.aliased_param_types() == ["s8[2,8]{1,0}", "f32[2]{0}"]
+
+
+def test_type_bytes_unknown_dtype_warns_not_skips():
+    with pytest.warns(UserWarning, match="zz9"):
+        assert type_bytes("zz9[4]{0}") == 0
+    assert type_bytes("(f32[2]{0}, zz9[4]{0})", warn_unknown=False) == 8
+
+
+# ------------------------------------------------------------- hlo_diag
+def test_hlo_diag_counts_layout_and_tuple_collectives():
+    # both shapes broke the old regex: nested layout parens, tuple result
+    text = """
+    %ag = s8[2,4,32,2,16]{4,3,2,1,0:T(8,128)} all-gather(%x), dimensions={1}
+    %ar = (f32[256]{0}, f32[256]{0}) all-reduce-start(%y), to_apply=%add
+    %ard = f32[256]{0} all-reduce-done(%ar)
+    """
+    rows = hlo_diag.top_collectives(text)
+    by_op = {base: (b, n) for b, n, base, _ in rows}
+    assert by_op["all-gather"] == (2 * 4 * 32 * 2 * 16, 1)
+    assert by_op["all-reduce"] == (256 * 4, 1)      # start/done pair = once
+
+
+def test_hlo_diag_shape_bytes_warns_on_unknown():
+    with pytest.warns(UserWarning, match="qq7"):
+        assert hlo_diag.shape_bytes("qq7[8]{0}") == 0
+
+
+# ------------------------------------------------------------- registry
+def test_registry_rejects_duplicates_and_unknown_rules():
+    with pytest.raises(ValueError, match="already registered"):
+        register_rule("dtype-ledger")(lambda g, c: [])
+    with pytest.raises(ValueError, match="unknown lint rule"):
+        run_rules(_graph({}), rules=["no-such-rule"])
+    with pytest.raises(ValueError, match="severity"):
+        Finding("r", "fatal", "j", "w", "m")
+
+
+# ----------------------------------------------------------- dtype-ledger
+def _fused_jaxpr():
+    def f(x, k):                    # convert feeds the contraction directly
+        return jax.lax.dot_general(
+            x, k.astype(jnp.float32), (((1,), (0,)), ((), ())))
+
+    return jax.make_jaxpr(f)(
+        jnp.zeros((2, CACHE_DIMS[0])), jnp.zeros(CACHE_DIMS, jnp.int8))
+
+
+def _materialized_jaxpr():
+    def f(k, s):                    # dequant-multiply: full ring in f32
+        return (k.astype(jnp.float32) * s).sum()
+
+    return jax.make_jaxpr(f)(
+        jnp.zeros(CACHE_DIMS, jnp.int8), jnp.ones(CACHE_DIMS[:-1] + (1,)))
+
+
+def test_dtype_ledger_passes_on_fused_convert():
+    g = _graph({"decode": _artifact("decode", "decode",
+                                    jaxpr=_fused_jaxpr())})
+    assert run_rules(g, rules=["dtype-ledger"]) == []
+
+
+def test_dtype_ledger_flags_injected_decode_dequant():
+    g = _graph({"decode": _artifact("decode", "decode",
+                                    jaxpr=_materialized_jaxpr())})
+    (f,) = run_rules(g, rules=["dtype-ledger"])
+    assert f.severity == "error" and f.jit == "decode"
+    assert "8x2x4" in f.where and "scale-fold" in f.message
+
+
+def test_dtype_ledger_prefill_debt_channel():
+    g = _graph({"prefill": _artifact("prefill", "prefill",
+                                     jaxpr=_materialized_jaxpr())})
+    # no contract entry: the dequant is an error demanding an explicit pin
+    (f,) = run_rules(g, rules=["dtype-ledger"])
+    assert f.severity == "error" and "known_debt" in f.message
+    # pinned: same graph, same rule, now an info
+    contract = {"known_debt": [{"rule": "dtype-ledger", "jit": "prefill",
+                                "shape": list(CACHE_DIMS)}]}
+    (f,) = run_rules(g, contract, rules=["dtype-ledger"])
+    assert f.severity == "info"
+
+
+def test_dtype_ledger_ignores_weight_shaped_dequant():
+    # a [K, N] weight dequant (the w8a16 XLA-fallback scale-fold) is pinned
+    # by the ledger totals, not an error — only cache-ring shapes hard-fail
+    def f(w, s):
+        return (w.astype(jnp.float32) * s).sum()
+
+    jx = jax.make_jaxpr(f)(jnp.zeros((64, 128), jnp.int8),
+                           jnp.ones((128,)))
+    recs = s8_convert_records(jx)
+    art = _artifact("decode", "decode", jaxpr=jx)
+    assert recs and not is_cache_dequant(recs[0], art)
+    assert run_rules(_graph({"decode": art}), rules=["dtype-ledger"]) == []
+
+
+def test_dtype_ledger_drift_against_contract():
+    g = _graph({"decode": _artifact("decode", "decode",
+                                    jaxpr=_fused_jaxpr())})
+    contract = {"jits": {"decode": {"s8_converts": {"count": 0, "bytes": 0}}}}
+    findings = run_rules(g, contract, rules=["dtype-ledger"])
+    assert any(f.severity == "error" and "ledger drift" in f.message
+               for f in findings)
+
+
+# ------------------------------------------------------ collective-budget
+_POOL_AG_HLO = """
+ENTRY %main (p: s8[2,4,8,2,4]) -> s8[2,4,8,2,4] {
+  %p = s8[2,4,8,2,4]{4,3,2,1,0} parameter(0)
+  %pool.ag = s8[2,4,8,2,4]{4,3,2,1,0} all-gather(%p), dimensions={1}
+  ROOT %r = s8[2,4,8,2,4]{4,3,2,1,0} copy(%pool.ag)
+}
+"""
+
+
+def _pool_artifact(name, hlo):
+    return _artifact(
+        name, "prefill", module=parse_hlo_module(hlo),
+        cache_leaves_global=[("s8", (2, 4, 8, 2, 4))],
+        cache_leaves_local=[("s8", (2, 2, 8, 2, 4))])
+
+
+def test_collective_budget_flags_pool_gather_under_tp():
+    g = _graph({"prefill": _pool_artifact("prefill", _POOL_AG_HLO)},
+               mesh_shape=(2, 4))
+    findings = run_rules(g, rules=["collective-budget"])
+    (f,) = [f for f in findings if f.severity == "error"]
+    assert f.jit == "prefill" and f.where == "pool.ag"
+    assert "cache-pool leaf" in f.message and "s8[2,4,8,2,4]" in f.message
+
+
+def test_collective_budget_known_debt_downgrades_to_info():
+    g = _graph({"prefill": _pool_artifact("prefill", _POOL_AG_HLO)},
+               mesh_shape=(2, 4))
+    contract = {"known_debt": [{"rule": "collective-budget",
+                                "jit": "prefill",
+                                "type": "s8[2,4,8,2,4]"}]}
+    findings = run_rules(g, contract, rules=["collective-budget"])
+    assert [f.severity for f in findings] == ["info"]
+
+
+def test_collective_budget_extra_collective_vs_contract():
+    g = _graph({"prefill": _pool_artifact("prefill", _POOL_AG_HLO)},
+               mesh_shape=(1, 1))           # not TP: only the budget applies
+    contract = {"jits": {"prefill": {"collectives": {}}}}
+    (f,) = run_rules(g, contract, rules=["collective-budget"])
+    assert f.severity == "error" and f.where == "all-gather"
+    assert "new collective traffic" in f.message
+
+
+def test_collective_budget_win_still_requires_repin():
+    g = _graph({"prefill": _artifact("prefill", "prefill",
+                                     module=parse_hlo_module("ENTRY %e (x: f32[1]) -> f32[1] {\n ROOT %r = f32[1]{0} copy(%x)\n}"))},
+               mesh_shape=(1, 1))
+    contract = {"jits": {"prefill": {"collectives": {"all-gather": [1, 512]}}}}
+    (f,) = run_rules(g, contract, rules=["collective-budget"])
+    assert "a win" in f.message
+
+
+# -------------------------------------------------------- donation-audit
+_DONATED_HLO = (
+    "HloModule m, input_output_alias={ {0}: (1, {}, may-alias), "
+    "{1}: (2, {}, may-alias) }, entry_computation_layout="
+    "{(f32[4]{0}, s8[2,8]{1,0}, f32[2]{0})->(s8[2,8]{1,0}, f32[2]{0})}\n"
+)
+_DROPPED_HLO = (
+    "HloModule m, input_output_alias={ {0}: (1, {}, may-alias) }, "
+    "entry_computation_layout="
+    "{(f32[4]{0}, s8[2,8]{1,0}, f32[2]{0})->(s8[2,8]{1,0}, f32[2]{0})}\n"
+)
+_POOL_LEAVES = [("s8", (2, 8)), ("f32", (2,))]
+
+
+def test_donation_audit_passes_when_all_leaves_aliased():
+    art = _artifact("decode", "decode", module=parse_hlo_module(_DONATED_HLO),
+                    cache_leaves_local=list(_POOL_LEAVES))
+    assert run_rules(_graph({"decode": art}), rules=["donation-audit"]) == []
+
+
+def test_donation_audit_flags_dropped_alias():
+    art = _artifact("decode", "decode", module=parse_hlo_module(_DROPPED_HLO),
+                    cache_leaves_local=list(_POOL_LEAVES))
+    (f,) = run_rules(_graph({"decode": art}), rules=["donation-audit"])
+    assert f.severity == "error" and f.jit == "decode"
+    assert "f32[2]" in f.message and "input_output_alias" in f.where
+
+
+# -------------------------------------------------- recompilation-guard
+def test_recompilation_guard_closure():
+    shapes = {("prefill_multi", 1), ("decode_horizon", 1),
+              ("decode_horizon", 2)}
+    g = _graph({}, warmup_shapes=set(shapes), dispatch_shapes=set(shapes))
+    assert run_rules(g, rules=["recompilation-guard"]) == []
+    g.dispatch_shapes.add(("decode_horizon", 3))    # a live-compile shape
+    (f,) = run_rules(g, rules=["recompilation-guard"])
+    assert f.severity == "error" and f.jit == "decode_horizon"
+    assert "warmup" in f.message and "3" in f.where
+
+
+def test_recompilation_guard_contract_set_equality():
+    shapes = {("decode_horizon", 1)}
+    g = _graph({}, warmup_shapes=set(shapes), dispatch_shapes=set(shapes))
+    contract = {"warmup_shapes": [["decode_horizon", 1],
+                                  ["decode_horizon", 2]]}
+    (f,) = run_rules(g, contract, rules=["recompilation-guard"])
+    assert f.severity == "error" and "no longer compiled" in f.message
+
+
+# ------------------------------------------------------- scale-coupling
+def _coupling_graph(q_spec, s_spec, s_shape=(128,)):
+    leaves = {
+        "/blocks/attn/wq/q": {"dtype": "s8", "shape": [64, 128],
+                              "spec": q_spec},
+        "/blocks/attn/wq/scale": {"dtype": "f32", "shape": list(s_shape),
+                                  "spec": s_spec},
+    }
+    return _graph({}, param_leaves=leaves,
+                  scale_pairs=[("/blocks/attn/wq/q",
+                                "/blocks/attn/wq/scale")],
+                  mesh_shape=(2, 4))
+
+
+def test_scale_coupling_passes_on_cosharded_pair():
+    g = _coupling_graph([None, "model"], ["model"])
+    assert run_rules(g, rules=["scale-coupling"]) == []
+
+
+def test_scale_coupling_flags_decoupled_scale():
+    g = _coupling_graph([None, "model"], [None])
+    (f,) = run_rules(g, rules=["scale-coupling"])
+    assert f.severity == "error" and "wq/scale" in f.where
+    assert "'model'" in f.message
+
+
+def test_scale_coupling_flags_sharded_per_tensor_scale():
+    g = _coupling_graph([None, None], ["model"], s_shape=(1,))
+    (f,) = run_rules(g, rules=["scale-coupling"])
+    assert "per-tensor scale" in f.message
+
+
+def test_scale_coupling_missing_scale_leaf():
+    g = _coupling_graph([None, "model"], ["model"])
+    del g.param_leaves["/blocks/attn/wq/scale"]
+    (f,) = run_rules(g, rules=["scale-coupling"])
+    assert "no scale leaf" in f.message
+
+
+def test_scale_coupling_cache_scale_follows_payload():
+    cache = {
+        "/k": {"dtype": "s8", "shape": [2, 4, 8, 2, 4],
+               "spec": [None, "data", None, "model", None]},
+        "/k_scale": {"dtype": "f32", "shape": [2, 4, 8, 2],
+                     "spec": [None, "data", None, "model"]},
+    }
+    g = _graph({}, cache_spec_leaves=cache, mesh_shape=(2, 4))
+    assert run_rules(g, rules=["scale-coupling"]) == []
+    cache["/k_scale"]["spec"] = [None, "data", None, None]   # head decouple
+    (f,) = run_rules(g, rules=["scale-coupling"])
+    assert f.severity == "error" and "head axis" in f.message
+
+
+# ------------------------------------------------------------ contracts
+def test_diff_contracts_reports_drift_and_wins():
+    old = {"recipe": "r", "mesh": None, "engine": {"num_slots": 4},
+           "warmup_shapes": [["decode_horizon", 1]],
+           "jits": {"decode": {"collectives": {"all-gather": [1, 512]},
+                               "s8_converts": {"count": 2, "bytes": 64}}},
+           "known_debt": [{"rule": "collective-budget", "jit": "prefill"}]}
+    new = {"recipe": "r", "mesh": None, "engine": {"num_slots": 4},
+           "warmup_shapes": [["decode_horizon", 1], ["decode_horizon", 2]],
+           "jits": {"decode": {"collectives": {"all-gather": [2, 1024]},
+                               "s8_converts": {"count": 2, "bytes": 64}}},
+           "known_debt": []}
+    lines = "\n".join(diff_contracts(old, new))
+    assert "warmup shape added" in lines
+    assert "all-gather [1, 512] -> [2, 1024]" in lines
+    assert "REMOVED (a win)" in lines
+    assert diff_contracts(old, old) == []
+    assert diff_contracts(None, new) and "new contract" in \
+        diff_contracts(None, new)[0]
