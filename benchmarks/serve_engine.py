@@ -65,7 +65,7 @@ import jax
 import repro
 from repro.configs import get_config
 from repro.models import build_model
-from repro.serving import ServingEngine, synthetic_trace
+from repro.serving import Request, ServingEngine, synthetic_trace
 
 DEFAULT_JSON = pathlib.Path(__file__).resolve().parent / "BENCH_serve.json"
 
@@ -283,6 +283,99 @@ def bench_sharded(label: str, model, params, setup: dict, *,
     return out
 
 
+def bench_prefix_capacity(label: str, model, params, setup: dict, *,
+                          kv_bits=None) -> dict:
+    """The paged-cache headline: concurrent-slot capacity at EQUAL cache
+    memory on a shared-prefix workload.
+
+    Both engines get the same payload byte budget (asserted): the contiguous
+    pool spends it on 2 full-ring slots; the paged pool spends it on the
+    equivalent page pool (2 * ring/page pages) shared by ring/page + 1 slot
+    tables. The trace is one donor plus ring/page followers with an
+    identical long prompt, arriving right after the donor's prefill
+    publishes its prompt pages — each follower then maps the shared pages
+    and pays ONE fresh page, so the paged engine holds every request
+    resident at once while the contiguous engine admits two at a time.
+    Tokens are parity-asserted across layouts; the recorded
+    ``capacity_ratio`` (peak concurrent slots, paged / contiguous) is the
+    acceptance number (>= 2x)."""
+    cfg = setup["cfg"]
+    pg = setup["prefill_chunk"]          # page == chunk: aligned reuse
+    ring = setup["max_len"]
+    pps = ring // pg                     # pages per full-ring slot
+    flat_slots = 2
+    paged_slots = pps + 1
+    prompt = synthetic_trace(
+        5, 1, vocab_size=cfg.vocab_size,
+        prompt_lens=(pps * pg - 2,) * 2, gen_lens=(3, 3))[0].prompt
+    trace = [Request(
+        rid=i, prompt=prompt, max_new_tokens=3,
+        arrival=0.0 if i == 0 else pps + 0.5)
+        for i in range(paged_slots)]
+
+    def drive(engine):
+        # high-water mark of concurrently allocated slots, sampled at
+        # allocation time (a follower's whole lifetime — one-chunk prefill +
+        # short decode — can fit inside ONE fused engine step, so sampling
+        # between steps would miss the peak)
+        peak = {"n": 0}
+        pool = engine.pool
+        real = pool.allocate_pages if pool.paged else pool.allocate
+
+        def counting(*a, **kw):
+            out = real(*a, **kw)
+            peak["n"] = max(peak["n"], pool.n_allocated)
+            return out
+
+        if pool.paged:
+            pool.allocate_pages = counting
+        else:
+            pool.allocate = counting
+        t0 = time.perf_counter()
+        for r in trace:
+            engine.submit(dataclasses.replace(r))
+        while engine.scheduler.pending() or engine._inflight:
+            engine.step()
+        dt = time.perf_counter() - t0
+        out, engine.results = engine.results, {}
+        return out, peak["n"], dt
+
+    kw = dict(max_len=ring, prefill_chunk=pg, fast=True, kv_bits=kv_bits,
+              decode_horizon=max(HORIZONS))
+    flat_eng = ServingEngine(model, params, cfg, num_slots=flat_slots, **kw)
+    paged_eng = ServingEngine(model, params, cfg, num_slots=paged_slots,
+                              page_size=pg, num_pages=flat_slots * pps, **kw)
+    assert paged_eng.pool.cache_bytes() == flat_eng.pool.cache_bytes(), (
+        "capacity comparison must hold cache memory equal")
+    flat_res, flat_peak, flat_dt = drive(flat_eng)
+    paged_res, paged_peak, paged_dt = drive(paged_eng)
+    assert {r: v.tokens for r, v in paged_res.items()} == \
+           {r: v.tokens for r, v in flat_res.items()}, (
+        f"{label}: paged tokens diverged on the shared-prefix trace")
+    ratio = paged_peak / flat_peak
+    assert ratio >= 2.0, (
+        f"{label}: paged peak {paged_peak} vs contiguous {flat_peak} slots "
+        f"at equal memory — the shared-prefix capacity win regressed")
+    out = {
+        "label": label,
+        "cache_bytes": flat_eng.pool.cache_bytes(),
+        "page_size": pg, "num_pages": flat_slots * pps,
+        "n_requests": len(trace), "prompt_len": len(prompt),
+        "peak_slots_contiguous": flat_peak,
+        "peak_slots_paged": paged_peak,
+        "capacity_ratio": ratio,
+        "prefix_hits": paged_eng.prefix_index.hits,
+        "cow_copies": paged_eng.pool.cow_copies,
+        "makespan_contiguous_s": flat_dt,
+        "makespan_paged_s": paged_dt,
+    }
+    print(f"  prefix capacity {label}: paged {paged_peak} vs contiguous "
+          f"{flat_peak} concurrent slots at {out['cache_bytes']} B "
+          f"({ratio:.1f}x, {out['prefix_hits']} prefix hits, "
+          f"{out['cow_copies']} COW copies, tokens identical)")
+    return out
+
+
 def main(argv=None) -> list[dict]:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
@@ -321,6 +414,14 @@ def main(argv=None) -> list[dict]:
               f"({row['kv_bytes_per_slot_fp']} -> "
               f"{row['kv_bytes_per_slot_kv8']} B)")
 
+    print("shared-prefix capacity at equal cache memory (paged vs "
+          "contiguous):")
+    capacity = [
+        bench_prefix_capacity("fp32", model, params, setup),
+        bench_prefix_capacity("serve-w8a16-kv8", qm.model, qm.params, setup,
+                              kv_bits=8),
+    ]
+
     sharded = []
     # >1 CPU device only happens when virtual devices are FORCED — at full
     # dims that repartitions matmul reductions enough to flip deep-decode
@@ -344,7 +445,7 @@ def main(argv=None) -> list[dict]:
               f"--smoke")
 
     write_bench_json(args.json, results, setup, kv8, sharded=sharded,
-                     smoke=args.smoke)
+                     capacity=capacity, smoke=args.smoke)
     return results
 
 
@@ -379,13 +480,14 @@ def _kv8_summary(results: list[dict]) -> dict:
 
 def write_bench_json(path, results: list[dict], setup: dict,
                      kv8: dict = None, sharded: list = None,
-                     smoke: bool = False) -> None:
+                     capacity: list = None, smoke: bool = False) -> None:
     payload = {
         "benchmark": "serve_engine",
         "backend": jax.default_backend(),
         "jax": jax.__version__,
         "smoke": smoke,
         "sharded": sharded or [],
+        "prefix_capacity": capacity or [],
         "traces": {
             "mixed": {"n_requests": setup["n_requests"],
                       "prompt_lens": list(setup["prompt_lens"]),

@@ -30,7 +30,16 @@ DEFAULT_RECIPES = (
     "serve-w8a8-kv8",
     "serve-w8a16-tp",
     "serve-w8a8-kv8-tp",
+    # +paged: same recipes through the page-table KV pool (page gathers must
+    # stay collective-free and dequant-free — the paged acceptance gate)
+    "serve-w8a16+paged",
+    "serve-w8a8-kv8+paged",
+    "serve-w8a16-tp+paged",
+    "serve-w8a8-kv8-tp+paged",
 )
+
+# the paged lint geometry: ring 32 / page 8 -> 4 pages per slot table
+LINT_PAGE_SIZE = 8
 
 
 def _severity_counts(findings) -> dict:
@@ -72,14 +81,23 @@ def lint_recipe(recipe: str, *, update: bool = False,
     """Extract + lint one recipe against its checked-in contract (or
     regenerate the contract when ``update``). Returns a JSON-able result:
     {stem, findings, counts, diff, ok}."""
-    from ...pipeline.recipes import contract_stem, lint_mesh_shape
+    from ...pipeline.recipes import (
+        contract_stem,
+        lint_mesh_shape,
+        split_recipe_flags,
+    )
     from . import contracts
     from .extract import build_graph
     from .rules import Finding
 
-    mesh_shape = lint_mesh_shape(recipe)
+    base, flags = split_recipe_flags(recipe)
+    mesh_shape = lint_mesh_shape(base)
     stem = contract_stem(recipe, mesh_shape)
-    graph = build_graph(recipe, mesh_shape, arch=arch)
+    graph = build_graph(
+        base, mesh_shape, arch=arch,
+        page_size=LINT_PAGE_SIZE if "paged" in flags else None,
+    )
+    graph.recipe = recipe        # contracts record the flagged name
     old = contracts.load_contract(stem)
     diff: list = []
     if update:
@@ -98,7 +116,21 @@ def lint_recipe(recipe: str, *, update: bool = False,
                 f"--recipes {recipe}",
             ))
         else:
-            diff = contracts.diff_contracts(old, contracts.snapshot(graph))
+            fresh = contracts.snapshot(graph)
+            diff = contracts.diff_contracts(old, fresh)
+            # the debt ratchet: known_debt may shrink or hold, never grow —
+            # a new entry means a new full-pool collective or cache dequant
+            # crept into the graph, which is exactly what the paged/sharded
+            # refactors are gated on
+            for e in contracts.debt_growth(old, fresh):
+                findings.append(Finding(
+                    "known-debt-growth", "error", e.get("jit", ""),
+                    e.get("rule", ""),
+                    f"known_debt grew: {json.dumps(e, sort_keys=True)} — "
+                    f"fix the graph, or (only if the regression is "
+                    f"deliberate) --update and justify the new entry in "
+                    f"the PR",
+                ))
         action = "checked"
     counts = _severity_counts(findings)
     return {
@@ -169,6 +201,17 @@ def write_summary(path: str, results: list[dict], mode: str) -> None:
                 loc = f"{e['jit']}:{e['where']}" if e["where"] else e["jit"]
                 f.write(f"- **{e['rule']}** @ `{loc}`: {e['message']}\n")
             f.write("\n")
+        # the full drift, per recipe — including `known_debt REMOVED (a
+        # win)` lines, which deserve to be visible in the PR summary, not
+        # truncated out of the table above
+        drifted = [r for r in results if r["diff"]]
+        if drifted:
+            f.write("### Contract drift\n\n")
+            for r in drifted:
+                f.write(f"**{r['recipe']}** ({r['stem']}):\n")
+                for line in r["diff"]:
+                    f.write(f"- {line}\n")
+                f.write("\n")
 
 
 def main(argv=None) -> int:

@@ -122,6 +122,19 @@ def snapshot(graph) -> dict:
     }
 
 
+def debt_growth(old: Optional[dict], new: dict) -> list[dict]:
+    """``known_debt`` entries present in ``new`` but not in ``old`` — the
+    CI lint gate turns each into a blocking error (debt may shrink or hold,
+    never grow silently). A missing ``old`` contract grows nothing here;
+    that case is already the louder "no contract" error."""
+    if old is None:
+        return []
+    o = {json.dumps(d, sort_keys=True) for d in old.get("known_debt", [])}
+    return [json.loads(d)
+            for d in sorted({json.dumps(d, sort_keys=True)
+                             for d in new.get("known_debt", [])} - o)]
+
+
 def diff_contracts(old: Optional[dict], new: dict) -> list[str]:
     """Human-readable drift lines between two contracts (for --update
     output and the CI step summary). Empty list = identical."""

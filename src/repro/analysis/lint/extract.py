@@ -73,6 +73,9 @@ class JitArtifact:
     # trailing dims of a cache payload leaf ([S, Hkv, hd]) — a materialized
     # s8 convert matching these is a whole-ring dequant (dtype-ledger)
     cache_payload_dims: tuple = ()
+    # (hlo_dtype, dims) of the paged pool's page-table leaf (global + local;
+    # empty for contiguous pools) — excluded from pool-collective matching
+    page_table_shapes: list = dataclasses.field(default_factory=list)
 
 
 @dataclasses.dataclass
@@ -133,8 +136,26 @@ def graph_from_engine(engine, recipe: str = "",
     cfg = engine.cfg
     pool = engine.pool
     glob, loc = _cache_leaf_shapes(pool)
-    k_shape = pool.cache["k"].shape              # [L, B, S, Hkv, hd]
-    slot_elems = int(np.prod(k_shape[2:]))       # one slot, one layer
+    table_shapes = []
+    if pool.paged:
+        pt = pool.cache["page_table"]
+        dims = tuple(int(d) for d in pt.shape)
+        sh = (pool.shardings or {}).get("page_table") if pool.shardings \
+            else None
+        table_shapes = [(hlo_dtype(pt.dtype), dims),
+                        (hlo_dtype(pt.dtype),
+                         tuple(sh.shard_shape(dims)) if sh is not None
+                         else dims)]
+    k_shape = pool.cache["k"].shape
+    if pool.paged:
+        # paged leaves are [L, NP, pg, Hkv, hd], but the jits attend through
+        # the gathered DENSE view [L, B, S, Hkv, hd] — the dtype ledger's
+        # "whole-ring dequant" threshold and payload-dims matcher must see
+        # the view dims or a paged prefill dequant would sail under them
+        payload_dims = (engine.max_len, int(k_shape[3]), int(k_shape[4]))
+    else:
+        payload_dims = tuple(int(d) for d in k_shape[2:])  # [S, Hkv, hd]
+    slot_elems = int(np.prod(payload_dims))      # one slot, one layer
     if mesh_shape is None and engine.mesh is not None:
         mesh_shape = tuple(
             int(engine.mesh.shape[a]) for a in engine.mesh.axis_names)
@@ -150,6 +171,7 @@ def graph_from_engine(engine, recipe: str = "",
             "decode_horizon": engine.decode_horizon,
             "kv_bits": engine.kv_bits,
             "fast": engine.fast,
+            "page_size": engine.page_size,
         },
         warmup_shapes=set(engine.warmup_shapes()),
         dispatch_shapes=set(engine.dispatch_shapes()),
@@ -170,7 +192,8 @@ def graph_from_engine(engine, recipe: str = "",
             jaxpr=jaxpr, module=module, hlo_text=hlo_text,
             cache_leaves_global=glob, cache_leaves_local=loc,
             slot_cache_elems=slot_elems,
-            cache_payload_dims=tuple(int(d) for d in k_shape[2:]),
+            cache_payload_dims=payload_dims,
+            page_table_shapes=table_shapes,
         )
 
     if include_kernels:
@@ -187,7 +210,7 @@ def graph_from_engine(engine, recipe: str = "",
             graph.jits[name] = JitArtifact(
                 name=name, kind="kernel", jaxpr=jaxpr,
                 slot_cache_elems=slot_elems,
-                cache_payload_dims=tuple(int(d) for d in k_shape[2:]),
+                cache_payload_dims=payload_dims,
             )
 
     # sharding-spec tables for scale-coupling
@@ -220,11 +243,13 @@ def graph_from_engine(engine, recipe: str = "",
 def build_graph(recipe: str, mesh_shape: Optional[tuple] = None,
                 arch: str = "qwen2-0.5b", *, num_slots: int = 4,
                 max_len: int = 32, prefill_chunk: int = 8,
-                decode_horizon: int = 8,
+                decode_horizon: int = 8, page_size: Optional[int] = None,
                 include_kernels: bool = True) -> LintGraph:
     """Quantize a smoke model through ``recipe`` and extract its lint graph
-    under ``mesh_shape`` (None = single device). The standard entry point
-    for ``python -m repro.analysis.lint`` and the CI lint-graph job."""
+    under ``mesh_shape`` (None = single device). ``page_size`` lints the
+    paged-pool engine (the ``+paged`` recipe-flag geometry). The standard
+    entry point for ``python -m repro.analysis.lint`` and the CI lint-graph
+    job."""
     from ...configs import get_config
     from ...models import build_model
     from ...pipeline import quantize
@@ -252,7 +277,7 @@ def build_graph(recipe: str, mesh_shape: Optional[tuple] = None,
     engine = ServingEngine(
         qm.model, qm.params, qm.cfg, num_slots=num_slots, max_len=max_len,
         prefill_chunk=prefill_chunk, decode_horizon=decode_horizon,
-        mesh=mesh,
+        mesh=mesh, page_size=page_size,
     )
     return graph_from_engine(engine, recipe=recipe, mesh_shape=mesh_shape,
                              include_kernels=include_kernels)

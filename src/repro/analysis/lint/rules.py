@@ -223,13 +223,20 @@ def collective_table(module: HloModule) -> dict[str, list]:
 def pool_collective_hits(module: HloModule, artifact) -> list[dict]:
     """Collectives whose result is a whole cache-pool leaf (global or
     per-device shape, rank >= 2) — the pooled-gather pattern GSPMD inserts
-    for ``take``/``.at[].set`` on a sharded pool."""
+    for ``take``/``.at[].set`` on a sharded pool.
+
+    The paged pool's ``page_table`` is carved out of the matching: it is
+    replicated, read-only inside every dispatch, and tiny (4 B per table
+    entry), and its ``[num_slots, pages_per_slot]`` shape collides with
+    TP reduction lattices like argmax's ``[B, model_shards]`` partials —
+    matching it would flag every sharded argmax as whole-pool movement.
+    Payload and kpos/pos leaves (the bytes that matter) stay matched."""
     targets = {
         (dt, dims)
         for dt, dims in (artifact.cache_leaves_global
                          + artifact.cache_leaves_local)
         if len(dims) >= 2
-    }
+    } - set(artifact.page_table_shapes)
     hits = []
     for instr in module.collectives():
         for dt, dims in instr.result_shapes():

@@ -73,6 +73,20 @@ def main(argv=None):
     ap.add_argument("--max-len", type=int, default=None,
                     help="per-slot KV capacity (default: fits prompt+gen)")
     ap.add_argument("--prefill-chunk", type=int, default=16)
+    ap.add_argument("--page-size", type=int, default=None, metavar="PG",
+                    help="switch the KV pool to the paged layout: fixed "
+                         "PG-position pages + per-slot page tables, with "
+                         "refcounted copy-on-write shared-prefix reuse "
+                         "(requests sharing a prompt prefix share its pages "
+                         "physically). Tokens are bit-identical to the "
+                         "contiguous pool. Default: contiguous")
+    ap.add_argument("--num-pages", type=int, default=None,
+                    help="page-pool size (with --page-size); default gives "
+                         "every slot a full ring — smaller pools admit by "
+                         "page demand and lean on prefix sharing")
+    ap.add_argument("--no-prefix-reuse", action="store_true",
+                    help="with --page-size: disable the scheduler's prefix "
+                         "index (pages without sharing)")
     ap.add_argument("--decode-horizon", type=int, default=8,
                     help="max decode steps fused into one device dispatch "
                          "(the engine adapts the actual horizon to budgets "
@@ -95,8 +109,12 @@ def main(argv=None):
                          "the blocking CI gate)")
     args = ap.parse_args(argv)
 
-    # validate --mesh BEFORE any quantization runs: a typo'd shape or a
-    # too-small host must not discard minutes of pipeline work
+    # validate flag combinations BEFORE any quantization runs: a typo must
+    # not discard minutes of pipeline work
+    if args.num_pages is not None and args.page_size is None:
+        ap.error("--num-pages needs --page-size")
+    if args.no_prefix_reuse and args.page_size is None:
+        ap.error("--no-prefix-reuse needs --page-size")
     cli_shape = None
     if args.mesh:
         try:
@@ -130,6 +148,17 @@ def main(argv=None):
         qm = QuantizedModel.load(args.load)
         cfg, model, params = qm.cfg, qm.model, qm.params
         check_servable(cfg, f"--load {args.load} (arch {cfg.name})")
+        if args.kv_bits is not None and cfg.kv_cache_bits != args.kv_bits:
+            # the artifact's kv_cache stage already quantized FOR its
+            # recorded precision — silently serving at another one would
+            # ship a cache the calibration never saw
+            ap.error(
+                f"--kv-bits {args.kv_bits} conflicts with --load "
+                f"{args.load}: the artifact recorded kv_cache_bits="
+                f"{cfg.kv_cache_bits} (recipe {qm.recipe.name!r}). Either "
+                f"drop --kv-bits to serve as recorded, or re-quantize with "
+                f"a kv{args.kv_bits} recipe"
+            )
         print(f"loaded QuantizedModel from {args.load} "
               f"(arch {cfg.name}, recipe {qm.recipe.name!r})")
     else:
@@ -236,10 +265,15 @@ def main(argv=None):
         model, params, cfg, num_slots=args.slots, max_len=max_len,
         prefill_chunk=C, decode_horizon=args.decode_horizon,
         fast=not args.reference, kv_bits=args.kv_bits, mesh=mesh,
+        page_size=args.page_size, num_pages=args.num_pages,
+        prefix_reuse=not args.no_prefix_reuse,
     )
+    layout = (f"paged ({engine.pool.num_pages} pages x {engine.page_size} "
+              f"positions, prefix reuse "
+              f"{'on' if engine.prefix_index is not None else 'off'})"
+              if engine.paged else f"{args.slots} slots x {max_len} positions")
     print(f"kv cache: {'int8' if engine.kv_bits == 8 else 'fp'} "
-          f"({engine.pool.bytes_per_slot() / 1e3:.1f} kB/slot, "
-          f"{args.slots} slots x {max_len} positions)")
+          f"({engine.pool.bytes_per_slot() / 1e3:.1f} kB/slot, {layout})")
     if args.lint:
         from ..analysis.lint import lint_engine
 

@@ -7,13 +7,14 @@ See engine.py for the step loop, cache_pool.py for the slot lifecycle.
 """
 from .cache_pool import CachePool, PoolExhausted
 from .engine import RequestResult, ServingEngine, required_cache_len
-from .scheduler import FIFOScheduler, Request
+from .scheduler import FIFOScheduler, PrefixIndex, Request
 from .trace import synthetic_trace
 
 __all__ = [
     "CachePool",
     "FIFOScheduler",
     "PoolExhausted",
+    "PrefixIndex",
     "Request",
     "RequestResult",
     "ServingEngine",

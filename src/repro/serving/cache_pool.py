@@ -1,33 +1,101 @@
-"""Slot-based KV-cache pool for continuous batching.
+"""Slot-based KV-cache pool for continuous batching — contiguous or paged.
 
-The pool owns ONE batched per-slot cache (``models.LMModel.init_cache`` with
-``per_slot=True``): each batch row is a serving slot with its own write
-offset (``pos[i]``) and absolute slot positions (``kpos[i]``). Allocation
-hands out the lowest free slot (deterministic — batch composition, and hence
-the parity tests, don't depend on dict ordering) and resets only the slot's
-*bookkeeping* (kpos → -1, pos → 0): stale K/V payload is left in place
-because every masked key contributes an exact 0 after the NEG_INF softmax,
-so recycled slots are bit-identical to fresh ones.
+**Contiguous mode** (``page_size=None``): the pool owns ONE batched per-slot
+cache (``models.LMModel.init_cache`` with ``per_slot=True``): each batch row
+is a serving slot with its own write offset (``pos[i]``) and absolute slot
+positions (``kpos[i]``). Allocation hands out the lowest free slot
+(deterministic — batch composition, and hence the parity tests, don't depend
+on dict ordering) and resets only the slot's *bookkeeping* (kpos → -1,
+pos → 0): stale K/V payload is left in place because every masked key
+contributes an exact 0 after the NEG_INF softmax, so recycled slots are
+bit-identical to fresh ones.
+
+**Paged mode** (``page_size=pg``): every KV payload leaf is re-laid-out as a
+fixed page pool ``[L, num_pages, pg, ...]`` (int8 payload, its scales, and
+the §4.2 ``v_err`` correction leaves page *together* — one page id covers a
+position's whole quantized state), plus a per-slot ``page_table [B, S/pg]``
+that maps ring positions onto physical pages. Slots allocate and release in
+page units, so a short request stops paying for ``max_len`` positions, and
+pages are **refcounted**: the scheduler's prefix index can pin a retired
+prompt's pages and hand them to later requests (shared-prefix reuse). A
+shared page (refcount > 1) is copied before its new owner writes into it
+(copy-on-write, ``ensure_writable``) — reads are free, writes pay one page
+copy. The ``kpos``/``pos`` bookkeeping stays dense (it is the validity
+oracle for BOTH layouts: a gathered page position is live iff its kpos
+entry is >= 0, which is exactly the masking the attention path already
+applies).
+
+Bookkeeping writes at admission are fused into ONE dispatch (``_reset_fn`` /
+``_admit_fn`` below) instead of one eager ``.at[].set`` per leaf.
 """
 from __future__ import annotations
 
+import heapq
+from typing import Optional, Sequence
+
 
 class PoolExhausted(RuntimeError):
-    """allocate() called with no free slot."""
+    """allocate() called with no free slot (or, paged, no free pages)."""
+
+
+# bookkeeping leaves excluded from the payload byte accounting; anything
+# else integer-typed (except the int8 payload itself) is an unrecognized
+# bookkeeping leaf and must be added here explicitly
+KNOWN_BOOKKEEPING = frozenset({"kpos", "pos", "page_table"})
+
+
+def _reset_impl(kpos, pos, slot, reuse):
+    """Fused slot-bookkeeping reset: kpos[slot] = [0..reuse) then -1, and
+    pos[slot] = reuse, in ONE dispatch (reuse=0 is the plain fresh reset;
+    reuse=R seeds a slot whose first R positions arrive via shared pages)."""
+    import jax.numpy as jnp
+
+    S = kpos.shape[-1]
+    idx = jnp.arange(S, dtype=jnp.int32)
+    row = jnp.where(idx < reuse, idx, -1)
+    return kpos.at[slot].set(row), pos.at[slot].set(reuse)
+
+
+def _admit_impl(kpos, pos, table, slot, reuse, row):
+    """Paged admission: the fused reset PLUS the slot's page-table row, still
+    one dispatch."""
+    kpos, pos = _reset_impl(kpos, pos, slot, reuse)
+    return kpos, pos, table.at[slot].set(row)
+
+
+def _cow_impl(payload: dict, table, src, dst, slot, idx):
+    """Copy page ``src`` → ``dst`` across every payload leaf (int8 + scales
+    + v_err page together) and point ``table[slot, idx]`` at the copy — the
+    copy-on-write step, fused into one dispatch."""
+    import jax
+
+    out = {
+        k: v.at[:, dst].set(
+            jax.lax.dynamic_index_in_dim(v, src, 1, keepdims=False)
+        )
+        for k, v in payload.items()
+    }
+    return out, table.at[slot, idx].set(dst)
 
 
 class CachePool:
     def __init__(self, model, num_slots: int, max_len: int, dtype=None,
-                 kv_bits=None, mesh=None):
+                 kv_bits=None, mesh=None, page_size: Optional[int] = None,
+                 num_pages: Optional[int] = None):
         """``dtype`` defaults to the model's activation compute dtype (halves
         cache bytes for bf16 models vs the old fp32 default); pass an explicit
         dtype to override. ``kv_bits=8`` selects the int8 pooled cache (int8
         payload + per-token/per-head scales), ``kv_bits=16`` forces fp, None
         follows ``model.cfg.kv_cache_bits``. ``mesh`` places the pool on a
-        device mesh under the serve-mode cache specs (slots over "data", KV
-        heads over "model", scale/v_err leaves following their payload) —
-        ``self.shardings`` then holds the per-leaf NamedShardings the engine
-        pins as jit out_shardings so the pool stays sharded across steps."""
+        device mesh under the serve-mode cache specs — ``self.shardings``
+        then holds the per-leaf NamedShardings the engine pins as jit
+        out_shardings so the pool stays sharded across steps.
+
+        ``page_size`` switches the pool to the paged layout (see module
+        docstring); ``num_pages`` sizes the page pool (default: full
+        capacity, ``num_slots * ceil(ring / page_size)`` — every slot can
+        map a complete ring; smaller pools trade worst-case capacity for
+        memory and rely on prefix sharing to admit more slots)."""
         import jax
         import jax.numpy as jnp
 
@@ -42,6 +110,45 @@ class CachePool:
             num_slots, max_len, dtype=dtype, per_slot=True, **kw
         )
         self.kv_bits = 8 if "k_scale" in self.cache else 16
+        # the model may shrink the ring below the requested length (sliding-
+        # window attention: S = min(max_len, window)); capacity checks must
+        # see the REAL ring size or padded prefill chunks could wrap and
+        # clobber keys that are still inside the attention window
+        self.max_len = int(self.cache["kpos"].shape[-1])
+
+        self.page_size = None if page_size is None else int(page_size)
+        self.num_pages = 0
+        self.pages_per_slot = 0
+        if self.page_size is not None:
+            pg = self.page_size
+            if not 1 <= pg <= self.max_len:
+                raise ValueError(
+                    f"page_size must be in [1, ring={self.max_len}], got {pg}"
+                )
+            self.pages_per_slot = -(-self.max_len // pg)
+            self.num_pages = (num_slots * self.pages_per_slot
+                              if num_pages is None else int(num_pages))
+            if self.num_pages < 1:
+                raise ValueError(f"num_pages must be >= 1, got {self.num_pages}")
+            paged = {}
+            for name, leaf in self.cache.items():
+                if name in ("kpos", "pos"):       # dense bookkeeping
+                    paged[name] = leaf
+                else:                             # [L, B, S, ...] → [L, NP, pg, ...]
+                    paged[name] = jnp.zeros(
+                        (leaf.shape[0], self.num_pages, pg) + leaf.shape[3:],
+                        leaf.dtype,
+                    )
+            paged["page_table"] = jnp.full(
+                (num_slots, self.pages_per_slot), -1, jnp.int32
+            )
+            self.cache = paged
+            self._free_pages: list = list(range(self.num_pages))
+            heapq.heapify(self._free_pages)
+            self._page_ref = [0] * self.num_pages
+            self._slot_pages: dict[int, list] = {}
+            self.cow_copies = 0
+
         self.mesh = mesh
         self.shardings = None
         if mesh is not None:
@@ -55,15 +162,25 @@ class CachePool:
             )
             self.shardings = named_shardings(specs, mesh)
             self.cache = jax.device_put(self.cache, self.shardings)
-        # the model may shrink the ring below the requested length (sliding-
-        # window attention: S = min(max_len, window)); capacity checks must
-        # see the REAL ring size or padded prefill chunks could wrap and
-        # clobber keys that are still inside the attention window
-        self.max_len = int(self.cache["kpos"].shape[-1])
+
         self._free = set(range(num_slots))
         self._allocated: set = set()
+        # slots whose bookkeeping reset was deferred (allocate(reset=False))
+        # and has not been committed by the engine's first prefill yet — a
+        # release before that commit must not leak stale kpos/pos to the
+        # next claimant (the slot-lifecycle bugfix sweep)
+        self._pending_reset: set = set()
+        # fused bookkeeping updates: instance attributes so tests can shim
+        # them with counting wrappers (the PR-3 dispatch-count idiom)
+        self._reset_fn = jax.jit(_reset_impl, donate_argnums=(0, 1))
+        self._admit_fn = jax.jit(_admit_impl, donate_argnums=(0, 1, 2))
+        self._cow_fn = jax.jit(_cow_impl, donate_argnums=(0, 1))
 
     # ------------------------------------------------------------- queries
+    @property
+    def paged(self) -> bool:
+        return self.page_size is not None
+
     @property
     def n_free(self) -> int:
         return len(self._free)
@@ -72,32 +189,92 @@ class CachePool:
     def n_allocated(self) -> int:
         return len(self._allocated)
 
+    @property
+    def n_free_pages(self) -> int:
+        return len(self._free_pages) if self.paged else 0
+
     def is_allocated(self, slot: int) -> bool:
         return slot in self._allocated
 
+    def page_ref(self, page: int) -> int:
+        return self._page_ref[page]
+
+    def slot_page(self, slot: int, idx: int) -> int:
+        """Physical page backing ring positions [idx*pg, (idx+1)*pg)."""
+        return self._slot_pages[slot][idx]
+
+    def slot_pages(self, slot: int) -> list:
+        return list(self._slot_pages.get(slot, ()))
+
+    def _payload_items(self):
+        for name, leaf in self.cache.items():
+            if name in KNOWN_BOOKKEEPING:
+                continue
+            yield name, leaf
+
+    def cache_bytes(self) -> int:
+        """Resident payload bytes of the whole pool (bookkeeping excluded) —
+        the number the capacity benchmarks hold equal across layouts."""
+        import jax.numpy as jnp
+
+        total = 0
+        for name, leaf in self._payload_items():
+            if (jnp.issubdtype(leaf.dtype, jnp.integer)
+                    and leaf.dtype != jnp.int8):
+                raise ValueError(
+                    f"cache leaf {name!r} has bookkeeping-like dtype "
+                    f"{leaf.dtype} but is not a recognized bookkeeping leaf "
+                    f"({sorted(KNOWN_BOOKKEEPING)}); add it to "
+                    f"KNOWN_BOOKKEEPING or give it a payload dtype"
+                )
+            total += leaf.size * leaf.dtype.itemsize
+        return total
+
     def bytes_per_slot(self) -> int:
-        """KV bytes one slot owns (payload + scales + correction leaves;
-        the kpos/pos bookkeeping, 4 B/position either way, is excluded) —
-        the roofline's cache-stream term per request."""
-        kv = ("k", "v", "k_scale", "v_scale", "v_err")
-        total = sum(v.size * v.dtype.itemsize
-                    for k, v in self.cache.items() if k in kv)
+        """KV bytes one full-length slot owns (payload + scales + correction
+        leaves; bookkeeping — 4 B/position either way — is excluded): the
+        roofline's cache-stream term per request. Counts EVERY non-bookkeeping
+        leaf, so new slot state (SSM columns, enc-dec cross caches) is never
+        silently undercounted; an integer leaf that is neither int8 payload
+        nor known bookkeeping raises instead of miscounting. In paged mode
+        this is the worst case (a slot mapping its complete ring); requests
+        shorter than the ring pay proportionally fewer pages."""
+        total = self.cache_bytes()
+        if self.paged:
+            return (total // self.num_pages) * self.pages_per_slot
         return total // self.num_slots
 
     def all_free(self) -> bool:
         return not self._allocated and len(self._free) == self.num_slots
 
+    def pages_needed(self, need: int, reuse_len: int = 0) -> int:
+        """Fresh pages an admission must find for a request spanning ``need``
+        ring positions with its first ``reuse_len`` arriving via shared
+        pages: the unshared span, plus one spare when ``reuse_len`` splits a
+        page (that shared page is copied-on-write before the slot's first
+        prefill chunk writes into it)."""
+        pg = self.page_size
+        n_pages = -(-need // pg)
+        n_shared = -(-reuse_len // pg)
+        return n_pages - n_shared + (1 if reuse_len % pg else 0)
+
     # ----------------------------------------------------------- lifecycle
     def allocate(self, reset: bool = True) -> int:
-        """Claim the lowest free slot and reset its bookkeeping.
+        """Claim the lowest free slot and reset its bookkeeping (one fused
+        dispatch — kpos and pos update together).
 
-        ``reset=False`` skips the two eager ``.at[].set`` dispatches and
-        leaves the slot's stale kpos/pos in place; the caller then owns the
-        reset (the engine's fast path folds it into the first jitted prefill
-        chunk via a ``fresh`` row mask, so admission costs zero dispatches).
-        Until that reset commits, the slot must only ride along as a masked
-        inactive row.
-        """
+        ``reset=False`` skips the dispatch and leaves the slot's stale
+        kpos/pos in place; the caller then owns the reset (the engine's fast
+        path folds it into the first jitted prefill chunk via a ``fresh``
+        row mask, so admission costs zero dispatches). Until that reset
+        commits, the slot must only ride along as a masked inactive row —
+        the pool tracks the pending reset and repairs it on release, so a
+        slot released early never hands stale bookkeeping to its next
+        claimant."""
+        if self.paged:
+            raise RuntimeError(
+                "paged pools allocate in page units — use allocate_pages()"
+            )
         if not self._free:
             raise PoolExhausted(
                 f"all {self.num_slots} slots allocated — admit after release()"
@@ -106,17 +283,158 @@ class CachePool:
         self._free.remove(slot)
         self._allocated.add(slot)
         if reset:
-            self.cache = {
-                **self.cache,
-                "kpos": self.cache["kpos"].at[slot].set(-1),
-                "pos": self.cache["pos"].at[slot].set(0),
-            }
+            self._reset_slot(slot)
+        else:
+            self._pending_reset.add(slot)
         return slot
+
+    def _reset_slot(self, slot: int, reuse: int = 0) -> None:
+        import jax.numpy as jnp
+
+        kpos, pos = self._reset_fn(
+            self.cache["kpos"], self.cache["pos"],
+            jnp.int32(slot), jnp.int32(reuse),
+        )
+        self.cache = {**self.cache, "kpos": kpos, "pos": pos}
+        self._pending_reset.discard(slot)
+
+    def note_reset_committed(self, slot: int) -> None:
+        """The engine committed a deferred (fresh-mask) reset inside a jitted
+        prefill — the slot's bookkeeping is clean from here on."""
+        self._pending_reset.discard(slot)
+
+    def allocate_pages(self, need: int, shared: Sequence[int] = (),
+                       reuse_len: int = 0) -> int:
+        """Paged admission: claim the lowest free slot, map ``shared`` pages
+        (refcounted — they carry the request's first ``reuse_len`` positions)
+        followed by fresh pages up to ``ceil(need / page_size)``, install the
+        page-table row + the kpos/pos seed in ONE fused dispatch, and
+        copy-on-write the boundary page when ``reuse_len`` splits it. The
+        whole admission is atomic: a ``PoolExhausted`` (no slot / not enough
+        fresh pages) leaves the pool untouched."""
+        import jax.numpy as jnp
+        import numpy as np
+
+        if not self.paged:
+            raise RuntimeError("allocate_pages() needs a paged pool "
+                               "(construct with page_size=...)")
+        pg = self.page_size
+        if not 0 <= reuse_len < need:
+            raise ValueError(f"reuse_len must be in [0, need={need}), "
+                             f"got {reuse_len}")
+        n_pages = -(-need // pg)
+        n_shared = -(-reuse_len // pg)
+        if len(shared) != n_shared:
+            raise ValueError(
+                f"reuse_len={reuse_len} (page_size {pg}) maps {n_shared} "
+                f"shared pages but {len(shared)} were given"
+            )
+        if n_pages > self.pages_per_slot:
+            raise ValueError(
+                f"request needs {n_pages} pages but a slot table holds "
+                f"{self.pages_per_slot} (ring {self.max_len}, page {pg})"
+            )
+        if not self._free:
+            raise PoolExhausted(
+                f"all {self.num_slots} slots allocated — admit after release()"
+            )
+        fresh_needed = self.pages_needed(need, reuse_len)
+        if fresh_needed > len(self._free_pages):
+            raise PoolExhausted(
+                f"need {fresh_needed} fresh pages but only "
+                f"{len(self._free_pages)} of {self.num_pages} are free — "
+                f"release slots or evict prefix-index pages first"
+            )
+        slot = min(self._free)
+        self._free.remove(slot)
+        self._allocated.add(slot)
+        pages = list(shared)
+        for p in pages:
+            self._page_ref[p] += 1
+        for _ in range(n_pages - n_shared):
+            p = heapq.heappop(self._free_pages)
+            self._page_ref[p] = 1
+            pages.append(p)
+        self._slot_pages[slot] = pages
+        row = np.full((self.pages_per_slot,), -1, np.int32)
+        row[:n_pages] = pages
+        kpos, pos, table = self._admit_fn(
+            self.cache["kpos"], self.cache["pos"], self.cache["page_table"],
+            jnp.int32(slot), jnp.int32(reuse_len), jnp.asarray(row),
+        )
+        self.cache = {**self.cache, "kpos": kpos, "pos": pos,
+                      "page_table": table}
+        self._pending_reset.discard(slot)
+        if reuse_len % pg:
+            # the slot's first prefill chunk starts at reuse_len, inside the
+            # last shared page — copy it now (the reserved spare above)
+            self.ensure_writable(slot, reuse_len, reuse_len + 1)
+        return slot
+
+    def ensure_writable(self, slot: int, start: int, stop: int) -> int:
+        """Copy-on-write: any page of ``slot`` overlapping ring positions
+        [start, stop) that is shared (refcount > 1) is copied into a fresh
+        page — payload, scales, and ``v_err`` together, one fused dispatch
+        per page — and the slot's table entry is repointed. Returns the
+        number of pages copied. After admission the engine's writes only
+        ever touch exclusively-owned pages (the boundary page is copied at
+        admission), so this is a no-op on the serving hot path."""
+        import jax.numpy as jnp
+
+        pg = self.page_size
+        pages = self._slot_pages[slot]
+        copied = 0
+        for idx in range(start // pg, min(-(-stop // pg), len(pages))):
+            src = pages[idx]
+            if self._page_ref[src] <= 1:
+                continue
+            if not self._free_pages:
+                raise PoolExhausted(
+                    f"copy-on-write of slot {slot} page {idx} needs a free "
+                    f"page but all {self.num_pages} are in use"
+                )
+            dst = heapq.heappop(self._free_pages)
+            payload = dict(self._payload_items())
+            payload, table = self._cow_fn(
+                payload, self.cache["page_table"],
+                jnp.int32(src), jnp.int32(dst),
+                jnp.int32(slot), jnp.int32(idx),
+            )
+            self.cache = {**self.cache, **payload, "page_table": table}
+            self._page_ref[src] -= 1
+            self._page_ref[dst] = 1
+            pages[idx] = dst
+            self.cow_copies += 1
+            copied += 1
+        return copied
+
+    def ref_page(self, page: int) -> None:
+        """Take a reference on a live page (the prefix index pinning a
+        published prompt page)."""
+        if self._page_ref[page] < 1:
+            raise ValueError(f"page {page} is free — cannot pin it")
+        self._page_ref[page] += 1
+
+    def deref_page(self, page: int) -> None:
+        self._page_ref[page] -= 1
+        if self._page_ref[page] < 0:
+            raise ValueError(f"page {page} over-released")
+        if self._page_ref[page] == 0:
+            heapq.heappush(self._free_pages, page)
 
     def release(self, slot: int) -> None:
         if slot not in self._allocated:
             raise ValueError(
                 f"slot {slot} is not allocated (double free, or never claimed)"
             )
+        if slot in self._pending_reset:
+            # released before its deferred fresh-mask reset committed: the
+            # slot still carries the PREVIOUS occupant's kpos/pos. Repair it
+            # here so the next claimant (even another reset=False admission)
+            # starts from clean bookkeeping.
+            self._reset_slot(slot)
         self._allocated.remove(slot)
         self._free.add(slot)
+        if self.paged:
+            for p in self._slot_pages.pop(slot, ()):
+                self.deref_page(p)

@@ -34,6 +34,21 @@ Because each slot's computation is row-independent (masked keys contribute
 exact zeros), a request's tokens are bit-identical whether it is served solo
 or inside a mixed batch, and whether decode steps run one-at-a-time or fused
 — the batch-invariance and fused-vs-stepwise parity tests pin this down.
+
+**Paged mode** (``page_size=...``): the pool stores KV state as fixed-size
+pages + per-slot page tables (see cache_pool.py), and each of the four jits
+becomes a thin wrapper around the SAME contiguous impl: gather the slot
+rings out of the page pool into a dense ``[L, B, S, ...]`` view, run the
+unchanged impl on the view, then scatter back ONLY the ring positions this
+dispatch actually wrote (host-known write windows; out-of-range / unmapped
+positions drop). Gathered garbage beyond a slot's mapped pages is finite
+and masked by ``kpos = -1`` / scale 0 — exactly the recycled-slot
+invariant — so paged serving is token-for-token identical to the
+contiguous pool. Admission maps shared prefix pages from the scheduler's
+``PrefixIndex`` (reuse length aligned DOWN to a prefill-chunk boundary,
+which makes the donor's cached K/V bit-identical to recomputing them) and
+costs one fused bookkeeping dispatch; prefill completion publishes the
+request's fully-covered prompt pages for later requests to share.
 """
 from __future__ import annotations
 
@@ -45,8 +60,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .cache_pool import CachePool
-from .scheduler import FIFOScheduler, Request
+from .cache_pool import KNOWN_BOOKKEEPING, CachePool
+from .scheduler import FIFOScheduler, PrefixIndex, Request
 
 def required_cache_len(prompt_len: int, max_new_tokens: int,
                        prefill_chunk: int) -> int:
@@ -110,6 +125,56 @@ def _scatter_slots(cache: dict, sub: dict, slots) -> dict:
         s = sub[k].astype(v.dtype)
         out[k] = (v.at[slots].set(s) if _SLOT_AXIS.get(k, 1) == 0
                   else v.at[:, slots].set(s))
+    return out
+
+
+def _paged_view(cache: dict, page_size: int, max_len: int) -> dict:
+    """Gather every slot's mapped pages into the dense contiguous layout
+    ``[L, B, S, ...]`` the slot impls were written against. Unmapped table
+    entries (-1) clamp to page 0: the gathered rows are garbage, but finite
+    garbage at positions the bookkeeping marks dead (``kpos = -1`` / scale
+    0) — the same invariant that makes recycled contiguous slots exact.
+    ``kpos``/``pos`` are dense in both layouts and pass straight through."""
+    pt = jnp.maximum(cache["page_table"], 0)             # [B, S/pg]
+    dense = {"kpos": cache["kpos"], "pos": cache["pos"]}
+    for name, leaf in cache.items():                     # leaf [L, NP, pg, ...]
+        if name in KNOWN_BOOKKEEPING:
+            continue
+        g = jnp.take(leaf, pt, axis=1)                   # [L, B, S/pg, pg, ...]
+        g = g.reshape(g.shape[:2] + (-1,) + leaf.shape[3:])
+        dense[name] = jax.lax.slice_in_dim(g, 0, max_len, axis=2)
+    return dense
+
+
+def _paged_commit(cache: dict, dense: dict, rows, page_size: int) -> dict:
+    """Scatter the ring positions a dispatch wrote (``rows`` [B, W], -1 for
+    rows that wrote nothing) from the dense view back into the page pool.
+    The write window is host bookkeeping the engine already tracks — pos
+    before the call plus the chunk/horizon extent — so the scatter is a
+    fixed [B, W] shape per compiled dispatch, not a data-dependent one.
+    Positions mapping to no page (or rows = -1) route to one-past-the-end
+    flat indices, which scatter-drop. Pages shared between slots are never
+    in any write window (admission copies the one COW boundary page), so
+    the non-dropped flat indices are unique and the scatter deterministic.
+    ``kpos``/``pos`` come back dense from the impl; the page table is
+    read-only inside every dispatch."""
+    pg = page_size
+    idx = jnp.maximum(rows, 0)                           # [B, W]
+    page = jnp.take_along_axis(cache["page_table"], idx // pg, axis=1)
+    out = {"kpos": dense["kpos"], "pos": dense["pos"],
+           "page_table": cache["page_table"]}
+    for name, leaf in cache.items():                     # leaf [L, NP, pg, ...]
+        if name in KNOWN_BOOKKEEPING:
+            continue
+        flat_n = leaf.shape[1] * pg
+        flat = jnp.where((rows >= 0) & (page >= 0),
+                         page * pg + idx % pg, flat_n)   # [B, W]
+        flatleaf = leaf.reshape((leaf.shape[0], flat_n) + leaf.shape[3:])
+        tidx = idx.reshape((1,) + idx.shape + (1,) * (dense[name].ndim - 3))
+        vals = jnp.take_along_axis(dense[name], tidx, axis=2)  # [L, B, W, ...]
+        out[name] = flatleaf.at[:, flat].set(
+            vals.astype(leaf.dtype), mode="drop"
+        ).reshape(leaf.shape)
     return out
 
 
@@ -182,13 +247,26 @@ class ServingEngine:
         step. Per-slot computation is row-independent, so slot sharding is
         exact; TP's row-parallel psum reorders reductions (float-level
         wobble vs single-device; the parity tests pin the tolerance).
+    page_size: switch the pool to the paged layout (fixed pages + per-slot
+        page tables + refcounted shared-prefix reuse; see the module and
+        cache_pool docstrings). Tokens are bit-identical to the contiguous
+        pool. None (default) keeps the contiguous layout.
+    num_pages: page-pool size (paged mode only); default gives every slot
+        a full ring. Admission blocks head-of-line when the pool can't
+        cover the head request's pages, after evicting prefix-index
+        entries LRU.
+    prefix_reuse: enable the scheduler's PrefixIndex (paged mode only):
+        prefill completion publishes fully-covered prompt pages, and later
+        admissions map them (copy-on-write) instead of recomputing the
+        shared prefix.
     """
 
     def __init__(self, model, params, cfg, *, num_slots: int = 4,
                  max_len: int = 128, prefill_chunk: int = 16,
                  cache_dtype=None, decode_horizon: int = 8,
                  fast: bool = True, kv_bits: Optional[int] = None,
-                 mesh=None):
+                 mesh=None, page_size: Optional[int] = None,
+                 num_pages: Optional[int] = None, prefix_reuse: bool = True):
         if cfg.family in ("ssm", "hybrid") or cfg.is_encdec:
             raise ValueError(
                 f"the serving engine supports attention-family decoder-only "
@@ -214,8 +292,13 @@ class ServingEngine:
             specs = params_pspecs(p_shapes, mesh, heads, mode="serve")
             self.params = jax.device_put(params, named_shardings(specs, mesh))
         self.pool = CachePool(model, num_slots, max_len, dtype=cache_dtype,
-                              kv_bits=kv_bits, mesh=mesh)
+                              kv_bits=kv_bits, mesh=mesh,
+                              page_size=page_size, num_pages=num_pages)
         self.kv_bits = self.pool.kv_bits
+        self.page_size = self.pool.page_size
+        self.paged = self.pool.paged
+        self.prefix_index = (PrefixIndex(self.page_size)
+                             if self.paged and prefix_reuse else None)
         # may be < the requested max_len (sliding-window ring); admission is
         # capped at the real ring so wrap-around never clobbers live keys
         self.max_len = self.pool.max_len
@@ -251,10 +334,23 @@ class ServingEngine:
 
             rep = NamedSharding(mesh, PartitionSpec())
             kw["out_shardings"] = (rep, self.pool.shardings)
-        self._prefill_fn = jax.jit(self._prefill_chunk_impl, **kw)
-        self._decode_fn = jax.jit(self._decode_impl, **kw)
-        self._prefill_multi_fn = jax.jit(self._prefill_multi_impl, **kw)
-        self._decode_horizon_fn = jax.jit(self._decode_horizon_impl,
+        # paged mode jits the thin gather/commit wrappers around the SAME
+        # impls (identical signatures), so everything downstream — the
+        # serving loop, warmup, the lint layer's lowering — is layout-blind
+        self._impls = {
+            "prefill": (self._paged_prefill_chunk_impl if self.paged
+                        else self._prefill_chunk_impl),
+            "decode": (self._paged_decode_impl if self.paged
+                       else self._decode_impl),
+            "prefill_multi": (self._paged_prefill_multi_impl if self.paged
+                              else self._prefill_multi_impl),
+            "decode_horizon": (self._paged_decode_horizon_impl if self.paged
+                               else self._decode_horizon_impl),
+        }
+        self._prefill_fn = jax.jit(self._impls["prefill"], **kw)
+        self._decode_fn = jax.jit(self._impls["decode"], **kw)
+        self._prefill_multi_fn = jax.jit(self._impls["prefill_multi"], **kw)
+        self._decode_horizon_fn = jax.jit(self._impls["decode_horizon"],
                                           static_argnames=("k",), **kw)
 
     @classmethod
@@ -370,6 +466,59 @@ class ServingEngine:
         )
         return toks.T, cache                                 # [B, k]
 
+    # ------------------------------------------------- paged jit wrappers
+    # Same signatures as the contiguous impls: gather the page pool into the
+    # dense slot view, run the unchanged impl, commit the host-known write
+    # window back into the pages (see _paged_view/_paged_commit).
+
+    def _paged_prefill_chunk_impl(self, params, tokens, cache, slot, n_valid):
+        dense = _paged_view(cache, self.page_size, self.max_len)
+        start = jax.lax.dynamic_index_in_dim(cache["pos"], slot,
+                                             keepdims=False)
+        tok, dense = self._prefill_chunk_impl(params, tokens, dense, slot,
+                                              n_valid)
+        C = tokens.shape[1]
+        B, S = cache["kpos"].shape
+        row = (start + jnp.arange(C, dtype=jnp.int32)) % S
+        rows = jnp.full((B, C), -1, jnp.int32).at[slot].set(row)
+        return tok, _paged_commit(cache, dense, rows, self.page_size)
+
+    def _paged_prefill_multi_impl(self, params, tokens, cache, slots,
+                                  n_valid, fresh, is_real):
+        dense = _paged_view(cache, self.page_size, self.max_len)
+        start = jnp.where(fresh, 0, jnp.take(cache["pos"], slots))   # [P]
+        tok, dense = self._prefill_multi_impl(params, tokens, dense, slots,
+                                              n_valid, fresh, is_real)
+        C = tokens.shape[1]
+        B, S = cache["kpos"].shape
+        row = (start[:, None] + jnp.arange(C, dtype=jnp.int32)[None, :]) % S
+        row = jnp.where(is_real[:, None], row, -1)       # pad rows: no write
+        rows = jnp.full((B, C), -1, jnp.int32).at[slots].set(row)
+        return tok, _paged_commit(cache, dense, rows, self.page_size)
+
+    def _paged_decode_impl(self, params, tokens, cache, active):
+        dense = _paged_view(cache, self.page_size, self.max_len)
+        prev = cache["pos"]
+        tok, dense = self._decode_masked(params, tokens, dense, active)
+        S = cache["kpos"].shape[1]
+        rows = jnp.where(active, prev % S, -1)[:, None]  # [B, 1]
+        return tok, _paged_commit(cache, dense, rows, self.page_size)
+
+    def _paged_decode_horizon_impl(self, params, tokens, cache, remaining,
+                                   *, k):
+        # ONE gather before the scan and one commit after it: the k fused
+        # steps read/write the dense view, so the horizon's page traffic is
+        # amortized exactly like its host syncs
+        dense = _paged_view(cache, self.page_size, self.max_len)
+        prev = cache["pos"]
+        toks, dense = self._decode_horizon_impl(params, tokens, dense,
+                                                remaining, k=k)
+        S = cache["kpos"].shape[1]
+        t = jnp.arange(k, dtype=jnp.int32)[None, :]
+        rows = jnp.where(t < remaining[:, None],
+                         (prev[:, None] + t) % S, -1)    # [B, k]
+        return toks, _paged_commit(cache, dense, rows, self.page_size)
+
     # ------------------------------------------------------------ lifecycle
     def submit(self, request: Request) -> None:
         P, G = len(request.prompt), request.max_new_tokens
@@ -380,9 +529,21 @@ class ServingEngine:
                 f"(prompt {P}, gen {G}, chunk {self.prefill_chunk}) "
                 f"but max_len={self.max_len}"
             )
+        if self.paged:
+            n_pages = -(-need // self.page_size)
+            if n_pages > self.pool.num_pages:
+                # would head-of-line block forever — even an empty pool
+                # could never map it
+                raise ValueError(
+                    f"request {request.rid}: needs {n_pages} pages "
+                    f"(page_size {self.page_size}) but the pool only has "
+                    f"{self.pool.num_pages}"
+                )
         self.scheduler.submit(request)
 
     def _admit(self) -> None:
+        if self.paged:
+            return self._admit_paged()
         while self.pool.n_free:
             req = self.scheduler.pop_ready(self.clock)
             if req is None:
@@ -392,6 +553,45 @@ class ServingEngine:
             slot = self.pool.allocate(reset=not self.fast)
             self._inflight[slot] = _InFlight(
                 req=req, slot=slot, admitted_at=self.clock, fresh=self.fast
+            )
+
+    def _admit_paged(self) -> None:
+        """Page-aware FIFO admission: peek the head, map its shared prefix
+        pages from the index, and admit only when the pool can cover the
+        rest — evicting LRU index entries first, and blocking head-of-line
+        (like a missing slot would) when it still doesn't fit."""
+        pool = self.pool
+        while pool.n_free:
+            req = self.scheduler.peek_ready(self.clock)
+            if req is None:
+                return
+            P, G = len(req.prompt), req.max_new_tokens
+            need = required_cache_len(P, G, self.prefill_chunk)
+            shared: list = []
+            reuse = 0
+            if self.prefix_index is not None:
+                pages = self.prefix_index.lookup(req.prompt)
+                pg, C = self.page_size, self.prefill_chunk
+                # reuse ends on a prefill-chunk boundary — the donor's
+                # chunks started there too, which is what makes its cached
+                # K/V bit-identical to recomputing them — and leaves >= 1
+                # prompt token to prefill, so the first generated token
+                # comes from THIS request's own logits
+                reuse = (min(len(pages) * pg, P - 1) // C) * C
+                shared = pages[: -(-reuse // pg)]
+            fresh_needed = pool.pages_needed(need, reuse)
+            if (fresh_needed > pool.n_free_pages
+                    and self.prefix_index is not None):
+                protect = set(shared)
+                while (fresh_needed > pool.n_free_pages
+                       and self.prefix_index.evict_lru(pool, protect)):
+                    pass
+            if fresh_needed > pool.n_free_pages:
+                return                      # head-of-line blocks on pages
+            self.scheduler.pop_ready(self.clock)
+            slot = pool.allocate_pages(need, shared=shared, reuse_len=reuse)
+            self._inflight[slot] = _InFlight(
+                req=req, slot=slot, admitted_at=self.clock, prefilled=reuse,
             )
 
     def _retire(self, fl: _InFlight, at: Optional[float] = None) -> None:
@@ -407,6 +607,10 @@ class ServingEngine:
         self.pool.release(fl.slot)
 
     def _finish_prefill(self, fl: _InFlight, first: int) -> None:
+        if self.prefix_index is not None:
+            # publish at prefill COMPLETION (not retirement) so concurrent
+            # requests right behind the donor already share its pages
+            self.prefix_index.publish(fl.req.prompt, self.pool, fl.slot)
         fl.generated.append(first)
         fl.cur_token = first
         self.stats["generated_tokens"] += 1
@@ -472,7 +676,11 @@ class ServingEngine:
         self.stats["prefill_dispatches"] += 1
         finishers = []
         for i, fl in enumerate(pending):
-            fl.fresh = False
+            if fl.fresh:
+                fl.fresh = False
+                # the deferred fresh-mask reset just committed inside the
+                # jitted prefill — the pool stops tracking it as pending
+                self.pool.note_reset_committed(fl.slot)
             fl.prefilled += int(n_valid[i])
             if fl.prefill_done:
                 finishers.append(i)
@@ -647,26 +855,26 @@ class ServingEngine:
         cache = self.pool.cache
         return {
             "prefill": (
-                self._prefill_fn, self._prefill_chunk_impl,
+                self._prefill_fn, self._impls["prefill"],
                 (self.params, jnp.zeros((1, C), jnp.int32), cache,
                  jnp.int32(0), jnp.int32(C)),
                 {},
             ),
             "decode": (
-                self._decode_fn, self._decode_impl,
+                self._decode_fn, self._impls["decode"],
                 (self.params, jnp.zeros((B, 1), jnp.int32), cache,
                  jnp.ones((B,), bool)),
                 {},
             ),
             "prefill_multi": (
-                self._prefill_multi_fn, self._prefill_multi_impl,
+                self._prefill_multi_fn, self._impls["prefill_multi"],
                 (self.params, jnp.zeros((B, C), jnp.int32), cache,
                  jnp.arange(B, dtype=jnp.int32), jnp.ones((B,), jnp.int32),
                  jnp.zeros((B,), bool), jnp.ones((B,), bool)),
                 {},
             ),
             "decode_horizon": (
-                self._decode_horizon_fn, self._decode_horizon_impl,
+                self._decode_horizon_fn, self._impls["decode_horizon"],
                 (self.params, jnp.zeros((B, 1), jnp.int32), cache,
                  jnp.full((B,), self.decode_horizon, jnp.int32)),
                 {"k": self.decode_horizon},

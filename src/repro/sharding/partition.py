@@ -282,20 +282,35 @@ def serve_cache_pspecs(cache_shapes: Any, mesh: Mesh) -> Any:
         means (v_err) FOLLOW their payload tensor: same slot axis, same head
         axis, so a shard dequantizes its own cache columns locally,
       * anything non-divisible replicates (graceful degradation).
+
+    **Paged pools** (a ``page_table`` leaf is present; payload leaves are
+    [L, NP, pg, H(, hd)]) shard KV heads (axis 3) over "model" exactly like
+    the contiguous layout, but the PAGE axis — and the page tables and
+    dense kpos/pos bookkeeping — replicate. Sharding pages over "data"
+    looks symmetric to slot-sharding, but the paged jits address pages
+    through data-dependent table lookups, so GSPMD would have to all-gather
+    whole pool leaves around every page gather/scatter: new full-pool
+    collectives, exactly what the lint contracts' collective budget pins at
+    zero. Head sharding keeps the capacity win (each shard holds 1/TP of
+    every page) without any cross-shard addressing; slot-parallel paged
+    serving (shard_map over per-shard page pools) is the ROADMAP follow-on.
     """
     dp_axes, dp_n = _dp_world(mesh)
     model_n = mesh.shape.get("model", 1)
+    paths = dict(_walk(cache_shapes))
+    paged = any(p.rsplit("/", 1)[-1] == "page_table" for p in paths)
 
     def spec_of(path, leaf):
         shape = leaf.shape
         axes: list = [None] * len(shape)
         name = path.rsplit("/", 1)[-1]
         if name in ("kpos", "pos"):                     # [B, S] / [B]
-            if shape and shape[0] % dp_n == 0 and shape[0] >= dp_n:
+            if (not paged and shape and shape[0] % dp_n == 0
+                    and shape[0] >= dp_n):
                 axes[0] = dp_axes
             return P(*axes)
         if name in ("k", "v", "k_scale", "v_scale", "v_err") and len(shape) >= 4:
-            if shape[1] % dp_n == 0 and shape[1] >= dp_n:
+            if (not paged and shape[1] % dp_n == 0 and shape[1] >= dp_n):
                 axes[1] = dp_axes                       # slot axis
             H_dim = 3                                   # heads (payload + scales)
             if shape[H_dim] % model_n == 0 and shape[H_dim] >= model_n:
@@ -303,7 +318,6 @@ def serve_cache_pspecs(cache_shapes: Any, mesh: Mesh) -> Any:
             return P(*axes)
         return P(*axes)
 
-    paths = dict(_walk(cache_shapes))
     flat = {p: spec_of(p, l) for p, l in paths.items()}
     return _rebuild(cache_shapes, flat)
 

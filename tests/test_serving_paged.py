@@ -1,0 +1,515 @@
+"""Paged KV-cache pool + copy-on-write prefix-reuse tests.
+
+The anchor is layout invariance: the paged engine (fixed page pool +
+per-slot page tables) must produce bit-identical tokens to the contiguous
+engine — fp32 and quantized, through slot recycling, COW writes, and the
+gen-at-prefill edge. With ``prefix_reuse=False`` the admit/finish timeline
+must ALSO match tick for tick (same pool capacity, same admission order);
+with reuse on, requests may legitimately finish EARLIER (shared prefill
+pages skip whole prefill chunks) but never later, and never with different
+tokens. Plus the slot-lifecycle bugfix sweep (stale deferred resets,
+double-release, allocate-after-exhaustion), the fused-reset dispatch pin,
+``bytes_per_slot`` leaf accounting, and PrefixIndex unit semantics.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro
+from repro.configs import get_config
+from repro.models import build_model
+from repro.serving import PrefixIndex, Request, ServingEngine
+from repro.serving.cache_pool import CachePool, PoolExhausted
+
+ARCH = "qwen2-0.5b"
+
+
+@pytest.fixture(scope="module")
+def fp32_setup():
+    cfg = get_config(ARCH, smoke=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return model, params, cfg
+
+
+@pytest.fixture(scope="module")
+def w8a16_setup(fp32_setup):
+    model, params, cfg = fp32_setup
+    return repro.quantize(model, params=params, recipe="serve-w8a16")
+
+
+@pytest.fixture(scope="module")
+def kv8_setup(fp32_setup):
+    model, params, cfg = fp32_setup
+    return repro.quantize(model, params=params, recipe="serve-w8a8-kv8")
+
+
+def _mixed_trace(vocab):
+    rng = np.random.RandomState(7)
+    lens = [(5, 6), (12, 3), (3, 1), (9, 8)]  # includes a gen-at-prefill edge
+    return [
+        Request(rid=i, prompt=rng.randint(0, vocab, size=p).astype(np.int32),
+                max_new_tokens=g)
+        for i, (p, g) in enumerate(lens)
+    ]
+
+
+def _engine(model, params, cfg, **kw):
+    kw.setdefault("num_slots", 2)   # < len(trace): forces slot recycling
+    kw.setdefault("max_len", 32)
+    kw.setdefault("prefill_chunk", 8)
+    return ServingEngine(model, params, cfg, **kw)
+
+
+def _run(engine, trace):
+    return engine.run([dataclasses.replace(r) for r in trace])
+
+
+def _setup(variant, fp32_setup, w8a16_setup, kv8_setup):
+    if variant == "fp32":
+        return fp32_setup
+    qm = {"serve-w8a16": w8a16_setup, "serve-w8a8-kv8": kv8_setup}[variant]
+    return qm.model, qm.params, qm.cfg
+
+
+# ------------------------------------------------------------ layout parity
+
+@pytest.mark.parametrize("variant", ["fp32", "serve-w8a16", "serve-w8a8-kv8"])
+def test_paged_token_and_timeline_parity(variant, fp32_setup, w8a16_setup,
+                                         kv8_setup):
+    """The acceptance anchor: with prefix reuse OFF the paged engine is
+    indistinguishable from the contiguous one — tokens AND the admit/finish
+    timeline — through slot recycling (2 slots, 4 requests)."""
+    model, params, cfg = _setup(variant, fp32_setup, w8a16_setup, kv8_setup)
+    trace = _mixed_trace(cfg.vocab_size)
+    flat = _run(_engine(model, params, cfg), trace)
+    paged = _run(_engine(model, params, cfg, page_size=8,
+                         prefix_reuse=False), trace)
+    for r in trace:
+        assert paged[r.rid].tokens == flat[r.rid].tokens, (
+            f"{variant}: rid {r.rid} tokens diverged under the paged layout")
+        assert paged[r.rid].admitted_at == flat[r.rid].admitted_at
+        assert paged[r.rid].finished_at == flat[r.rid].finished_at
+
+
+@pytest.mark.parametrize("variant", ["fp32", "serve-w8a8-kv8"])
+def test_paged_with_reuse_matches_tokens_never_later(
+        variant, fp32_setup, w8a16_setup, kv8_setup):
+    """Prefix reuse on (the default): tokens stay bit-identical; shared
+    prefill pages may only make requests finish EARLIER, never later."""
+    model, params, cfg = _setup(variant, fp32_setup, w8a16_setup, kv8_setup)
+    trace = _mixed_trace(cfg.vocab_size)
+    flat = _run(_engine(model, params, cfg), trace)
+    eng = _engine(model, params, cfg, page_size=8)
+    paged = _run(eng, trace)
+    for r in trace:
+        assert paged[r.rid].tokens == flat[r.rid].tokens
+        assert paged[r.rid].finished_at <= flat[r.rid].finished_at
+    assert eng.pool.all_free()
+    assert eng.pool.n_free_pages == eng.pool.num_pages - len(eng.prefix_index)
+
+
+@pytest.mark.parametrize("fast", [True, False])
+def test_paged_fast_vs_stepwise_parity(fast, fp32_setup):
+    """The PR-3 fused fast path survives the paged layout: horizons + batched
+    multi-slot prefill over the page tables == the stepwise paged reference,
+    and both == the contiguous engine."""
+    model, params, cfg = fp32_setup
+    trace = _mixed_trace(cfg.vocab_size)
+    ref = _run(_engine(model, params, cfg, fast=False), trace)
+    got = _run(_engine(model, params, cfg, page_size=8, fast=fast,
+                       prefix_reuse=False), trace)
+    for r in trace:
+        assert got[r.rid].tokens == ref[r.rid].tokens
+        assert got[r.rid].finished_at == ref[r.rid].finished_at
+
+
+def test_paged_cache_is_donated(fp32_setup):
+    """Donation must cover the page pool and the page table: after a run the
+    pre-run buffers were consumed in place, not copied."""
+    model, params, cfg = fp32_setup
+    eng = _engine(model, params, cfg, page_size=8)
+    before_k = eng.pool.cache["k"]
+    before_pt = eng.pool.cache["page_table"]
+    eng.run([Request(rid=0, prompt=[5] * 4, max_new_tokens=4)])
+    assert before_k.is_deleted(), "page pool was copied, not donated"
+    assert before_pt.is_deleted(), "page table was copied, not donated"
+
+
+# --------------------------------------------------- copy-on-write sharing
+
+def test_cow_prefix_reuse_shares_then_copies(fp32_setup):
+    """A second request whose prompt IS a published page must admit with the
+    shared page mapped, copy it on write (reuse splits the page: R=4 inside
+    the 8-token page), and still produce exactly the contiguous tokens."""
+    model, params, cfg = fp32_setup
+    rng = np.random.RandomState(11)
+    shared = rng.randint(0, cfg.vocab_size, size=12).astype(np.int32)
+    trace = [
+        Request(rid=0, prompt=shared, max_new_tokens=4, arrival=0.0),
+        # prompt == the donor's first page exactly: 1 matched page, reuse
+        # aligned DOWN to the chunk boundary (C=4) inside it -> COW
+        Request(rid=1, prompt=shared[:8], max_new_tokens=4, arrival=6.0),
+    ]
+    flat = _run(_engine(model, params, cfg, prefill_chunk=4), trace)
+    eng = _engine(model, params, cfg, prefill_chunk=4, page_size=8)
+    paged = _run(eng, trace)
+    assert eng.pool.cow_copies >= 1, "boundary page was never copied"
+    assert eng.prefix_index.hits >= 1
+    for r in trace:
+        assert paged[r.rid].tokens == flat[r.rid].tokens
+        assert paged[r.rid].finished_at <= flat[r.rid].finished_at
+    # rid 1 skipped at least one prefill chunk via the shared page
+    assert paged[1].finished_at < flat[1].finished_at
+
+
+def test_concurrent_requests_share_published_prefix(fp32_setup):
+    """Publish happens at prefill COMPLETION, not retire: requests admitted
+    while the donor is still decoding already share its prompt pages."""
+    model, params, cfg = fp32_setup
+    rng = np.random.RandomState(13)
+    prompt = rng.randint(0, cfg.vocab_size, size=16).astype(np.int32)
+    # the donor's 16-token prompt prefills in 2 chunks; the followers arrive
+    # at tick 3 — donor still holds its slot, decoding, pages published
+    trace = [Request(rid=i, prompt=prompt, max_new_tokens=6,
+                     arrival=0.0 if i == 0 else 3.0)
+             for i in range(4)]
+    eng = _engine(model, params, cfg, num_slots=4, page_size=8)
+    paged = _run(eng, trace)
+    flat = _run(_engine(model, params, cfg, num_slots=4), trace)
+    assert {r: v.tokens for r, v in paged.items()} == \
+           {r: v.tokens for r, v in flat.items()}
+    assert eng.prefix_index.hits >= 1, "followers never hit the donor's pages"
+
+
+def test_tight_page_pool_blocks_then_recovers(fp32_setup):
+    """num_pages below full capacity: admission HOL-blocks on pages (with
+    LRU eviction of index entries) instead of deadlocking or corrupting —
+    every request still completes with contiguous-identical tokens."""
+    model, params, cfg = fp32_setup
+    trace = _mixed_trace(cfg.vocab_size)
+    flat = _run(_engine(model, params, cfg), trace)
+    eng = _engine(model, params, cfg, page_size=8, num_pages=6)
+    paged = _run(eng, trace)
+    assert {r: v.tokens for r, v in paged.items()} == \
+           {r: v.tokens for r, v in flat.items()}
+    assert eng.pool.all_free()
+
+
+def test_paged_submit_rejects_unservable_request(fp32_setup):
+    """A request needing more pages than the POOL has can never be admitted:
+    submit must reject it up front instead of deadlocking the FIFO line."""
+    model, params, cfg = fp32_setup
+    eng = _engine(model, params, cfg, page_size=8, num_pages=2)
+    with pytest.raises(ValueError, match="pages"):
+        eng.submit(Request(rid=0, prompt=[1] * 20, max_new_tokens=8))
+
+
+# ---------------------------------------------------------------- TP twin
+
+@pytest.mark.skipif(
+    jax.device_count() < 8,
+    reason="needs 8 devices: run under "
+           "XLA_FLAGS=--xla_force_host_platform_device_count=8",
+)
+def test_paged_sharded_token_parity(fp32_setup):
+    """The -tp twin on the 2x4 CI mesh: the paged sharded engine (page pool
+    replicated over data, heads TP over model) matches the single-device
+    contiguous engine token for token."""
+    from repro.launch.mesh import make_production_mesh
+    from jax.sharding import PartitionSpec as P
+
+    model, params, _ = fp32_setup
+    qm = repro.quantize(model, params=params, recipe="serve-w8a16-tp")
+    trace = _mixed_trace(qm.cfg.vocab_size)
+    mesh = make_production_mesh(shape=(2, 4))
+    single = _run(_engine(qm.model, qm.params, qm.cfg), trace)
+    eng = _engine(qm.model, qm.params, qm.cfg, mesh=mesh, page_size=8)
+    # page axis and tables replicate (the smoke arch's 2 KV heads don't
+    # divide model=4 either, so the whole pool is replicated here); the
+    # engine-level point is token parity through page-table addressing
+    assert eng.pool.cache["k"].sharding.spec == P(None, None, None, None,
+                                                  None)
+    assert eng.pool.cache["page_table"].sharding.spec == P(None, None)
+    sharded = _run(eng, trace)
+    assert {r: v.tokens for r, v in sharded.items()} == \
+           {r: v.tokens for r, v in single.items()}
+
+
+# ------------------------------------------------------ pool slot lifecycle
+
+def test_release_before_deferred_reset_commits_repairs_bookkeeping(
+        fp32_setup):
+    """The slot-lifecycle bug this PR fixes: a slot allocated with
+    ``reset=False`` (deferred fresh-mask reset) and released BEFORE any
+    prefill committed the reset used to hand the PREVIOUS occupant's
+    kpos/pos to its next claimant. Release must repair the bookkeeping."""
+    model, _, _ = fp32_setup
+    pool = CachePool(model, num_slots=1, max_len=32)
+    s = pool.allocate()
+    pool._reset_slot(s, reuse=5)        # simulate a request's occupancy
+    pool.release(s)
+
+    s2 = pool.allocate(reset=False)     # deferred: stale kpos/pos by design
+    assert int(np.asarray(pool.cache["pos"])[s2]) == 5  # stale, pre-commit
+    pool.release(s2)                    # ...released before any commit
+
+    s3 = pool.allocate(reset=False)     # next claimant also defers: nothing
+    kpos = np.asarray(pool.cache["kpos"])[s3]           # else would clean it
+    assert (kpos == -1).all(), "stale kpos leaked through an early release"
+    assert int(np.asarray(pool.cache["pos"])[s3]) == 0
+
+
+def test_note_reset_committed_clears_pending(fp32_setup):
+    """Once the engine's first jitted prefill commits the fresh-mask reset,
+    release must NOT redundantly re-reset (the commit is the reset)."""
+    model, _, _ = fp32_setup
+    pool = CachePool(model, num_slots=1, max_len=32)
+    s = pool.allocate(reset=False)
+    assert s in pool._pending_reset
+    pool.note_reset_committed(s)
+    calls = {"n": 0}
+    real = pool._reset_fn
+    pool._reset_fn = lambda *a: (calls.__setitem__("n", calls["n"] + 1)
+                                 or real(*a))
+    pool.release(s)
+    assert calls["n"] == 0, "release re-reset a slot whose reset committed"
+
+
+def test_double_release_and_exhaustion_recovery(fp32_setup):
+    model, _, _ = fp32_setup
+    pool = CachePool(model, num_slots=1, max_len=32)
+    s = pool.allocate()
+    with pytest.raises(PoolExhausted):
+        pool.allocate()
+    pool.release(s)
+    with pytest.raises(ValueError, match="not allocated"):
+        pool.release(s)
+    s2 = pool.allocate()                # exhaustion is recoverable
+    assert s2 == s
+    pool.release(s2)
+    assert pool.all_free()
+
+
+def test_paged_pool_exhaustion_is_atomic(fp32_setup):
+    """A PoolExhausted admission must leave the pool untouched: no slot
+    claimed, no page leaked, refcounts unchanged."""
+    model, _, _ = fp32_setup
+    pool = CachePool(model, num_slots=2, max_len=32, page_size=8, num_pages=3)
+    a = pool.allocate_pages(need=17)               # 3 pages -> pool drained
+    assert pool.n_free_pages == 0
+    with pytest.raises(PoolExhausted):
+        pool.allocate_pages(need=9)                # needs 2 fresh pages
+    assert pool.n_free == 1 and pool.n_allocated == 1
+    pool.release(a)
+    assert pool.n_free_pages == 3 and pool.all_free()
+    b = pool.allocate_pages(need=9)
+    assert len(pool.slot_pages(b)) == 2
+    with pytest.raises(ValueError, match="not allocated"):
+        pool.release(a if a != b else a + 1)
+
+
+def test_paged_refcounts_and_cow(fp32_setup):
+    """Page-level unit semantics: shared pages pin until every reference
+    drops; a write into a shared page copies it (COW) and repoints only the
+    writer's table entry."""
+    model, _, _ = fp32_setup
+    pool = CachePool(model, num_slots=2, max_len=32, page_size=8)
+    donor = pool.allocate_pages(need=9)            # 2 pages
+    first = pool.slot_page(donor, 0)
+    pool.ref_page(first)                           # the prefix index pins it
+    assert pool.page_ref(first) == 2
+    sharer = pool.allocate_pages(need=9, shared=[first], reuse_len=8)
+    assert pool.slot_page(sharer, 0) == first and pool.page_ref(first) == 3
+    assert pool.ensure_writable(sharer, 8, 9) == 0  # page 1 is exclusive
+    copied = pool.ensure_writable(sharer, 0, 8)     # page 0 is shared
+    assert copied == 1 and pool.cow_copies == 1
+    assert pool.slot_page(sharer, 0) != first
+    assert pool.page_ref(first) == 2               # donor + index
+    assert pool.slot_page(donor, 0) == first       # donor untouched
+    pool.release(sharer)
+    pool.release(donor)
+    assert pool.page_ref(first) == 1               # index still pins it
+    pool.deref_page(first)
+    assert pool.n_free_pages == pool.num_pages
+    with pytest.raises(ValueError, match="over-released"):
+        pool.deref_page(first)
+    with pytest.raises(ValueError, match="free"):
+        pool.ref_page(first)
+
+
+def test_allocate_pages_validates_arguments(fp32_setup):
+    model, _, _ = fp32_setup
+    pool = CachePool(model, num_slots=2, max_len=32, page_size=8)
+    with pytest.raises(ValueError, match="reuse_len"):
+        pool.allocate_pages(need=8, reuse_len=8)
+    with pytest.raises(ValueError, match="shared pages"):
+        pool.allocate_pages(need=17, shared=[], reuse_len=9)
+    with pytest.raises(ValueError, match="slot table"):
+        pool.allocate_pages(need=33)
+    assert pool.all_free() and pool.n_free_pages == pool.num_pages
+
+
+# --------------------------------------------- fused-reset dispatch fusion
+
+def test_allocate_reset_is_one_fused_dispatch(fp32_setup):
+    """The satellite fix: allocate(reset=True) used to dispatch kpos and pos
+    updates eagerly one .at[].set at a time; now the whole bookkeeping reset
+    is ONE jitted call (and reset=False is zero)."""
+    model, _, _ = fp32_setup
+    pool = CachePool(model, num_slots=2, max_len=32)
+    calls = {"n": 0}
+    real = pool._reset_fn
+
+    def counting(*a):
+        calls["n"] += 1
+        return real(*a)
+
+    pool._reset_fn = counting
+    pool.allocate()
+    assert calls["n"] == 1, "fresh reset must be exactly one fused dispatch"
+    pool.allocate(reset=False)
+    assert calls["n"] == 1, "deferred admission must dispatch nothing"
+
+
+def test_paged_admission_is_one_fused_dispatch(fp32_setup):
+    """Paged admission (kpos seed + pos + page-table row) is ONE dispatch;
+    a page-splitting reuse adds exactly one COW dispatch."""
+    model, _, _ = fp32_setup
+    pool = CachePool(model, num_slots=2, max_len=32, page_size=8)
+    counts = {"admit": 0, "cow": 0}
+    real_admit, real_cow = pool._admit_fn, pool._cow_fn
+    pool._admit_fn = lambda *a: (counts.__setitem__("admit",
+                                 counts["admit"] + 1) or real_admit(*a))
+    pool._cow_fn = lambda *a: (counts.__setitem__("cow", counts["cow"] + 1)
+                               or real_cow(*a))
+    donor = pool.allocate_pages(need=9)
+    assert counts == {"admit": 1, "cow": 0}
+    page = pool.slot_page(donor, 0)
+    pool.ref_page(page)
+    pool.allocate_pages(need=9, shared=[page], reuse_len=4)  # splits page 0
+    assert counts == {"admit": 2, "cow": 1}
+
+
+# ------------------------------------------------------ byte accounting
+
+def test_bytes_per_slot_counts_every_payload_leaf(fp32_setup):
+    """bytes_per_slot must count EVERY non-bookkeeping leaf (so new slot
+    state is never silently dropped from the roofline) and refuse to guess
+    about unrecognized integer leaves."""
+    model, _, _ = fp32_setup
+    pool = CachePool(model, num_slots=2, max_len=32)
+    base = pool.bytes_per_slot()
+    assert base * pool.num_slots == pool.cache_bytes()
+
+    extra = jnp.zeros((4, 2, 32, 3), jnp.float32)   # e.g. a v_err-like leaf
+    pool.cache["extra"] = extra
+    grown = pool.bytes_per_slot()
+    assert grown == base + extra.size * 4 // pool.num_slots
+
+    pool.cache["mystery"] = jnp.zeros((2, 32), jnp.int32)
+    with pytest.raises(ValueError, match="bookkeeping"):
+        pool.bytes_per_slot()
+
+
+def test_paged_and_contiguous_slot_bytes_match_at_full_capacity(fp32_setup):
+    """At the default page-pool size (every slot can map a full ring) the
+    paged layout pays the same payload bytes per slot as contiguous — paging
+    wins by ALLOCATING less, not by shrinking the worst case."""
+    model, _, _ = fp32_setup
+    flat = CachePool(model, num_slots=2, max_len=32)
+    paged = CachePool(model, num_slots=2, max_len=32, page_size=8)
+    assert paged.bytes_per_slot() == flat.bytes_per_slot()
+    assert paged.cache_bytes() == flat.cache_bytes()
+
+
+# ------------------------------------------------------- serve CLI guards
+
+def test_serve_cli_rejects_kv_bits_artifact_mismatch(w8a16_setup, tmp_path,
+                                                     capsys):
+    """--kv-bits against a --load artifact recorded at another KV precision
+    must hard-error naming BOTH values (the artifact's kv_cache stage
+    calibrated for its recorded precision; silently serving at another one
+    would ship a cache the calibration never saw)."""
+    from repro.launch import serve
+
+    w8a16_setup.save(str(tmp_path / "art"))    # records kv_cache_bits=16
+    with pytest.raises(SystemExit):
+        serve.main(["--load", str(tmp_path / "art"), "--kv-bits", "8"])
+    err = capsys.readouterr().err
+    assert "--kv-bits 8" in err and "kv_cache_bits=16" in err
+    assert "re-quantize" in err
+
+
+def test_serve_cli_page_flags_need_page_size(capsys):
+    from repro.launch import serve
+
+    with pytest.raises(SystemExit):
+        serve.main(["--arch", "qwen2-0.5b", "--smoke", "--num-pages", "8"])
+    assert "--num-pages needs --page-size" in capsys.readouterr().err
+
+
+# ------------------------------------------------------------- PrefixIndex
+
+class _FakePool:
+    """Just enough of CachePool's page API for index unit tests."""
+
+    def __init__(self, pages):
+        self.refs = dict.fromkeys(range(pages), 1)
+        self.slots = {}
+
+    def slot_page(self, slot, idx):
+        return self.slots[slot][idx]
+
+    def ref_page(self, page):
+        assert self.refs[page] >= 1
+        self.refs[page] += 1
+
+    def deref_page(self, page):
+        self.refs[page] -= 1
+        assert self.refs[page] >= 0
+
+
+def test_prefix_index_keys_by_full_prefix():
+    """Two prompts sharing page-1 TOKENS but different page-0 history must
+    not share page 1 — KV content is a function of the whole prefix."""
+    pool = _FakePool(4)
+    idx = PrefixIndex(page_size=2)
+    pool.slots[0] = [0, 1]
+    idx.publish([1, 2, 3, 4], pool, 0)
+    pool.slots[1] = [2, 3]
+    idx.publish([9, 9, 3, 4], pool, 1)       # same page-1 tokens (3, 4)
+    assert idx.lookup([1, 2, 3, 4]) == [0, 1]
+    assert idx.lookup([9, 9, 3, 4]) == [2, 3]
+    assert idx.lookup([1, 2, 9, 9]) == [0]   # walk stops at first miss
+    assert idx.lookup([5, 5]) == []
+    assert len(idx) == 4
+
+
+def test_prefix_index_publish_pins_and_skips_partial_pages():
+    pool = _FakePool(2)
+    idx = PrefixIndex(page_size=4)
+    pool.slots[0] = [0, 1]
+    added = idx.publish([1, 2, 3, 4, 5], pool, 0)  # page 1 only partly
+    assert added == 1 and len(idx) == 1            # covered by the prompt
+    assert pool.refs[0] == 2 and pool.refs[1] == 1
+    # a second donor with the same prefix adds nothing (first donor wins)
+    pool.slots[1] = [1, 0]
+    assert idx.publish([1, 2, 3, 4], pool, 1) == 0
+    assert pool.refs == {0: 2, 1: 1}
+
+
+def test_prefix_index_lru_eviction_respects_protect():
+    pool = _FakePool(3)
+    idx = PrefixIndex(page_size=1)
+    pool.slots[0] = [0, 1, 2]
+    idx.publish([7, 8, 9], pool, 0)
+    idx.lookup([7])                     # touch page 0: LRU order 1, 2, 0
+    assert idx.evict_lru(pool, protect={1}) is True
+    assert pool.refs[2] == 1            # page 2 went, not the protected 1
+    assert idx.evict_lru(pool, protect={0, 1}) is False
+    idx.clear(pool)
+    assert len(idx) == 0 and all(r == 1 for r in pool.refs.values())
