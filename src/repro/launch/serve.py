@@ -16,6 +16,7 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
+import signal
 import time
 
 import jax
@@ -26,6 +27,7 @@ from ..data import calibration_tokens
 from ..models import build_model
 from ..pipeline import QuantizedModel, quantize
 from ..serving import (
+    QueueFull,
     Request,
     ServingEngine,
     required_cache_len,
@@ -102,6 +104,15 @@ def main(argv=None):
                     help="replay a synthetic arrival schedule of N requests "
                          "(mixed log-uniform lengths, Poisson arrivals)")
     ap.add_argument("--trace-seed", type=int, default=0)
+    ap.add_argument("--max-queue", type=int, default=None, metavar="Q",
+                    help="bound the admission queue: submissions beyond Q "
+                         "shed with the retryable QueueFull error "
+                         "(back-pressure). Default: unbounded")
+    ap.add_argument("--deadline", type=float, default=None, metavar="T",
+                    help="give every request a deadline of T engine ticks "
+                         "after its arrival; expired requests are shed "
+                         "(queued) or cut short (in flight) at the next "
+                         "step boundary and report status 'expired'")
     ap.add_argument("--lint", action="store_true",
                     help="run the QuantLint graph linter over this engine's "
                          "compiled serve paths before serving (warn-only "
@@ -113,6 +124,10 @@ def main(argv=None):
     # not discard minutes of pipeline work
     if args.num_pages is not None and args.page_size is None:
         ap.error("--num-pages needs --page-size")
+    if args.max_queue is not None and args.max_queue < 1:
+        ap.error("--max-queue must be >= 1")
+    if args.deadline is not None and args.deadline <= 0:
+        ap.error("--deadline must be > 0 engine ticks")
     if args.no_prefix_reuse and args.page_size is None:
         ap.error("--no-prefix-reuse needs --page-size")
     cli_shape = None
@@ -244,6 +259,9 @@ def main(argv=None):
             prompt_lens=(p_lo, args.prompt_len), gen_lens=(g_lo, args.gen_len),
             mean_interarrival=1.0,
         )
+        if args.deadline is not None:
+            requests = [dataclasses.replace(
+                r, deadline=r.arrival + args.deadline) for r in requests]
         print(f"trace: {len(requests)} requests, "
               f"prompt {p_lo}..{args.prompt_len}, "
               f"gen {g_lo}..{args.gen_len}, Poisson arrivals")
@@ -252,7 +270,9 @@ def main(argv=None):
             calibration_tokens(0, args.batch, args.prompt_len, cfg.vocab_size)
         )
         requests = [
-            Request(rid=i, prompt=prompts[i], max_new_tokens=args.gen_len)
+            Request(rid=i, prompt=prompts[i], max_new_tokens=args.gen_len,
+                    deadline=(args.deadline if args.deadline is not None
+                              else None))
             for i in range(args.batch)
         ]
 
@@ -266,7 +286,7 @@ def main(argv=None):
         prefill_chunk=C, decode_horizon=args.decode_horizon,
         fast=not args.reference, kv_bits=args.kv_bits, mesh=mesh,
         page_size=args.page_size, num_pages=args.num_pages,
-        prefix_reuse=not args.no_prefix_reuse,
+        prefix_reuse=not args.no_prefix_reuse, max_queue=args.max_queue,
     )
     layout = (f"paged ({engine.pool.num_pages} pages x {engine.page_size} "
               f"positions, prefix reuse "
@@ -289,9 +309,25 @@ def main(argv=None):
         engine.warmup()
         print(f"warmup: compiled serving shapes in {time.time() - t0:.1f} s")
 
+    # SIGTERM → graceful drain: stop admitting, finish in-flight + parked,
+    # report, exit 0 (modeled on runtime.fault_tolerance.FaultTolerantLoop).
+    prev_handler = signal.signal(
+        signal.SIGTERM, lambda *_: engine.request_drain())
     t0 = time.time()
-    results = engine.run(requests)
+    try:
+        shed = []
+        for r in requests:
+            try:
+                engine.submit(r)
+            except QueueFull:
+                shed.append(r.rid)
+        results = engine.run()
+    finally:
+        signal.signal(signal.SIGTERM, prev_handler)
     dt = time.time() - t0
+    if engine.draining:
+        print(f"drain: SIGTERM received — admission stopped, "
+              f"{engine.scheduler.pending()} queued requests unserved")
     gen = engine.stats["generated_tokens"]
     path = "reference (stepwise)" if args.reference else \
         f"fast (decode horizon {args.decode_horizon})"
@@ -306,6 +342,18 @@ def main(argv=None):
           f"{engine.stats['prefill_dispatches']} dispatches, "
           f"{engine.syncs_per_token():.2f} host syncs/token, "
           f"mean slot occupancy {engine.mean_occupancy():.2f}")
+    faults = {k: engine.stats[k] for k in
+              ("shed", "preempted", "resumed", "cancelled", "expired",
+               "quarantined", "straggler_steps")}
+    by_status: dict[str, int] = {}
+    for res in results.values():
+        by_status[res.status] = by_status.get(res.status, 0) + 1
+    if any(faults.values()) or set(by_status) - {"ok"}:
+        print("faults: " + ", ".join(f"{k}={v}" for k, v in faults.items()))
+        print("results by status: " +
+              ", ".join(f"{k}={v}" for k, v in sorted(by_status.items())))
+    if not results:
+        return results
     first = results[min(results)]
     print(f"sample token ids (rid {first.rid}):", first.tokens[:12])
     return results

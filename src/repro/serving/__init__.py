@@ -3,21 +3,39 @@
     engine = ServingEngine.from_quantized(qm, num_slots=8, max_len=128)
     results = engine.run(synthetic_trace(0, 20, vocab_size=qm.cfg.vocab_size))
 
-See engine.py for the step loop, cache_pool.py for the slot lifecycle.
+See engine.py for the step loop, cache_pool.py for the slot lifecycle,
+errors.py for the typed admission taxonomy, and chaos.py for the
+deterministic fault-injection harness.
 """
 from .cache_pool import CachePool, PoolExhausted
+from .chaos import ChaosReport, FaultPlan, run_chaos
 from .engine import RequestResult, ServingEngine, required_cache_len
+from .errors import (
+    DeadlineExceeded,
+    QueueFull,
+    RequestCancelled,
+    RequestTooLarge,
+    ServingError,
+)
 from .scheduler import FIFOScheduler, PrefixIndex, Request
 from .trace import synthetic_trace
 
 __all__ = [
     "CachePool",
+    "ChaosReport",
+    "DeadlineExceeded",
     "FIFOScheduler",
+    "FaultPlan",
     "PoolExhausted",
     "PrefixIndex",
+    "QueueFull",
     "Request",
+    "RequestCancelled",
     "RequestResult",
+    "RequestTooLarge",
     "ServingEngine",
+    "ServingError",
     "required_cache_len",
+    "run_chaos",
     "synthetic_trace",
 ]

@@ -33,9 +33,10 @@ from __future__ import annotations
 import heapq
 from typing import Optional, Sequence
 
-
-class PoolExhausted(RuntimeError):
-    """allocate() called with no free slot (or, paged, no free pages)."""
+# re-exported here for back-compat (PoolExhausted predates the taxonomy and
+# was born in this module); it now lives in the serving error taxonomy with
+# a ``retryable`` flag
+from .errors import PoolExhausted
 
 
 # bookkeeping leaves excluded from the payload byte accounting; anything
@@ -147,6 +148,9 @@ class CachePool:
             heapq.heapify(self._free_pages)
             self._page_ref = [0] * self.num_pages
             self._slot_pages: dict[int, list] = {}
+            # pages withheld from allocation (chaos fault injection): ref 0,
+            # not in the free heap, owned by the reserver
+            self._reserved: set = set()
             self.cow_copies = 0
 
         self.mesh = mesh
@@ -438,3 +442,103 @@ class CachePool:
         if self.paged:
             for p in self._slot_pages.pop(slot, ()):
                 self.deref_page(p)
+
+    # --------------------------------------------- fault injection support
+    def reserve_pages(self, n: int) -> list:
+        """Withhold up to ``n`` free pages from allocation (the chaos
+        harness's pool-exhaustion fault: the pages vanish from the free heap
+        without any slot or refcount owning them). Returns the reserved page
+        ids — hand them back via ``release_reserved``. Reserving fewer than
+        ``n`` (even zero) is not an error: exhaustion injection takes what
+        it can get."""
+        if not self.paged:
+            raise RuntimeError("reserve_pages() needs a paged pool")
+        got = []
+        while self._free_pages and len(got) < n:
+            p = heapq.heappop(self._free_pages)
+            self._reserved.add(p)
+            got.append(p)
+        return got
+
+    def release_reserved(self, pages: Sequence[int]) -> None:
+        """Return pages taken by ``reserve_pages`` to the free heap."""
+        for p in pages:
+            if p not in self._reserved:
+                raise ValueError(f"page {p} is not reserved")
+            self._reserved.remove(p)
+            heapq.heappush(self._free_pages, p)
+
+    # ------------------------------------------------------------ auditing
+    def check_invariants(self, external_refs=None) -> None:
+        """Audit the pool's host bookkeeping; raises AssertionError on the
+        first violation. Cheap (pure host state — no device sync), so the
+        chaos harness runs it after EVERY engine step, and
+        ``REPRO_POOL_CHECK=1`` turns it on per-step in any test run.
+
+        Checked:
+          * slot partition — ``_free`` and ``_allocated`` partition the slot
+            range; ``_pending_reset`` only tracks allocated slots;
+          * page partition (paged) — every page is exactly one of free
+            (ref 0, in the free heap once), reserved (ref 0, chaos-held),
+            or live (ref >= 1);
+          * refcount conservation (paged) — a live page's refcount equals
+            the number of slot-table mappings plus its external pins
+            (``external_refs``: page → pin count, e.g. the engine's
+            prefix-index entries plus any chaos reservations); no slot maps
+            a freed page.
+        """
+        n = self.num_slots
+        assert self._free | self._allocated == set(range(n)), (
+            f"slots leaked: free={sorted(self._free)} "
+            f"allocated={sorted(self._allocated)} don't cover 0..{n - 1}"
+        )
+        assert not (self._free & self._allocated), (
+            f"slots both free and allocated: "
+            f"{sorted(self._free & self._allocated)}"
+        )
+        assert self._pending_reset <= self._allocated, (
+            f"pending resets on non-allocated slots: "
+            f"{sorted(self._pending_reset - self._allocated)}"
+        )
+        if not self.paged:
+            return
+        assert set(self._slot_pages) == self._allocated, (
+            f"slot-page tables {sorted(self._slot_pages)} != allocated "
+            f"slots {sorted(self._allocated)}"
+        )
+        free_counts: dict[int, int] = {}
+        for p in self._free_pages:
+            free_counts[p] = free_counts.get(p, 0) + 1
+        expected = dict(external_refs or {})
+        for pages in self._slot_pages.values():
+            for p in pages:
+                expected[p] = expected.get(p, 0) + 1
+        for p in range(self.num_pages):
+            ref = self._page_ref[p]
+            in_free = free_counts.get(p, 0)
+            if p in self._reserved:
+                assert ref == 0 and in_free == 0, (
+                    f"reserved page {p} has ref {ref}, "
+                    f"free-heap count {in_free}"
+                )
+                assert expected.get(p, 0) == 0, (
+                    f"reserved page {p} is mapped/pinned "
+                    f"({expected[p]} holders)"
+                )
+            elif ref == 0:
+                assert in_free == 1, (
+                    f"page {p} has ref 0 but appears {in_free} times in the "
+                    f"free heap (want exactly 1)"
+                )
+                assert expected.get(p, 0) == 0, (
+                    f"freed page {p} is still mapped/pinned "
+                    f"({expected[p]} holders)"
+                )
+            else:
+                assert in_free == 0, (
+                    f"live page {p} (ref {ref}) is in the free heap"
+                )
+                assert ref == expected.get(p, 0), (
+                    f"page {p} refcount {ref} != {expected.get(p, 0)} "
+                    f"(slot mappings + external pins) — refcount leak"
+                )

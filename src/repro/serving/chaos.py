@@ -1,0 +1,282 @@
+"""Deterministic fault-injection chaos harness for the serving engine.
+
+A ``FaultPlan`` is a seeded, fully host-side schedule of faults keyed by
+engine-step index (the number of ``step()`` calls — deterministic for a
+fixed engine config and trace):
+
+  * **pool exhaustion** — ``CachePool.reserve_pages`` withholds free pages
+    for a window of steps, forcing admission up the exhaustion ladder
+    (LRU eviction → preemption → head-of-line blocking);
+  * **arrival bursts** — extra requests injected mid-run (arrival = the
+    clock at injection), spiking queue depth and page demand;
+  * **cancellations** — ``engine.cancel(rid)`` at a chosen step;
+  * **non-finite logits** — ``engine.inject_bad(rid)`` marks one row bad at
+    its next host sync, exercising the NaN-quarantine path without
+    poisoning real device state (a real NaN e2e is a separate test: the
+    device-side detector is the same code path).
+
+``run_chaos`` steps the engine manually, applies due faults before each
+step, runs ``engine.check_invariants()`` (refcount conservation, free-list
+consistency, no slot maps a freed page) after EVERY step, and returns a
+``ChaosReport``. The core serving invariant under test: every request the
+plan did NOT fault — including preempted-then-resumed ones — finishes with
+tokens bit-identical to a fault-free run (``assert_unfaulted_parity``).
+
+CLI (the CI ``chaos-smoke`` job)::
+
+    PYTHONPATH=src python -m repro.serving.chaos --smoke --summary out.md
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+import numpy as np
+
+from .errors import ServingError
+from .scheduler import Request
+
+
+@dataclasses.dataclass
+class FaultPlan:
+    """Faults keyed by engine-step index. Build explicitly, or draw a mixed
+    plan from a seed with ``FaultPlan.seeded``."""
+
+    # (step, n_pages, hold_steps): reserve up to n_pages free pages at
+    # `step`, return them hold_steps steps later
+    exhaust: list = dataclasses.field(default_factory=list)
+    # (step, rid): client cancellation issued before `step`
+    cancels: list = dataclasses.field(default_factory=list)
+    # (step, rid): non-finite logits injected for rid's row
+    nans: list = dataclasses.field(default_factory=list)
+    # (step, [Request, ...]): extra arrivals submitted before `step`
+    bursts: list = dataclasses.field(default_factory=list)
+
+    def faulted_rids(self) -> set:
+        """Rids whose own tokens the plan corrupts or truncates (cancels +
+        NaN injections). Exhaustion and bursts reshuffle scheduling only —
+        requests they touch must STILL match the fault-free run."""
+        return ({rid for _, rid in self.cancels}
+                | {rid for _, rid in self.nans})
+
+    @classmethod
+    def seeded(cls, seed: int, rids: Sequence[int], n_steps: int, *,
+               n_exhaust: int = 2, exhaust_pages: int = 4,
+               exhaust_hold: int = 8, n_cancels: int = 2,
+               n_nans: int = 2) -> "FaultPlan":
+        """A mixed plan drawn deterministically from ``seed``: exhaustion
+        windows at random steps, plus cancellations and NaN injections over
+        disjoint random victims from ``rids`` (disjoint so each outcome is
+        attributable to exactly one fault)."""
+        rng = np.random.RandomState(seed)
+        rids = list(rids)
+        n_victims = min(len(rids), n_cancels + n_nans)
+        victims = [rids[i] for i in
+                   rng.choice(len(rids), size=n_victims, replace=False)]
+        plan = cls()
+        for _ in range(n_exhaust):
+            plan.exhaust.append((int(rng.randint(0, max(1, n_steps))),
+                                 exhaust_pages, exhaust_hold))
+        for rid in victims[:n_cancels]:
+            plan.cancels.append((int(rng.randint(0, max(1, n_steps))),
+                                 int(rid)))
+        for rid in victims[n_cancels:]:
+            plan.nans.append((int(rng.randint(0, max(1, n_steps))),
+                              int(rid)))
+        return plan
+
+
+@dataclasses.dataclass
+class ChaosReport:
+    results: dict            # rid → RequestResult (everything that finished)
+    outcomes: dict           # rid → status string ("ok", "expired", ...)
+    counts: dict             # status → count, plus engine fault counters
+    steps: int               # engine steps driven
+    leaked_pages: int        # pages neither free nor prefix-index-pinned
+    shed_rids: list          # rids rejected at submit (QueueFull)
+
+    def table(self) -> str:
+        """Markdown fault-outcome table (the chaos-smoke step summary)."""
+        lines = ["| outcome | count |", "|---|---|"]
+        for key in ("ok", "preempted", "resumed", "shed", "cancelled",
+                    "expired", "quarantined", "leaked_pages"):
+            lines.append(f"| {key} | {self.counts.get(key, 0)} |")
+        return "\n".join(lines)
+
+
+def run_chaos(engine, requests: Sequence[Request], plan: FaultPlan, *,
+              max_steps: int = 100_000) -> ChaosReport:
+    """Serve ``requests`` under ``plan``, checking pool invariants after
+    every step. Raises AssertionError the moment bookkeeping is violated;
+    returns the report once the engine drains and all holds are released."""
+    shed_rids: list = []
+    for r in requests:
+        try:
+            engine.submit(r)
+        except ServingError:
+            shed_rids.append(r.rid)
+
+    exhaust = sorted(plan.exhaust)
+    cancels = sorted(plan.cancels)
+    nans = sorted(plan.nans)
+    bursts = sorted(plan.bursts, key=lambda e: e[0])
+    holds: list = []          # (release_step, reserved_pages)
+    results: dict = {}
+    step = 0
+    base = dict(engine.stats)
+
+    def due(events, now):
+        out = []
+        while events and events[0][0] <= now:
+            out.append(events.pop(0))
+        return out
+
+    while (engine._inflight or engine._parked
+           or engine.scheduler.pending() or holds
+           or exhaust or cancels or nans or bursts):
+        assert step < max_steps, (
+            f"chaos run did not drain within {max_steps} steps"
+        )
+        for _, n_pages, hold in due(exhaust, step):
+            if engine.paged:
+                holds.append((step + hold,
+                              engine.pool.reserve_pages(n_pages)))
+        for _, rid in due(cancels, step):
+            engine.cancel(rid)
+        for _, rid in due(nans, step):
+            engine.inject_bad(rid)
+        for _, reqs in due(bursts, step):
+            for r in reqs:
+                try:
+                    # re-stamping arrival can push it past the request's
+                    # deadline — __post_init__ raises ValueError then
+                    engine.submit(dataclasses.replace(
+                        r, arrival=engine.clock))
+                except (ServingError, ValueError):
+                    shed_rids.append(r.rid)
+        engine.step()
+        step += 1
+        for release_step, pages in [h for h in holds
+                                    if h[0] <= step]:
+            engine.pool.release_reserved(pages)
+            holds.remove((release_step, pages))
+        engine.check_invariants()
+        results.update(engine.results)
+        engine.results = {}
+
+    leaked = 0
+    if engine.paged:
+        pinned = (set(engine.prefix_index.pages())
+                  if engine.prefix_index is not None else set())
+        for p in range(engine.pool.num_pages):
+            if engine.pool.page_ref(p) > 0 and p not in pinned:
+                leaked += 1
+    outcomes = {rid: res.status for rid, res in results.items()}
+    for rid in shed_rids:
+        outcomes[rid] = "shed"
+    counts: dict = {}
+    for status in outcomes.values():
+        counts[status] = counts.get(status, 0) + 1
+    for key in ("preempted", "resumed", "shed", "cancelled", "expired",
+                "quarantined", "straggler_steps"):
+        counts[key] = engine.stats[key] - base[key]
+    counts["leaked_pages"] = leaked
+    return ChaosReport(results=results, outcomes=outcomes, counts=counts,
+                       steps=step, leaked_pages=leaked, shed_rids=shed_rids)
+
+
+def assert_unfaulted_parity(report: ChaosReport, clean_results: dict,
+                            faulted_rids: set) -> int:
+    """Every request the plan did not fault must have finished ok with
+    tokens bit-identical to the fault-free run — preempted-then-resumed
+    requests included (resume re-prefills through the prefix-reuse path and
+    must reproduce the identical continuation). Returns the number of
+    requests compared."""
+    compared = 0
+    for rid, clean in clean_results.items():
+        if rid in faulted_rids or rid in report.shed_rids:
+            continue
+        got = report.results.get(rid)
+        assert got is not None, f"unfaulted request {rid} never finished"
+        assert got.status == "ok", (
+            f"unfaulted request {rid} finished with status {got.status!r}"
+        )
+        assert list(got.tokens) == list(clean.tokens), (
+            f"unfaulted request {rid} diverged from the fault-free run:\n"
+            f"  chaos: {got.tokens}\n  clean: {clean.tokens}"
+        )
+        compared += 1
+    return compared
+
+
+# ----------------------------------------------------------------- CLI
+def _main(argv: Optional[Sequence[str]] = None) -> int:
+    """Seeded chaos smoke over a real (smoke-dims) quantized model: mixed
+    FaultPlan on a deliberately small paged pool, invariants checked every
+    step, unfaulted parity asserted against a fault-free twin. Writes the
+    fault-outcome markdown table to --summary (the CI step summary)."""
+    import argparse
+    import dataclasses as dc
+    import pathlib
+
+    import jax
+
+    from ..configs import get_config
+    from ..models import build_model
+    from .engine import ServingEngine
+    from .trace import synthetic_trace
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--n", type=int, default=24, help="trace length")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny dims (the CI chaos-smoke job)")
+    ap.add_argument("--summary", type=pathlib.Path, default=None,
+                    help="append the fault-outcome table to this file")
+    ap.add_argument("--mesh", default=None,
+                    help="mesh shape 'D,M' (needs D*M visible devices)")
+    args = ap.parse_args(argv)
+
+    cfg = dc.replace(get_config("qwen2-0.5b", smoke=True),
+                     name="qwen2-chaos-smoke")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    mesh = None
+    if args.mesh:
+        from ..launch.mesh import make_production_mesh
+
+        shape = tuple(int(x) for x in args.mesh.split(","))
+        mesh = make_production_mesh(shape=shape)
+
+    kw = dict(num_slots=4, max_len=48, prefill_chunk=8, decode_horizon=4,
+              page_size=8, mesh=mesh)
+    trace = synthetic_trace(args.seed, args.n, vocab_size=cfg.vocab_size,
+                            prompt_lens=(4, 16), gen_lens=(4, 16),
+                            mean_interarrival=1.0, priority_levels=2)
+    # fault-free twin first (full page pool, no faults)
+    clean = ServingEngine(model, params, cfg, **kw).run(
+        [dc.replace(r) for r in trace])
+
+    # chaos engine: starved page pool (2 slots' worth for 4 slots) so the
+    # plan's reservations actually push admission up the ladder
+    engine = ServingEngine(model, params, cfg,
+                           num_pages=2 * (48 // 8), **kw)
+    plan = FaultPlan.seeded(args.seed, [r.rid for r in trace], n_steps=40)
+    report = run_chaos(engine, [dc.replace(r) for r in trace], plan)
+    compared = assert_unfaulted_parity(report, clean, plan.faulted_rids())
+    assert report.leaked_pages == 0, (
+        f"{report.leaked_pages} pages leaked at drain"
+    )
+
+    table = report.table()
+    print(f"chaos: {report.steps} steps, {compared} unfaulted requests "
+          f"bit-identical, 0 leaked pages")
+    print(table)
+    if args.summary is not None:
+        with open(args.summary, "a") as f:
+            f.write("## chaos-smoke fault outcomes\n\n" + table + "\n")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(_main())

@@ -49,18 +49,36 @@ contiguous pool. Admission maps shared prefix pages from the scheduler's
 which makes the donor's cached K/V bit-identical to recomputing them) and
 costs one fused bookkeeping dispatch; prefill completion publishes the
 request's fully-covered prompt pages for later requests to share.
+
+**Fault tolerance**: requests carry optional ``deadline``/``priority``; the
+engine reaps expired or client-cancelled requests at step/horizon
+boundaries and reclaims their pages atomically. When paged admission runs
+out of pages it climbs an exhaustion ladder — evict LRU prefix-index
+entries, then preempt strictly-lower-priority in-flight requests (pages
+released, prompt + generated-so-far parked host-side; the victim's
+computed KV pages are published to the prefix index first, so a prompt
+resume can remap them instead of recomputing) — before head-of-line
+blocking. Every jitted path additionally returns a per-row "bad" flag
+(non-finite logits); a poisoned row is quarantined at its next host sync
+instead of poisoning the batch (row independence keeps every other slot
+bit-identical). ``serving/chaos.py`` drives all of this deterministically.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import math
+import os
+import time
 from typing import Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..runtime.fault_tolerance import StragglerMonitor
 from .cache_pool import KNOWN_BOOKKEEPING, CachePool
+from .errors import QueueFull, RequestTooLarge
 from .scheduler import FIFOScheduler, PrefixIndex, Request
 
 def required_cache_len(prompt_len: int, max_new_tokens: int,
@@ -188,6 +206,13 @@ class _InFlight:
     cur_token: int = 0
     # fast path: slot bookkeeping reset deferred to the first prefill chunk
     fresh: bool = False
+    # preemption bookkeeping: a resumed request runs as an internal Request
+    # whose prompt is (original prompt + tokens generated before the
+    # preemption); ``prior`` holds those already-generated tokens and
+    # ``orig_req`` the original request, so retirement merges them back into
+    # ONE result under the original rid/prompt_len
+    prior: list = dataclasses.field(default_factory=list)
+    orig_req: Optional[Request] = None
 
     @property
     def prefill_done(self) -> bool:
@@ -203,6 +228,20 @@ class _InFlight:
 
 
 @dataclasses.dataclass
+class _Parked:
+    """A preempted request waiting host-side for re-admission: the ORIGINAL
+    request plus everything generated before the preemption. Resumption
+    re-enters the normal admission path as an internal request whose prompt
+    is ``req.prompt + generated`` — the prefix index then remaps whatever
+    published pages survived, and re-prefills the rest (bit-identical either
+    way: prefill and decode agree on every cached position)."""
+
+    req: Request
+    generated: list
+    admitted_at: float
+
+
+@dataclasses.dataclass
 class RequestResult:
     rid: int
     prompt_len: int
@@ -210,6 +249,9 @@ class RequestResult:
     arrival: float
     admitted_at: float
     finished_at: float
+    # "ok" | "expired" | "cancelled" | "quarantined" — non-ok results carry
+    # the tokens generated before the fault (possibly none)
+    status: str = "ok"
 
 
 class ServingEngine:
@@ -259,6 +301,12 @@ class ServingEngine:
         prefill completion publishes fully-covered prompt pages, and later
         admissions map them (copy-on-write) instead of recomputing the
         shared prefix.
+    max_queue: bound on the admission queue; ``submit`` beyond it raises the
+        retryable ``QueueFull`` (back-pressure) and counts a shed. None
+        (default) = unbounded.
+    straggler: a ``runtime.fault_tolerance.StragglerMonitor`` observing
+        per-engine-step wall time (steps slower than ``threshold ×`` the
+        EMA count into ``stats["straggler_steps"]``); None = defaults.
     """
 
     def __init__(self, model, params, cfg, *, num_slots: int = 4,
@@ -266,7 +314,9 @@ class ServingEngine:
                  cache_dtype=None, decode_horizon: int = 8,
                  fast: bool = True, kv_bits: Optional[int] = None,
                  mesh=None, page_size: Optional[int] = None,
-                 num_pages: Optional[int] = None, prefix_reuse: bool = True):
+                 num_pages: Optional[int] = None, prefix_reuse: bool = True,
+                 max_queue: Optional[int] = None,
+                 straggler: Optional[StragglerMonitor] = None):
         if cfg.family in ("ssm", "hybrid") or cfg.is_encdec:
             raise ValueError(
                 f"the serving engine supports attention-family decoder-only "
@@ -302,9 +352,19 @@ class ServingEngine:
         # may be < the requested max_len (sliding-window ring); admission is
         # capped at the real ring so wrap-around never clobbers live keys
         self.max_len = self.pool.max_len
-        self.scheduler = FIFOScheduler()
+        self.scheduler = FIFOScheduler(max_queue=max_queue)
+        self.straggler = straggler or StragglerMonitor()
         self.clock = 0.0
         self._inflight: dict[int, _InFlight] = {}
+        self._parked: collections.deque[_Parked] = collections.deque()
+        # rids marked for cancellation while in flight (takes effect at the
+        # next step boundary) and for NaN injection (chaos: the row is
+        # treated as non-finite at its next host sync)
+        self._cancelled: set[int] = set()
+        self._inject_bad: set[int] = set()
+        self._draining = False
+        # REPRO_POOL_CHECK=1: audit pool bookkeeping after every step
+        self._pool_check = os.environ.get("REPRO_POOL_CHECK") == "1"
         self.results: dict[int, RequestResult] = {}
         self.stats = {
             "decode_steps": 0,        # token-level steps (fast: += K/horizon)
@@ -317,6 +377,14 @@ class ServingEngine:
             # must not grow memory with uptime
             "occupancy_sum": 0.0,
             "engine_steps": 0,
+            # fault-tolerance counters (the serve report's fault table)
+            "preempted": 0,           # in-flight requests parked for pages
+            "resumed": 0,             # parked requests re-admitted
+            "shed": 0,                # submissions rejected (QueueFull)
+            "cancelled": 0,           # client cancellations honored
+            "expired": 0,             # deadline reaps (queued or in flight)
+            "quarantined": 0,         # non-finite rows retired
+            "straggler_steps": 0,     # engine steps flagged by the monitor
         }
         # every jit donates the pooled cache (argnum 2): the KV pool is
         # updated in place instead of being copied on each call, mirroring
@@ -332,8 +400,10 @@ class ServingEngine:
         if mesh is not None:
             from jax.sharding import NamedSharding, PartitionSpec
 
+            # outputs are (tokens, bad-row mask, cache): tokens and the bad
+            # mask replicate (both host-bound), the cache keeps its specs
             rep = NamedSharding(mesh, PartitionSpec())
-            kw["out_shardings"] = (rep, self.pool.shardings)
+            kw["out_shardings"] = (rep, rep, self.pool.shardings)
         # paged mode jits the thin gather/commit wrappers around the SAME
         # impls (identical signatures), so everything downstream — the
         # serving loop, warmup, the lint layer's lowering — is layout-blind
@@ -365,7 +435,8 @@ class ServingEngine:
         tokens: [1, C] (zero-padded past n_valid). Pad tokens run through the
         model — causality keeps them out of every valid position's K/V — and
         their cache writes are invalidated before commit. Returns the greedy
-        token from the last valid position and the updated pooled cache.
+        token from the last valid position, the per-row non-finite flag
+        (NaN quarantine), and the updated pooled cache.
         """
         sub = _slice_slot(cache, slot)
         start = sub["pos"]                                   # [1]
@@ -379,7 +450,8 @@ class ServingEngine:
             "pos": end,
         }
         tok = jnp.argmax(logits, -1).astype(jnp.int32)       # [1]
-        return tok, _write_slot(cache, sub, slot)
+        bad = ~jnp.all(jnp.isfinite(logits), -1)             # [1]
+        return tok, bad, _write_slot(cache, sub, slot)
 
     def _prefill_multi_impl(self, params, tokens, cache, slots, n_valid,
                             fresh, is_real):
@@ -419,7 +491,8 @@ class ServingEngine:
         }
         sub = _restore_rows(sub, orig, is_real)
         tok = jnp.argmax(logits, -1).astype(jnp.int32)       # [P]
-        return tok, _scatter_slots(cache, sub, slots)
+        bad = ~jnp.all(jnp.isfinite(logits), -1) & is_real   # [P]
+        return tok, bad, _scatter_slots(cache, sub, slots)
 
     def _decode_masked(self, params, tokens, cache, active):
         """One full-slot-batch decode step. ``active`` [B] marks rows that
@@ -427,7 +500,9 @@ class ServingEngine:
         shape stability, so their bookkeeping write this step — one kpos
         entry and the pos advance — is rolled back before commit. (Their K/V
         payload write is harmless: masked by kpos=-1 and overwritten by the
-        slot's next real token at the same ring index.)"""
+        slot's next real token at the same ring index.) Also returns the
+        per-row non-finite-logits flag, masked to active rows (inactive rows
+        legitimately carry garbage)."""
         prev_pos = cache["pos"]                              # [B]
         logits, cache = self.model.decode_step(params, tokens, cache)
         S = cache["kpos"].shape[1]
@@ -435,7 +510,8 @@ class ServingEngine:
         kpos = jnp.where((~active)[:, None] & wrote, -1, cache["kpos"])
         pos = jnp.where(active, cache["pos"], prev_pos)
         cache = {**cache, "kpos": kpos, "pos": pos}
-        return jnp.argmax(logits, -1).astype(jnp.int32), cache
+        bad = ~jnp.all(jnp.isfinite(logits), -1) & active    # [B]
+        return jnp.argmax(logits, -1).astype(jnp.int32), bad, cache
 
     def _decode_impl(self, params, tokens, cache, active):
         """Stepwise reference: one decode step, one host round trip."""
@@ -451,20 +527,23 @@ class ServingEngine:
         place (its token stops being fed forward and its bookkeeping rolls
         back), so callers that pick ``k <= min(remaining[active])`` retire
         rows exactly at the horizon boundary. Returns the [B, k] token
-        buffer and the updated pooled cache.
+        buffer, the per-row bad flag OR-ed across the row's active steps,
+        and the updated pooled cache.
         """
         def body(carry, _):
-            tokens, cache, remaining = carry
+            tokens, cache, remaining, badacc = carry
             active = remaining > 0
-            nxt, cache = self._decode_masked(params, tokens, cache, active)
+            nxt, bad, cache = self._decode_masked(params, tokens, cache,
+                                                  active)
             tokens = jnp.where(active[:, None], nxt[:, None], tokens)
             remaining = jnp.where(active, remaining - 1, remaining)
-            return (tokens, cache, remaining), nxt
+            return (tokens, cache, remaining, badacc | bad), nxt
 
-        (_, cache, _), toks = jax.lax.scan(
-            body, (tokens, cache, remaining), None, length=k
+        badacc = jnp.zeros(remaining.shape, bool)
+        (_, cache, _, badacc), toks = jax.lax.scan(
+            body, (tokens, cache, remaining, badacc), None, length=k
         )
-        return toks.T, cache                                 # [B, k]
+        return toks.T, badacc, cache                         # [B, k], [B]
 
     # ------------------------------------------------- paged jit wrappers
     # Same signatures as the contiguous impls: gather the page pool into the
@@ -475,34 +554,35 @@ class ServingEngine:
         dense = _paged_view(cache, self.page_size, self.max_len)
         start = jax.lax.dynamic_index_in_dim(cache["pos"], slot,
                                              keepdims=False)
-        tok, dense = self._prefill_chunk_impl(params, tokens, dense, slot,
-                                              n_valid)
+        tok, bad, dense = self._prefill_chunk_impl(params, tokens, dense,
+                                                   slot, n_valid)
         C = tokens.shape[1]
         B, S = cache["kpos"].shape
         row = (start + jnp.arange(C, dtype=jnp.int32)) % S
         rows = jnp.full((B, C), -1, jnp.int32).at[slot].set(row)
-        return tok, _paged_commit(cache, dense, rows, self.page_size)
+        return tok, bad, _paged_commit(cache, dense, rows, self.page_size)
 
     def _paged_prefill_multi_impl(self, params, tokens, cache, slots,
                                   n_valid, fresh, is_real):
         dense = _paged_view(cache, self.page_size, self.max_len)
         start = jnp.where(fresh, 0, jnp.take(cache["pos"], slots))   # [P]
-        tok, dense = self._prefill_multi_impl(params, tokens, dense, slots,
-                                              n_valid, fresh, is_real)
+        tok, bad, dense = self._prefill_multi_impl(params, tokens, dense,
+                                                   slots, n_valid, fresh,
+                                                   is_real)
         C = tokens.shape[1]
         B, S = cache["kpos"].shape
         row = (start[:, None] + jnp.arange(C, dtype=jnp.int32)[None, :]) % S
         row = jnp.where(is_real[:, None], row, -1)       # pad rows: no write
         rows = jnp.full((B, C), -1, jnp.int32).at[slots].set(row)
-        return tok, _paged_commit(cache, dense, rows, self.page_size)
+        return tok, bad, _paged_commit(cache, dense, rows, self.page_size)
 
     def _paged_decode_impl(self, params, tokens, cache, active):
         dense = _paged_view(cache, self.page_size, self.max_len)
         prev = cache["pos"]
-        tok, dense = self._decode_masked(params, tokens, dense, active)
+        tok, bad, dense = self._decode_masked(params, tokens, dense, active)
         S = cache["kpos"].shape[1]
         rows = jnp.where(active, prev % S, -1)[:, None]  # [B, 1]
-        return tok, _paged_commit(cache, dense, rows, self.page_size)
+        return tok, bad, _paged_commit(cache, dense, rows, self.page_size)
 
     def _paged_decode_horizon_impl(self, params, tokens, cache, remaining,
                                    *, k):
@@ -511,20 +591,20 @@ class ServingEngine:
         # amortized exactly like its host syncs
         dense = _paged_view(cache, self.page_size, self.max_len)
         prev = cache["pos"]
-        toks, dense = self._decode_horizon_impl(params, tokens, dense,
-                                                remaining, k=k)
+        toks, bad, dense = self._decode_horizon_impl(params, tokens, dense,
+                                                     remaining, k=k)
         S = cache["kpos"].shape[1]
         t = jnp.arange(k, dtype=jnp.int32)[None, :]
         rows = jnp.where(t < remaining[:, None],
                          (prev[:, None] + t) % S, -1)    # [B, k]
-        return toks, _paged_commit(cache, dense, rows, self.page_size)
+        return toks, bad, _paged_commit(cache, dense, rows, self.page_size)
 
     # ------------------------------------------------------------ lifecycle
     def submit(self, request: Request) -> None:
         P, G = len(request.prompt), request.max_new_tokens
         need = required_cache_len(P, G, self.prefill_chunk)
         if need > self.max_len:
-            raise ValueError(
+            raise RequestTooLarge(
                 f"request {request.rid}: needs {need} cache positions "
                 f"(prompt {P}, gen {G}, chunk {self.prefill_chunk}) "
                 f"but max_len={self.max_len}"
@@ -534,37 +614,149 @@ class ServingEngine:
             if n_pages > self.pool.num_pages:
                 # would head-of-line block forever — even an empty pool
                 # could never map it
-                raise ValueError(
+                raise RequestTooLarge(
                     f"request {request.rid}: needs {n_pages} pages "
                     f"(page_size {self.page_size}) but the pool only has "
                     f"{self.pool.num_pages}"
                 )
-        self.scheduler.submit(request)
+        if self._draining:
+            self.stats["shed"] += 1
+            raise QueueFull(
+                f"request {request.rid}: engine is draining — admission "
+                f"is closed"
+            )
+        try:
+            self.scheduler.submit(request)
+        except QueueFull:
+            self.stats["shed"] += 1
+            raise
+
+    def _drop_result(self, req: Request, status: str,
+                     tokens: Sequence[int] = (),
+                     admitted_at: Optional[float] = None) -> None:
+        """Record a result for a request dropped OUTSIDE a slot (shed from
+        the queue, or reaped while parked)."""
+        self.results[req.rid] = RequestResult(
+            rid=req.rid, prompt_len=len(req.prompt), tokens=list(tokens),
+            arrival=req.arrival,
+            admitted_at=self.clock if admitted_at is None else admitted_at,
+            finished_at=self.clock, status=status,
+        )
+
+    def _next_admission(self) -> Optional[Request]:
+        """The next admission candidate: the head of the queue once it has
+        arrived — after reaping cancelled/expired heads (they shed here, at
+        exactly the tick a free slot would otherwise have admitted them)."""
+        while True:
+            req = self.scheduler.peek_ready(self.clock)
+            if req is None:
+                return None
+            if req.rid in self._cancelled:
+                self.scheduler.drop_head()
+                self._cancelled.discard(req.rid)
+                self._drop_result(req, "cancelled")
+                self.stats["cancelled"] += 1
+                continue
+            if req.deadline is not None and req.deadline <= self.clock:
+                self.scheduler.drop_head()
+                self._drop_result(req, "expired")
+                self.stats["expired"] += 1
+                continue
+            return req
+
+    def _next_parked(self) -> Optional[_Parked]:
+        """The parked head due for resumption, reaping cancelled/expired
+        parked entries (their partial tokens are returned)."""
+        while self._parked:
+            parked = self._parked[0]
+            req = parked.req
+            if req.rid in self._cancelled:
+                self._parked.popleft()
+                self._cancelled.discard(req.rid)
+                self._drop_result(req, "cancelled", tokens=parked.generated,
+                                  admitted_at=parked.admitted_at)
+                self.stats["cancelled"] += 1
+                continue
+            if req.deadline is not None and req.deadline <= self.clock:
+                self._parked.popleft()
+                self._drop_result(req, "expired", tokens=parked.generated,
+                                  admitted_at=parked.admitted_at)
+                self.stats["expired"] += 1
+                continue
+            return parked
+        return None
+
+    def _resume_request(self, parked: _Parked) -> Request:
+        """The internal request a parked entry resumes as: original prompt
+        plus everything generated before the preemption, owing the
+        remainder of the budget. Re-prefilling that prompt reproduces the
+        victim's cache state exactly (prefill and decode agree on every
+        cached position — the naive-oracle parity), and the prefix index
+        remaps whatever published victim pages survived instead."""
+        req = parked.req
+        return Request(
+            rid=req.rid,
+            prompt=list(req.prompt) + [int(t) for t in parked.generated],
+            max_new_tokens=req.max_new_tokens - len(parked.generated),
+            arrival=req.arrival,
+            deadline=req.deadline,
+            priority=req.priority,
+        )
 
     def _admit(self) -> None:
+        """Admission: parked (preempted) requests resume first — they were
+        already admitted once, so a drain still serves them — then the FIFO
+        queue (closed while draining)."""
         if self.paged:
             return self._admit_paged()
-        while self.pool.n_free:
-            req = self.scheduler.pop_ready(self.clock)
+        pool = self.pool
+        while pool.n_free:
+            parked = self._next_parked()
+            if parked is not None:
+                self._parked.popleft()
+                req = self._resume_request(parked)
+                # fast path: defer the slot's bookkeeping reset into the
+                # first jitted prefill chunk, like any fresh admission
+                slot = pool.allocate(reset=not self.fast)
+                self._inflight[slot] = _InFlight(
+                    req=req, slot=slot, admitted_at=parked.admitted_at,
+                    fresh=self.fast, prior=list(parked.generated),
+                    orig_req=parked.req,
+                )
+                self.stats["resumed"] += 1
+                continue
+            if self._draining:
+                return
+            req = self._next_admission()
             if req is None:
                 return
+            self.scheduler.pop_ready(self.clock)
             # fast path: defer the slot's bookkeeping reset into the first
             # jitted prefill chunk (fresh mask) — admission costs 0 dispatches
-            slot = self.pool.allocate(reset=not self.fast)
+            slot = pool.allocate(reset=not self.fast)
             self._inflight[slot] = _InFlight(
                 req=req, slot=slot, admitted_at=self.clock, fresh=self.fast
             )
 
     def _admit_paged(self) -> None:
-        """Page-aware FIFO admission: peek the head, map its shared prefix
-        pages from the index, and admit only when the pool can cover the
-        rest — evicting LRU index entries first, and blocking head-of-line
-        (like a missing slot would) when it still doesn't fit."""
+        """Page-aware FIFO admission: peek the candidate (parked resumes
+        first), map its shared prefix pages from the index, and admit only
+        when the pool can cover the rest — climbing the exhaustion ladder
+        first: (1) evict LRU prefix-index entries, (2) preempt
+        strictly-lower-priority in-flight requests (most recently admitted
+        first), and finally (3) block head-of-line, exactly like a missing
+        slot would."""
         pool = self.pool
         while pool.n_free:
-            req = self.scheduler.peek_ready(self.clock)
-            if req is None:
-                return
+            parked = self._next_parked()
+            if parked is not None:
+                req = self._resume_request(parked)
+            else:
+                if self._draining:
+                    return
+                req = self._next_admission()
+                if req is None:
+                    return
             P, G = len(req.prompt), req.max_new_tokens
             need = required_cache_len(P, G, self.prefill_chunk)
             shared: list = []
@@ -580,31 +772,212 @@ class ServingEngine:
                 reuse = (min(len(pages) * pg, P - 1) // C) * C
                 shared = pages[: -(-reuse // pg)]
             fresh_needed = pool.pages_needed(need, reuse)
-            if (fresh_needed > pool.n_free_pages
-                    and self.prefix_index is not None):
-                protect = set(shared)
-                while (fresh_needed > pool.n_free_pages
-                       and self.prefix_index.evict_lru(pool, protect)):
-                    pass
-            if fresh_needed > pool.n_free_pages:
+            if not self._cover_pages(fresh_needed, shared, req.priority):
                 return                      # head-of-line blocks on pages
-            self.scheduler.pop_ready(self.clock)
+            if parked is not None:
+                self._parked.popleft()
+            else:
+                self.scheduler.pop_ready(self.clock)
             slot = pool.allocate_pages(need, shared=shared, reuse_len=reuse)
             self._inflight[slot] = _InFlight(
-                req=req, slot=slot, admitted_at=self.clock, prefilled=reuse,
+                req=req, slot=slot,
+                admitted_at=(self.clock if parked is None
+                             else parked.admitted_at),
+                prefilled=reuse,
+                prior=(list(parked.generated) if parked is not None else []),
+                orig_req=(parked.req if parked is not None else None),
             )
+            if parked is not None:
+                self.stats["resumed"] += 1
 
-    def _retire(self, fl: _InFlight, at: Optional[float] = None) -> None:
-        self.results[fl.req.rid] = RequestResult(
-            rid=fl.req.rid,
-            prompt_len=len(fl.req.prompt),
-            tokens=list(fl.generated),
-            arrival=fl.req.arrival,
+    def _cover_pages(self, fresh_needed: int, shared: Sequence[int],
+                     priority: int) -> bool:
+        """Climb the exhaustion ladder until ``fresh_needed`` pages are
+        free: evict LRU index entries, then preempt strictly-lower-priority
+        victims (each preemption publishes the victim's computed pages, so
+        eviction runs again behind it). Returns False when the ladder is
+        exhausted and the candidate must block head-of-line."""
+        pool = self.pool
+
+        def evict():
+            if self.prefix_index is None:
+                return
+            protect = set(shared)
+            while (fresh_needed > pool.n_free_pages
+                   and self.prefix_index.evict_lru(pool, protect)):
+                pass
+
+        evict()
+        while fresh_needed > pool.n_free_pages:
+            victim = self._select_victim(priority)
+            if victim is None:
+                return False
+            self._preempt_one(victim)
+            evict()
+        return True
+
+    def _retire(self, fl: _InFlight, at: Optional[float] = None,
+                status: str = "ok") -> None:
+        req = fl.orig_req or fl.req
+        self.results[req.rid] = RequestResult(
+            rid=req.rid,
+            prompt_len=len(req.prompt),
+            tokens=fl.prior + list(fl.generated),
+            arrival=req.arrival,
             admitted_at=fl.admitted_at,
             finished_at=self.clock if at is None else at,
+            status=status,
         )
         del self._inflight[fl.slot]
         self.pool.release(fl.slot)
+
+    def _quarantine(self, fl: _InFlight, at: Optional[float] = None) -> None:
+        """Retire a row whose dispatch produced non-finite logits: its slot
+        (and pages) are reclaimed, the tokens of the poisoned dispatch are
+        dropped, and the tokens generated before it are returned with
+        status "quarantined". Row independence means no other slot saw the
+        poison. The row's pages are NOT published to the prefix index
+        (nothing after the last finite sync can be trusted)."""
+        self._inject_bad.discard(fl.req.rid)
+        self._retire(fl, at=at, status="quarantined")
+        self.stats["quarantined"] += 1
+
+    def _select_victim(self, priority: int) -> Optional[_InFlight]:
+        """Preemption victim for an admission at ``priority``: a
+        strictly-lower-priority in-flight request, most recently admitted
+        first (it has the least sunk work; ties broken by slot id for
+        determinism), skipping victims whose resume request could never be
+        re-admitted (prompt + generated can outgrow the ring: prefill
+        re-pads to chunk multiples)."""
+        cands = [fl for fl in self._inflight.values()
+                 if fl.req.priority < priority and self._resumable(fl)]
+        if not cands:
+            return None
+        return max(cands, key=lambda fl: (fl.admitted_at, fl.slot))
+
+    def _resumable(self, fl: _InFlight) -> bool:
+        """Whether a preempted ``fl`` could be admitted again: its resume
+        prompt (original prompt + everything generated) must still fit the
+        ring and the page pool after prefill-chunk padding."""
+        P = len(fl.req.prompt) + len(fl.generated)
+        G = fl.remaining
+        if G < 1:
+            return False
+        need = required_cache_len(P, G, self.prefill_chunk)
+        if need > self.max_len:
+            return False
+        if self.paged and -(-need // self.page_size) > self.pool.num_pages:
+            return False
+        return True
+
+    def _preempt_one(self, fl: _InFlight) -> None:
+        """Preempt ``fl``: publish its computed pages to the prefix index
+        (page remapping — a resume maps them back instead of recomputing;
+        if pool pressure evicts them first, resume re-prefills, still
+        bit-identical), park the request host-side, and release the slot.
+
+        The cache's valid positions cover the prompt plus all generated
+        tokens EXCEPT the last (its KV lands with the next decode feed), so
+        that is exactly the token prefix published."""
+        if self.prefix_index is not None:
+            if fl.prefill_done:
+                covered = list(fl.req.prompt) + fl.generated[:-1]
+            else:
+                # mid-prefill: the committed chunks cover prompt[:prefilled]
+                covered = list(fl.req.prompt[:fl.prefilled])
+            if len(covered) >= self.page_size:
+                self.prefix_index.publish(covered, self.pool, fl.slot)
+        self._parked.append(_Parked(
+            req=fl.orig_req or fl.req,
+            generated=fl.prior + list(fl.generated),
+            admitted_at=fl.admitted_at,
+        ))
+        del self._inflight[fl.slot]
+        self.pool.release(fl.slot)
+        self.stats["preempted"] += 1
+
+    def preempt(self, rid: int) -> None:
+        """Manually preempt an in-flight request by id: its slot and pages
+        are released and the request parks host-side, resuming through
+        normal admission (before any queued request) with bit-identical
+        final tokens. Raises KeyError for a request not in flight and
+        ValueError when the resume could never fit (see ``_resumable``)."""
+        for fl in self._inflight.values():
+            if fl.req.rid == rid:
+                if not self._resumable(fl):
+                    raise ValueError(
+                        f"request {rid} cannot be preempted: its resume "
+                        f"prompt would exceed the engine's capacity"
+                    )
+                self._preempt_one(fl)
+                return
+        raise KeyError(f"request {rid} is not in flight")
+
+    def cancel(self, rid: int) -> bool:
+        """Client cancellation. Queued and parked requests are dropped at
+        the next step boundary; an in-flight request is removed at its next
+        step/horizon boundary, returning the tokens generated so far with
+        status "cancelled". Returns False when the rid is unknown (already
+        finished, or never submitted)."""
+        if any(fl.req.rid == rid for fl in self._inflight.values()):
+            self._cancelled.add(rid)
+            return True
+        if any(p.req.rid == rid for p in self._parked):
+            self._cancelled.add(rid)
+            return True
+        req = self.scheduler.remove(rid)
+        if req is not None:
+            # dropped from the queue immediately; the result is stamped
+            # with the current clock, same as a boundary reap
+            self._drop_result(req, "cancelled")
+            self.stats["cancelled"] += 1
+            return True
+        return False
+
+    def request_drain(self) -> None:
+        """Graceful drain (the SIGTERM contract): close admission — new
+        ``submit`` calls shed with ``QueueFull``, queued requests stay
+        unserved — but finish everything in flight INCLUDING parked
+        (preempted) requests, which were already admitted once."""
+        self._draining = True
+
+    @property
+    def draining(self) -> bool:
+        return self._draining
+
+    def _reap(self) -> None:
+        """Step-boundary reaping: cancel and expire in-flight requests
+        (their partial tokens are returned; pages reclaimed atomically via
+        the normal release path). Queued/parked reaping happens in
+        admission, at the tick a slot would have considered them."""
+        for slot in sorted(self._inflight):
+            fl = self._inflight[slot]
+            rid = fl.req.rid
+            if rid in self._cancelled:
+                self._cancelled.discard(rid)
+                self._retire(fl, status="cancelled")
+                self.stats["cancelled"] += 1
+            elif (fl.req.deadline is not None
+                    and fl.req.deadline <= self.clock):
+                self._retire(fl, status="expired")
+                self.stats["expired"] += 1
+
+    def check_invariants(self) -> None:
+        """Audit the pool against every external page pin the engine knows
+        about (the prefix index); raises AssertionError on violation. The
+        chaos harness calls this after every step; ``REPRO_POOL_CHECK=1``
+        turns it on per-step everywhere."""
+        ext: dict[int, int] = {}
+        if self.prefix_index is not None:
+            for page in self.prefix_index.pages():
+                ext[page] = ext.get(page, 0) + 1
+        self.pool.check_invariants(external_refs=ext)
+
+    def inject_bad(self, rid: int) -> None:
+        """Chaos hook: treat ``rid``'s row as non-finite at its next host
+        sync (prefill completion or decode boundary) — exercises the
+        quarantine path deterministically without poisoning device state."""
+        self._inject_bad.add(rid)
 
     def _finish_prefill(self, fl: _InFlight, first: int) -> None:
         if self.prefix_index is not None:
@@ -627,7 +1000,7 @@ class ServingEngine:
             n = min(C, len(prompt) - fl.prefilled)
             chunk = np.zeros((1, C), np.int32)
             chunk[0, :n] = prompt[fl.prefilled:fl.prefilled + n]
-            tok, self.pool.cache = self._prefill_fn(
+            tok, bad, self.pool.cache = self._prefill_fn(
                 self.params, jnp.asarray(chunk), self.pool.cache,
                 jnp.int32(slot), jnp.int32(n),
             )
@@ -635,8 +1008,14 @@ class ServingEngine:
             self.stats["prefill_chunks"] += 1
             self.stats["prefill_dispatches"] += 1
             if fl.prefill_done:
+                # bad is examined only at syncs that happen anyway (here:
+                # prefill completion) — NaN quarantine costs zero extra
+                # host round trips
                 self.stats["host_syncs"] += 1
-                self._finish_prefill(fl, int(tok[0]))
+                if bool(bad[0]) or fl.req.rid in self._inject_bad:
+                    self._quarantine(fl)
+                else:
+                    self._finish_prefill(fl, int(tok[0]))
 
     def _prefill_phase_fast(self) -> None:
         """One [P, C] dispatch covering every prefilling slot (P padded to
@@ -667,7 +1046,7 @@ class ServingEngine:
                 is_real[i] = True
             else:
                 slots[i] = next(pads)
-        tok, self.pool.cache = self._prefill_multi_fn(
+        tok, bad, self.pool.cache = self._prefill_multi_fn(
             self.params, jnp.asarray(tokens), self.pool.cache,
             jnp.asarray(slots), jnp.asarray(n_valid), jnp.asarray(fresh),
             jnp.asarray(is_real),
@@ -686,9 +1065,14 @@ class ServingEngine:
                 finishers.append(i)
         if finishers:
             tok_np = np.asarray(tok)      # materialize once for all rows
+            bad_np = np.asarray(bad)
             self.stats["host_syncs"] += 1
             for i in finishers:
-                self._finish_prefill(pending[i], int(tok_np[i]))
+                fl = pending[i]
+                if bool(bad_np[i]) or fl.req.rid in self._inject_bad:
+                    self._quarantine(fl)
+                else:
+                    self._finish_prefill(fl, int(tok_np[i]))
 
     def _decode_phase(self) -> None:
         active = [fl for fl in self._inflight.values()
@@ -700,15 +1084,19 @@ class ServingEngine:
         for fl in active:
             tokens[fl.slot, 0] = fl.cur_token
             active_mask[fl.slot] = True
-        next_tok, self.pool.cache = self._decode_fn(
+        next_tok, bad, self.pool.cache = self._decode_fn(
             self.params, jnp.asarray(tokens), self.pool.cache,
             jnp.asarray(active_mask),
         )
         next_np = np.asarray(next_tok)
+        bad_np = np.asarray(bad)
         self.stats["decode_steps"] += 1
         self.stats["decode_dispatches"] += 1
         self.stats["host_syncs"] += 1
         for fl in active:
+            if bool(bad_np[fl.slot]) or fl.req.rid in self._inject_bad:
+                self._quarantine(fl)
+                continue
             tok = int(next_np[fl.slot])
             fl.generated.append(tok)
             fl.cur_token = tok
@@ -727,6 +1115,14 @@ class ServingEngine:
             # a prefilling slot advances one chunk per engine tick; a long
             # horizon would starve it, so fall back to stepwise cadence
             return 1
+        deadlines = [fl.req.deadline for fl in self._inflight.values()
+                     if fl.req.deadline is not None]
+        if deadlines:
+            # expiry is reaped at step starts (clock >= deadline); the
+            # horizon must not coast past the earliest one, so the reap
+            # lands on the same tick as the stepwise path (the deadline
+            # twin of the arrival cap below)
+            k = min(k, max(1, int(math.ceil(min(deadlines) - self.clock))))
         if self.pool.n_free:
             nxt = self.scheduler.peek_arrival()
             if nxt is not None:
@@ -754,15 +1150,22 @@ class ServingEngine:
             # cap at k: the scan must not generate past this horizon even if
             # bookkeeping and the device view of the budget ever diverged
             remaining[fl.slot] = min(fl.remaining, k)
-        toks, self.pool.cache = self._decode_horizon_fn(
+        toks, bad, self.pool.cache = self._decode_horizon_fn(
             self.params, jnp.asarray(tokens), self.pool.cache,
             jnp.asarray(remaining), k=k,
         )
         toks_np = np.asarray(toks)        # the horizon's single host sync
+        bad_np = np.asarray(bad)
         self.stats["decode_steps"] += k
         self.stats["decode_dispatches"] += 1
         self.stats["host_syncs"] += 1
         for fl in active:
+            if bool(bad_np[fl.slot]) or fl.req.rid in self._inject_bad:
+                # the bad flag is OR-ed across the horizon: the whole
+                # horizon's tokens for this row are untrusted and dropped
+                # (other rows are untouched — row independence)
+                self._quarantine(fl, at=self.clock + k - 1)
+                continue
             new = [int(t) for t in toks_np[fl.slot, :k]]
             fl.generated.extend(new)
             fl.cur_token = new[-1]
@@ -774,10 +1177,12 @@ class ServingEngine:
         return k
 
     def step(self) -> None:
-        """One engine iteration: admit → chunked prefill → batched decode.
-        On the fast path a fused decode horizon advances the engine clock by
-        K ticks (one tick per generated-token step, matching the stepwise
-        path's timeline)."""
+        """One engine iteration: reap (deadlines/cancellations) → admit →
+        chunked prefill → batched decode. On the fast path a fused decode
+        horizon advances the engine clock by K ticks (one tick per
+        generated-token step, matching the stepwise path's timeline)."""
+        t0 = time.monotonic()
+        self._reap()
         self._admit()
         occ_pre = len(self._inflight) / self.num_slots
         if self.fast:
@@ -797,15 +1202,23 @@ class ServingEngine:
             self.stats["occupancy_sum"] += occ_pre
         self.stats["engine_steps"] += ticks
         self.clock += float(ticks)
+        if self.straggler.observe(self.stats["engine_steps"],
+                                  time.monotonic() - t0):
+            self.stats["straggler_steps"] += 1
+        if self._pool_check:
+            self.check_invariants()
 
     def run(self, requests: Optional[Sequence[Request]] = None
             ) -> dict[int, RequestResult]:
         """Submit ``requests`` (if given), step until fully drained, and
         return — draining ``self.results`` so a long-lived engine doesn't
-        retain every request it ever served."""
+        retain every request it ever served. While ``request_drain()`` is
+        in effect queued requests are NOT served (admitted + parked work
+        still finishes)."""
         for r in requests or ():
             self.submit(r)
-        while self.scheduler.pending() or self._inflight:
+        while (self._inflight or self._parked
+               or (not self._draining and self.scheduler.pending())):
             self.step()
         out, self.results = self.results, {}
         return out
@@ -894,31 +1307,71 @@ class ServingEngine:
         ``warmup_shapes()`` set: the power-of-two prefill widths and decode
         horizons this engine can dispatch (the stepwise shapes when
         ``fast=False``). Runs tiny throwaway requests through the real loop
-        — results are discarded, stats and clock restored — so a production
-        engine (or a benchmark) serves steady state instead of hitting XLA
-        compiles mid-traffic."""
-        if self.scheduler.pending() or self._inflight:
+        so a production engine (or a benchmark) serves steady state instead
+        of hitting XLA compiles mid-traffic.
+
+        Warmup is side-effect-free: stats, clock, results, straggler EMA,
+        the prefix index (warmup publishes throwaway ``[0]`` prompts into a
+        TEMPORARY index, never the live one) and the pool — cache contents
+        AND bookkeeping, down to free-list order — are all bit-identical
+        before/after (the warmup-pollution regression test pins this)."""
+        if self.scheduler.pending() or self._inflight or self._parked:
             raise RuntimeError(
                 "warmup() needs an idle engine — it runs (and discards) "
                 "throwaway requests through the serving loop"
             )
+        pool = self.pool
         snap_stats, snap_clock = dict(self.stats), self.clock
         snap_order = list(self.scheduler.admitted_order)
-        shapes = self.warmup_shapes()
-        rid = -1
-        widths = sorted(w for j, w in shapes if j.startswith("prefill"))
-        for w in widths:                 # prefill widths (no decode: gen 1)
-            self.run([Request(rid=rid - j, prompt=[0], max_new_tokens=1)
-                      for j in range(w)])
-            rid -= w
-        horizons = sorted(k for j, k in shapes if j.startswith("decode"))
-        for k in horizons:               # decode horizons
-            self.run([Request(rid=rid, prompt=[0],
-                              max_new_tokens=min(k + 1, self.max_len))])
-            rid -= 1
-        self.stats, self.clock = snap_stats, snap_clock
-        self.scheduler.admitted_order.clear()
-        self.scheduler.admitted_order.extend(snap_order)
+        snap_results = dict(self.results)
+        snap_straggler, self.straggler = self.straggler, StragglerMonitor()
+        # deep-copy the cache: every jit donates it, so warmup traffic would
+        # otherwise overwrite the pre-warmup buffers in place
+        snap_cache = jax.tree.map(jnp.copy, pool.cache)
+        snap_free, snap_alloc = set(pool._free), set(pool._allocated)
+        snap_pending = set(pool._pending_reset)
+        if pool.paged:
+            snap_pages = list(pool._free_pages)
+            snap_ref = list(pool._page_ref)
+            snap_slot_pages = {s: list(p) for s, p in
+                               pool._slot_pages.items()}
+            snap_cow = pool.cow_copies
+        snap_index = self.prefix_index
+        if snap_index is not None:
+            self.prefix_index = PrefixIndex(self.page_size)
+        try:
+            shapes = self.warmup_shapes()
+            rid = -1
+            widths = sorted(w for j, w in shapes if j.startswith("prefill"))
+            for w in widths:             # prefill widths (no decode: gen 1)
+                self.run([Request(rid=rid - j, prompt=[0], max_new_tokens=1)
+                          for j in range(w)])
+                rid -= w
+            horizons = sorted(k for j, k in shapes if j.startswith("decode"))
+            for k in horizons:           # decode horizons
+                self.run([Request(rid=rid, prompt=[0],
+                                  max_new_tokens=min(k + 1, self.max_len))])
+                rid -= 1
+        finally:
+            if snap_index is not None:
+                # release the temporary index's page pins, then restore the
+                # live index untouched
+                self.prefix_index.clear(pool)
+                self.prefix_index = snap_index
+            pool.cache = (snap_cache if pool.shardings is None
+                          else jax.device_put(snap_cache, pool.shardings))
+            pool._free, pool._allocated = snap_free, snap_alloc
+            pool._pending_reset = snap_pending
+            if pool.paged:
+                pool._free_pages = snap_pages
+                pool._page_ref = snap_ref
+                pool._slot_pages = snap_slot_pages
+                pool.cow_copies = snap_cow
+            self.stats, self.clock = snap_stats, snap_clock
+            self.results = snap_results
+            self.straggler = snap_straggler
+            self.scheduler.admitted_order.clear()
+            self.scheduler.admitted_order.extend(snap_order)
 
     # ------------------------------------------------------------- metrics
     def mean_occupancy(self) -> float:

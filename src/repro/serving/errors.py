@@ -1,0 +1,55 @@
+"""Typed error taxonomy for serving admission and fault handling.
+
+Every error the serving layer raises at its public surface derives from
+``ServingError`` and carries a ``retryable`` flag — the contract a client
+(or ``launch/serve.py``) branches on: a retryable rejection (queue full,
+pool momentarily exhausted) is back-pressure and should be retried after a
+delay; a non-retryable one (request can never fit) is a hard client error.
+
+Back-compat is deliberate: the pre-taxonomy engine raised bare
+``ValueError`` / ``RuntimeError``, and tests (plus any external caller)
+match on those — so ``RequestTooLarge`` IS-A ``ValueError`` and
+``PoolExhausted`` IS-A ``RuntimeError``. ``except ServingError`` catches
+the whole taxonomy; the old handlers keep working unchanged.
+"""
+from __future__ import annotations
+
+
+class ServingError(Exception):
+    """Base of the serving taxonomy. ``retryable`` tells the client whether
+    the same request can succeed later without modification."""
+
+    retryable = False
+
+
+class RequestTooLarge(ServingError, ValueError):
+    """The request can NEVER be admitted: its ring/page demand exceeds the
+    engine's capacity outright. Not retryable — shrink the request or build
+    a bigger engine."""
+
+
+class QueueFull(ServingError, RuntimeError):
+    """The bounded scheduler queue is at ``max_queue`` — admission
+    back-pressure. Retryable: resubmit after the queue drains."""
+
+    retryable = True
+
+
+class PoolExhausted(ServingError, RuntimeError):
+    """No free slot (or, paged, not enough free pages) right now — the
+    transient end of the exhaustion ladder. Retryable by nature, though the
+    engine normally absorbs this internally (head-of-line blocking,
+    LRU eviction, preemption) rather than surfacing it."""
+
+    retryable = True
+
+
+class RequestCancelled(ServingError):
+    """The client cancelled the request (``engine.cancel``); it was removed
+    at the next step boundary. Not retryable — it was asked to stop."""
+
+
+class DeadlineExceeded(ServingError):
+    """The request's ``deadline`` passed before it completed; the engine
+    shed it (queued) or cut it short (in flight). Retryable only with a new
+    deadline, so ``retryable`` stays False."""

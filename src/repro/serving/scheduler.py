@@ -22,6 +22,8 @@ import collections
 import dataclasses
 from typing import Optional, Sequence
 
+from .errors import QueueFull
+
 
 @dataclasses.dataclass
 class Request:
@@ -32,22 +34,44 @@ class Request:
         from the final prefill logits, the rest from decode steps.
     arrival: engine-clock timestamp (steps) before which the request is
         invisible to admission.
+    deadline: engine-clock timestamp at/after which the request is expired —
+        shed from the queue, or cut short in flight at the next step
+        boundary (partial tokens are returned with status "expired").
+        None (default) = no deadline.
+    priority: preemption class (higher = more important; default 0). FIFO
+        admission order is NOT priority-aware — priority only selects
+        preemption victims: when the pool can't cover the FIFO head, a
+        strictly-lower-priority in-flight request may be preempted (pages
+        released, request parked host-side) to make room.
     """
 
     rid: int
     prompt: Sequence[int]
     max_new_tokens: int
     arrival: float = 0.0
+    deadline: Optional[float] = None
+    priority: int = 0
 
     def __post_init__(self):
         if len(self.prompt) < 1:
             raise ValueError(f"request {self.rid}: empty prompt")
         if self.max_new_tokens < 1:
             raise ValueError(f"request {self.rid}: max_new_tokens must be >= 1")
+        if self.deadline is not None and self.deadline <= self.arrival:
+            raise ValueError(
+                f"request {self.rid}: deadline {self.deadline} is not after "
+                f"arrival {self.arrival}"
+            )
 
 
 class FIFOScheduler:
-    def __init__(self):
+    def __init__(self, max_queue: Optional[int] = None):
+        """``max_queue`` bounds the admission queue: ``submit`` beyond it
+        raises the retryable ``QueueFull`` (back-pressure) instead of
+        growing host memory without limit. None (default) = unbounded."""
+        if max_queue is not None and max_queue < 1:
+            raise ValueError(f"max_queue must be >= 1, got {max_queue}")
+        self.max_queue = max_queue
         self._queue: collections.deque[Request] = collections.deque()
         # admission diagnostics (FIFO-order test anchor) — bounded so a
         # long-lived engine doesn't grow memory with every request served
@@ -56,6 +80,12 @@ class FIFOScheduler:
         )
 
     def submit(self, request: Request) -> None:
+        if (self.max_queue is not None
+                and len(self._queue) >= self.max_queue):
+            raise QueueFull(
+                f"request {request.rid}: queue is at max_queue="
+                f"{self.max_queue} — retry after the engine drains"
+            )
         self._queue.append(request)
 
     def pending(self) -> int:
@@ -81,6 +111,20 @@ class FIFOScheduler:
             req = self._queue.popleft()
             self.admitted_order.append(req.rid)
             return req
+        return None
+
+    def drop_head(self) -> Optional[Request]:
+        """Remove the head WITHOUT recording an admission — the engine sheds
+        an expired or cancelled head here (it never ran)."""
+        return self._queue.popleft() if self._queue else None
+
+    def remove(self, rid: int) -> Optional[Request]:
+        """Remove a queued request by id (client cancellation before
+        admission). O(queue) scan — runs at cancel time, not per step."""
+        for req in self._queue:
+            if req.rid == rid:
+                self._queue.remove(req)
+                return req
         return None
 
 
@@ -110,6 +154,12 @@ class PrefixIndex:
 
     def __len__(self) -> int:
         return len(self._map)
+
+    def pages(self) -> list:
+        """Page ids currently pinned by the index (one per entry; a page
+        indexed under several keys appears once per key) — the external-pin
+        census ``ServingEngine.check_invariants`` audits refcounts against."""
+        return list(self._map.values())
 
     def lookup(self, prompt: Sequence[int]) -> list:
         """Resident pages covering the longest indexed page-aligned prefix

@@ -22,9 +22,18 @@ def synthetic_trace(
     prompt_lens: tuple[int, int] = (4, 32),
     gen_lens: tuple[int, int] = (4, 32),
     mean_interarrival: float = 0.0,
+    deadline_slack: tuple[float, float] = (0.0, 0.0),
+    priority_levels: int = 1,
 ) -> list[Request]:
     """n requests with log-uniform prompt/gen lengths in the given inclusive
-    ranges and Poisson arrivals (engine-step clock)."""
+    ranges and Poisson arrivals (engine-step clock).
+
+    ``deadline_slack=(lo, hi)`` with hi > 0 gives every request a deadline
+    drawn uniformly from ``arrival + [lo, hi]`` engine ticks (lo must be
+    > 0 when used — a deadline must land after the arrival); the default
+    (0, 0) leaves deadlines off. ``priority_levels > 1`` assigns uniform
+    random priorities in ``[0, priority_levels)`` — the preemption-victim
+    classes."""
     rng = np.random.RandomState(seed)
 
     def log_uniform(lo: int, hi: int) -> int:
@@ -39,5 +48,11 @@ def synthetic_trace(
         P = log_uniform(*prompt_lens)
         G = log_uniform(*gen_lens)
         prompt = rng.randint(0, vocab_size, size=P).astype(np.int32)
-        out.append(Request(rid=i, prompt=prompt, max_new_tokens=G, arrival=t))
+        deadline = None
+        if deadline_slack[1] > 0:
+            deadline = t + float(rng.uniform(*deadline_slack))
+        priority = int(rng.randint(0, priority_levels)) \
+            if priority_levels > 1 else 0
+        out.append(Request(rid=i, prompt=prompt, max_new_tokens=G, arrival=t,
+                           deadline=deadline, priority=priority))
     return out

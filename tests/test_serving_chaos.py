@@ -1,0 +1,235 @@
+"""Chaos-harness tests: FaultPlan determinism, empty-plan equivalence,
+seeded mixed-fault parity, a property test of pool bookkeeping under random
+operation sequences, and the (slow-marked) chaos soak.
+
+``CachePool.check_invariants`` is the oracle everywhere: refcount
+conservation (every live page's count equals its slot mappings plus external
+pins), free-heap consistency (free pages exactly once on the heap, never
+mapped), and the slot partition. The property test drives random
+allocate / COW-write / release / pin / unpin / reserve sequences against it;
+the soak drives a real engine through hundreds of requests under a mixed
+FaultPlan and requires zero leaked pages plus bit-identical unfaulted
+tokens.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+from _hyp import given, settings, st
+
+from repro.configs import get_config
+from repro.models import build_model
+from repro.serving import (
+    FaultPlan,
+    PoolExhausted,
+    ServingEngine,
+    run_chaos,
+    synthetic_trace,
+)
+from repro.serving.cache_pool import CachePool
+from repro.serving.chaos import assert_unfaulted_parity
+
+ARCH = "qwen2-0.5b"
+
+
+@pytest.fixture(scope="module")
+def fp32_setup():
+    cfg = get_config(ARCH, smoke=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return model, params, cfg
+
+
+def _engine(model, params, cfg, **kw):
+    kw.setdefault("num_slots", 4)
+    kw.setdefault("max_len", 48)
+    kw.setdefault("prefill_chunk", 8)
+    kw.setdefault("decode_horizon", 4)
+    kw.setdefault("page_size", 8)
+    return ServingEngine(model, params, cfg, **kw)
+
+
+def _trace(cfg, seed=0, n=10):
+    return synthetic_trace(seed, n, vocab_size=cfg.vocab_size,
+                           prompt_lens=(4, 16), gen_lens=(4, 16),
+                           mean_interarrival=1.0, priority_levels=2)
+
+
+# ------------------------------------------------------------------ FaultPlan
+
+def test_fault_plan_seeded_is_deterministic_and_disjoint():
+    rids = list(range(20))
+    a = FaultPlan.seeded(7, rids, n_steps=50)
+    b = FaultPlan.seeded(7, rids, n_steps=50)
+    assert (a.exhaust, a.cancels, a.nans) == (b.exhaust, b.cancels, b.nans)
+    c = FaultPlan.seeded(8, rids, n_steps=50)
+    assert (a.exhaust, a.cancels, a.nans) != (c.exhaust, c.cancels, c.nans)
+    cancel_rids = {r for _, r in a.cancels}
+    nan_rids = {r for _, r in a.nans}
+    assert not (cancel_rids & nan_rids), "fault victims must be disjoint"
+    assert a.faulted_rids() == cancel_rids | nan_rids
+
+
+def test_empty_plan_matches_fault_free_run(fp32_setup):
+    """run_chaos with no faults is just a supervised run: every request ok,
+    bit-identical, zero leaked pages, invariants green every step."""
+    model, params, cfg = fp32_setup
+    trace = _trace(cfg)
+    clean = _engine(model, params, cfg).run(
+        [dataclasses.replace(r) for r in trace])
+    eng = _engine(model, params, cfg)
+    report = run_chaos(eng, [dataclasses.replace(r) for r in trace],
+                       FaultPlan())
+    compared = assert_unfaulted_parity(report, clean, set())
+    assert compared == len(trace)
+    assert report.leaked_pages == 0 and not report.shed_rids
+    assert report.counts["ok"] == len(trace)
+
+
+def test_seeded_chaos_preserves_unfaulted_requests(fp32_setup):
+    """The core chaos invariant on a starved pool: pool-exhaustion holds,
+    cancels, and NaN injections must not perturb any unfaulted request."""
+    model, params, cfg = fp32_setup
+    trace = _trace(cfg, seed=3, n=12)
+    clean = _engine(model, params, cfg).run(
+        [dataclasses.replace(r) for r in trace])
+    eng = _engine(model, params, cfg, num_pages=12)  # 2 slots' worth for 4
+    plan = FaultPlan.seeded(3, [r.rid for r in trace], n_steps=30)
+    report = run_chaos(eng, [dataclasses.replace(r) for r in trace], plan)
+    compared = assert_unfaulted_parity(report, clean, plan.faulted_rids())
+    assert compared >= len(trace) - len(plan.faulted_rids()) - \
+        len(report.shed_rids)
+    assert report.leaked_pages == 0
+    faulted_statuses = {report.outcomes.get(r) for r in plan.faulted_rids()}
+    assert faulted_statuses <= {"ok", "cancelled", "quarantined", "shed"}
+
+
+def test_burst_and_exhaustion_faults(fp32_setup):
+    """Bursts submitted mid-run and reservation windows must drain cleanly;
+    burst requests count toward parity too (they're unfaulted)."""
+    model, params, cfg = fp32_setup
+    trace = _trace(cfg, seed=5, n=6)
+    burst = [dataclasses.replace(r, rid=100 + r.rid)
+             for r in _trace(cfg, seed=6, n=4)]
+    eng = _engine(model, params, cfg, num_pages=12)
+    plan = FaultPlan(exhaust=[(2, 6, 5)], bursts=[(4, burst)])
+    report = run_chaos(eng, [dataclasses.replace(r) for r in trace], plan)
+    assert report.leaked_pages == 0
+    served = {r for r, s in report.outcomes.items() if s == "ok"}
+    assert {r.rid for r in trace} <= served
+    assert {r.rid for r in burst} <= served | set(report.shed_rids)
+
+
+# ------------------------------------------------- pool bookkeeping property
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=10_000))
+def test_pool_invariants_under_random_op_sequences(seed):
+    """Drive a small paged pool through a random mix of allocate / COW /
+    pin / unpin / reserve / release and assert full bookkeeping invariants
+    after EVERY operation."""
+    cfg = get_config(ARCH, smoke=True)
+    model = build_model(cfg)
+    pool = CachePool(model, num_slots=3, max_len=32, page_size=8,
+                     num_pages=8)
+    rng = np.random.RandomState(seed)
+    slots: dict[int, int] = {}     # slot -> committed length
+    pins: list[int] = []           # external (index-style) refs we hold
+    reserved: list[list] = []
+
+    def check():
+        ext: dict[int, int] = {}
+        for p in pins:
+            ext[p] = ext.get(p, 0) + 1
+        pool.check_invariants(external_refs=ext)
+
+    for _ in range(60):
+        op = rng.randint(0, 6)
+        if op == 0 and len(slots) < 3:                   # allocate
+            need = int(rng.randint(1, 33))
+            shared, reuse = [], 0
+            if pins and rng.rand() < 0.5:
+                shared, reuse = [pins[0]], 8
+                need = max(need, reuse + 1)
+            if need > 32:
+                need = 32
+            try:
+                s = pool.allocate_pages(need=need, shared=shared,
+                                        reuse_len=reuse)
+                slots[s] = need
+            except PoolExhausted:
+                pass
+        elif op == 1 and slots:                          # COW write
+            s = list(slots)[rng.randint(len(slots))]
+            start = int(rng.randint(0, slots[s]))
+            try:
+                pool.ensure_writable(s, start, min(slots[s], start + 8))
+            except PoolExhausted:
+                pass                 # no free page for the copy — atomic no-op
+        elif op == 2 and slots:                          # release slot
+            s = list(slots)[rng.randint(len(slots))]
+            pool.release(s)
+            del slots[s]
+        elif op == 3 and slots:                          # pin a live page
+            s = list(slots)[rng.randint(len(slots))]
+            pages = pool.slot_pages(s)
+            p = pages[rng.randint(len(pages))]
+            pool.ref_page(p)
+            pins.append(p)
+        elif op == 4 and pins:                           # unpin
+            pool.deref_page(pins.pop(rng.randint(len(pins))))
+        elif op == 5:                                    # reserve / return
+            if reserved and rng.rand() < 0.5:
+                pool.release_reserved(reserved.pop())
+            else:
+                got = pool.reserve_pages(int(rng.randint(1, 4)))
+                if got:
+                    reserved.append(got)
+        check()
+
+    for s in list(slots):
+        pool.release(s)
+    for p in pins:
+        pool.deref_page(p)
+    for pages in reserved:
+        pool.release_reserved(pages)
+    pool.check_invariants()
+    assert pool.n_free_pages == pool.num_pages
+
+
+def test_check_invariants_catches_corruption(fp32_setup):
+    """The oracle itself must trip on planted corruption — otherwise the
+    whole harness is vacuous."""
+    model, _, _ = fp32_setup
+    pool = CachePool(model, num_slots=2, max_len=32, page_size=8)
+    s = pool.allocate_pages(need=9)
+    page = pool.slot_page(s, 0)
+    pool._page_ref[page] += 1           # phantom ref nobody holds
+    with pytest.raises(AssertionError):
+        pool.check_invariants()
+    pool._page_ref[page] -= 1
+    pool.check_invariants()
+
+
+# ------------------------------------------------------------------ the soak
+
+@pytest.mark.slow
+def test_chaos_soak(fp32_setup):
+    """N >= 200 requests through a starved pool under a seeded mixed
+    FaultPlan: invariants after every step, zero leaked pages at drain,
+    every unfaulted request bit-identical to the fault-free run."""
+    model, params, cfg = fp32_setup
+    trace = synthetic_trace(11, 200, vocab_size=cfg.vocab_size,
+                            prompt_lens=(4, 16), gen_lens=(4, 12),
+                            mean_interarrival=0.5, priority_levels=3)
+    clean = _engine(model, params, cfg).run(
+        [dataclasses.replace(r) for r in trace])
+    eng = _engine(model, params, cfg, num_pages=12)
+    plan = FaultPlan.seeded(11, [r.rid for r in trace], n_steps=250,
+                            n_exhaust=4, n_cancels=5, n_nans=5)
+    report = run_chaos(eng, [dataclasses.replace(r) for r in trace], plan)
+    compared = assert_unfaulted_parity(report, clean, plan.faulted_rids())
+    assert compared >= 185
+    assert report.leaked_pages == 0
+    assert report.counts["preempted"] == report.counts["resumed"]

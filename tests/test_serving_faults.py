@@ -1,0 +1,354 @@
+"""Fault-tolerance tests: typed admission errors, deadlines, cancellation,
+preemption via page remapping, backpressure, warmup isolation, stragglers.
+
+The anchors:
+
+  * **preempt → resume parity** — a request preempted mid-decode (its pages
+    released after remapping the covered prefix into the PrefixIndex) must,
+    once resumed, finish with tokens bit-identical to an uncontended run;
+  * **tick-exact deadlines** — the fast (horizon-scanned) path must expire a
+    request at the same engine tick, with the same partial tokens, as the
+    stepwise reference path;
+  * **warmup isolation** — ``warmup()`` must leave pool contents, page
+    bookkeeping (including free-heap order), the prefix index, and unclaimed
+    results bit-identical to its pre-call state;
+  * **typed errors** — the new taxonomy must stay catchable by the legacy
+    ``ValueError`` / ``RuntimeError`` contracts.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import build_model
+from repro.runtime.fault_tolerance import StragglerMonitor
+from repro.serving import (
+    PoolExhausted,
+    QueueFull,
+    Request,
+    RequestTooLarge,
+    ServingEngine,
+    ServingError,
+)
+
+ARCH = "qwen2-0.5b"
+
+
+@pytest.fixture(scope="module")
+def fp32_setup():
+    cfg = get_config(ARCH, smoke=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return model, params, cfg
+
+
+def _engine(model, params, cfg, **kw):
+    kw.setdefault("num_slots", 2)
+    kw.setdefault("max_len", 32)
+    kw.setdefault("prefill_chunk", 8)
+    kw.setdefault("decode_horizon", 4)
+    return ServingEngine(model, params, cfg, **kw)
+
+
+def _req(rid, p, g, **kw):
+    rng = np.random.RandomState(100 + rid)
+    return Request(rid=rid, prompt=rng.randint(0, 64, size=p).astype(np.int32),
+                   max_new_tokens=g, **kw)
+
+
+# ------------------------------------------------------------- typed errors
+
+def test_error_taxonomy_and_legacy_compat(fp32_setup):
+    """New typed errors subclass the legacy builtins their call sites used to
+    raise, so pre-existing ``except ValueError`` / ``match='cache
+    positions'`` contracts keep working."""
+    model, params, cfg = fp32_setup
+    eng = _engine(model, params, cfg)
+    with pytest.raises(ValueError, match="cache positions"):
+        eng.submit(_req(0, 8, 99))
+    with pytest.raises(RequestTooLarge):
+        eng.submit(_req(0, 8, 99))
+
+    paged = _engine(model, params, cfg, page_size=8, num_pages=2)
+    with pytest.raises(ValueError, match="pages"):
+        paged.submit(_req(0, 17, 4))
+
+    assert issubclass(QueueFull, RuntimeError)
+    assert issubclass(PoolExhausted, RuntimeError)
+    assert issubclass(RequestTooLarge, ValueError)
+    for exc in (QueueFull, PoolExhausted):
+        assert exc("x").retryable, f"{exc.__name__} must be retryable"
+    assert not RequestTooLarge("x").retryable
+    assert issubclass(QueueFull, ServingError)
+
+
+def test_backpressure_bounded_queue_and_shed_stat(fp32_setup):
+    model, params, cfg = fp32_setup
+    eng = _engine(model, params, cfg, max_queue=2)
+    eng.submit(_req(0, 4, 2))
+    eng.submit(_req(1, 4, 2))
+    with pytest.raises(QueueFull, match="max_queue=2"):
+        eng.submit(_req(2, 4, 2))
+    assert eng.stats["shed"] == 1
+    res = eng.run()
+    assert sorted(res) == [0, 1]
+    # queue drained — admission is open again
+    eng.submit(_req(3, 4, 2))
+    assert eng.run()[3].status == "ok"
+    with pytest.raises(ValueError, match="max_queue"):
+        _engine(model, params, cfg, max_queue=0)
+
+
+def test_drain_stops_admission_but_finishes_inflight(fp32_setup):
+    model, params, cfg = fp32_setup
+    eng = _engine(model, params, cfg, num_slots=1)
+    eng.submit(_req(0, 8, 4))
+    eng.submit(_req(1, 8, 4))   # queued behind the single slot
+    eng.step()                  # rid 0 admitted
+    eng.request_drain()
+    assert eng.draining
+    with pytest.raises(QueueFull, match="draining"):
+        eng.submit(_req(2, 4, 2))
+    res = eng.run()
+    assert 0 in res and res[0].status == "ok"
+    assert 1 not in res, "queued request served during drain"
+    assert eng.scheduler.pending() == 1
+
+
+# ----------------------------------------------------------------- deadlines
+
+@pytest.mark.parametrize("paged", [False, True])
+def test_deadline_expiry_tick_exact_fast_vs_reference(fp32_setup, paged):
+    """Both serve paths must reap an expiring request at the same engine
+    tick with the same partial tokens — the fast path's horizon is capped at
+    the nearest deadline so it can't overshoot."""
+    model, params, cfg = fp32_setup
+    kw = {"page_size": 8} if paged else {}
+    outs = {}
+    for fast in (True, False):
+        eng = _engine(model, params, cfg, fast=fast, **kw)
+        eng.submit(_req(0, 8, 12, deadline=5.0))
+        eng.submit(_req(1, 8, 12))          # no deadline: runs to completion
+        res = eng.run()
+        outs[fast] = res
+        assert res[0].status == "expired"
+        assert len(res[0].tokens) < 12
+        assert res[1].status == "ok" and len(res[1].tokens) == 12
+        assert eng.stats["expired"] == 1
+    assert list(outs[True][0].tokens) == list(outs[False][0].tokens)
+    assert outs[True][0].finished_at == outs[False][0].finished_at
+    assert list(outs[True][1].tokens) == list(outs[False][1].tokens)
+
+
+def test_deadline_expired_in_queue_is_shed_without_admission(fp32_setup):
+    model, params, cfg = fp32_setup
+    eng = _engine(model, params, cfg, num_slots=1)
+    eng.submit(_req(0, 8, 16))
+    eng.submit(_req(1, 8, 12, deadline=3.0))  # will expire while queued
+    res = eng.run()
+    assert res[1].status == "expired" and res[1].tokens == []
+    assert eng.stats["expired"] == 1
+    assert res[0].status == "ok" and len(res[0].tokens) == 16
+
+
+def test_deadline_must_follow_arrival():
+    with pytest.raises(ValueError, match="deadline"):
+        Request(rid=0, prompt=[1, 2], max_new_tokens=2,
+                arrival=5.0, deadline=5.0)
+
+
+# -------------------------------------------------------------- cancellation
+
+def test_cancel_queued_inflight_and_unknown(fp32_setup):
+    model, params, cfg = fp32_setup
+    eng = _engine(model, params, cfg, num_slots=1)
+    eng.submit(_req(0, 8, 8))
+    eng.submit(_req(1, 8, 8))
+    assert eng.cancel(1)                      # queued: dropped immediately
+    assert eng.results[1].status == "cancelled"
+    assert eng.results[1].tokens == []
+    eng.step()
+    assert eng.cancel(0)                      # inflight: reaped at boundary
+    res = eng.run()
+    assert res[0].status == "cancelled"
+    assert not eng.cancel(999)
+    assert eng.stats["cancelled"] == 2
+
+
+# --------------------------------------------- preemption via page remapping
+
+def test_manual_preempt_resume_is_bit_identical(fp32_setup):
+    """The tentpole invariant: preempting an in-flight request (remapping
+    its covered prefix into the index, releasing its pages) and resuming it
+    later must reproduce the exact token stream of an uncontended run."""
+    model, params, cfg = fp32_setup
+    trace = [_req(0, 9, 10), _req(1, 5, 6)]
+
+    baseline = _engine(model, params, cfg, page_size=8).run(
+        [dataclasses.replace(r) for r in trace])
+
+    eng = _engine(model, params, cfg, page_size=8)
+    for r in trace:
+        eng.submit(dataclasses.replace(r))
+    for _ in range(20):                     # through prefill + first decode
+        eng.step()
+        if 0 in eng._inflight and eng._inflight[0].generated:
+            break
+    else:
+        raise AssertionError("request never observed mid-decode")
+    eng.preempt(0)
+    assert eng.stats["preempted"] == 1
+    assert 0 not in eng._inflight and len(eng._parked) == 1
+    res = eng.run()
+    assert eng.stats["resumed"] == 1
+    for rid in (0, 1):
+        assert res[rid].status == "ok"
+        assert list(res[rid].tokens) == list(baseline[rid].tokens), (
+            f"rid {rid} diverged after preempt/resume"
+        )
+    assert res[0].prompt_len == 9, "resume must report the ORIGINAL prompt"
+
+    with pytest.raises(KeyError):
+        eng.preempt(123)
+
+
+def test_starved_pool_preempts_low_priority_and_stays_correct(fp32_setup):
+    """Page exhaustion with a higher-priority arrival must walk the ladder
+    to preemption, and every request must still finish bit-identical to an
+    uncontended (full-pool) run."""
+    model, params, cfg = fp32_setup
+    trace = [_req(0, 9, 12, priority=0), _req(1, 9, 12, priority=0),
+             _req(2, 9, 12, priority=1, arrival=2.0)]
+
+    baseline = _engine(model, params, cfg, page_size=8, num_slots=3).run(
+        [dataclasses.replace(r) for r in trace])
+
+    # 8 pages: the two priority-0 requests consume 3 each as they decode,
+    # leaving too few for rid 2 without preempting one of them.
+    eng = _engine(model, params, cfg, page_size=8, num_slots=3, num_pages=8)
+    res = eng.run([dataclasses.replace(r) for r in trace])
+    assert eng.stats["preempted"] >= 1 and \
+        eng.stats["resumed"] == eng.stats["preempted"]
+    for rid in (0, 1, 2):
+        assert res[rid].status == "ok"
+        assert list(res[rid].tokens) == list(baseline[rid].tokens)
+    eng.check_invariants()
+
+
+def test_preempt_rejects_non_resumable(fp32_setup):
+    """A request whose resume-prompt (prompt + generated) would no longer
+    fit the ring must not be preemptible — parking it would strand it."""
+    model, params, cfg = fp32_setup
+    eng = _engine(model, params, cfg, max_len=10, page_size=8,
+                  decode_horizon=1)
+    # P=8, G=3 needs 10 positions; after 1 generated token the resume-prompt
+    # is 9, which pads to 2 prefill chunks (16) — past the 10-position ring.
+    eng.submit(_req(0, 8, 3))
+    for _ in range(20):
+        eng.step()
+        if 0 in eng._inflight and eng._inflight[0].generated:
+            break
+    else:
+        raise AssertionError("request never observed mid-decode")
+    with pytest.raises(ValueError, match="resum"):
+        eng.preempt(0)
+
+
+# ---------------------------------------------------------- warmup isolation
+
+@pytest.mark.parametrize("paged", [False, True])
+def test_warmup_leaves_engine_state_bit_identical(fp32_setup, paged):
+    """Regression: warmup() used to leave its compile probes in the cache
+    pool and prefix index. It must now restore pool contents (bit-exact),
+    page bookkeeping including free-heap ORDER, the index, stats, and any
+    unclaimed results."""
+    model, params, cfg = fp32_setup
+    kw = {"page_size": 8} if paged else {}
+    eng = _engine(model, params, cfg, **kw)
+    # serve something first so there is real state to pollute
+    eng.submit(_req(0, 9, 4))
+    eng.submit(_req(1, 9, 4))
+    while eng._inflight or eng.scheduler.pending():
+        eng.step()
+
+    before_cache = jax.tree.map(np.asarray, eng.pool.cache)
+    before = dict(
+        stats=dict(eng.stats), clock=eng.clock,
+        free=set(eng.pool._free), allocated=set(eng.pool._allocated),
+        results={r: res.tokens for r, res in eng.results.items()},
+    )
+    if paged:
+        before.update(
+            free_pages=list(eng.pool._free_pages),
+            page_ref=list(eng.pool._page_ref),
+            slot_pages={s: list(p) for s, p in eng.pool._slot_pages.items()},
+            index_keys=set(eng.prefix_index._map),
+        )
+
+    eng.warmup()
+
+    after_cache = jax.tree.map(np.asarray, eng.pool.cache)
+    for a, b in zip(jax.tree.leaves(before_cache),
+                    jax.tree.leaves(after_cache)):
+        np.testing.assert_array_equal(a, b)
+    assert dict(eng.stats) == before["stats"]
+    assert eng.clock == before["clock"]
+    assert set(eng.pool._free) == before["free"]
+    assert set(eng.pool._allocated) == before["allocated"]
+    assert {r: res.tokens for r, res in eng.results.items()} \
+        == before["results"]
+    if paged:
+        assert list(eng.pool._free_pages) == before["free_pages"]
+        assert list(eng.pool._page_ref) == before["page_ref"]
+        assert {s: list(p) for s, p in eng.pool._slot_pages.items()} \
+            == before["slot_pages"]
+        assert set(eng.prefix_index._map) == before["index_keys"]
+        eng.check_invariants()
+
+    # and the engine still serves correctly afterwards
+    res = eng.run([_req(2, 9, 4)])
+    assert res[2].status == "ok" and len(res[2].tokens) == 4
+
+
+# ------------------------------------------------------------- NaN quarantine
+
+def test_injected_bad_logits_quarantine_without_poisoning_peers(fp32_setup):
+    model, params, cfg = fp32_setup
+    trace = [_req(0, 8, 6), _req(1, 8, 6)]
+    baseline = _engine(model, params, cfg).run(
+        [dataclasses.replace(r) for r in trace])
+
+    eng = _engine(model, params, cfg)
+    for r in trace:
+        eng.submit(dataclasses.replace(r))
+    eng.inject_bad(0)
+    res = eng.run()
+    assert res[0].status == "quarantined"
+    assert eng.stats["quarantined"] == 1
+    assert res[1].status == "ok"
+    assert list(res[1].tokens) == list(baseline[1].tokens)
+
+
+# ------------------------------------------------------------------ straggler
+
+class _AlwaysSlow:
+    def observe(self, step, dt):
+        return True
+
+
+def test_straggler_monitor_counts_slow_steps(fp32_setup):
+    model, params, cfg = fp32_setup
+    eng = _engine(model, params, cfg, straggler=_AlwaysSlow())
+    eng.run([_req(0, 8, 4)])
+    # one observation per step() call; engine_steps counts horizon TICKS,
+    # so the flagged count is positive but never exceeds the tick count
+    assert 0 < eng.stats["straggler_steps"] <= eng.stats["engine_steps"]
+
+    # the real monitor: flags only multiples of the EMA past warmup
+    mon = StragglerMonitor(threshold=2.0, warmup_steps=1)
+    assert not mon.observe(0, 1.0)       # warmup
+    assert not mon.observe(1, 1.0)       # seeds the EMA
+    assert mon.observe(2, 10.0)          # 10x the EMA
+    assert not mon.observe(3, 1.0)       # slow step didn't poison the EMA
