@@ -48,11 +48,16 @@ def _flatten(node, prefix="") -> dict:
 def _is_throughput(key: str) -> bool:
     """Headline rows only — the full payload rides in the uploaded artifact.
     tok/s is limited to the stepwise reference and the top-horizon fast path
-    (the two ends of the sweep); ratios/speedups always make the table."""
+    (the two ends of the sweep); ratios/speedups always make the table. For
+    the SLO bench (BENCH_slo.json) the headline is goodput and the tail
+    latencies per offered-QPS point, all in deterministic engine ticks."""
     if "speedup" in key or "reduction" in key or "sharded_vs_single" in key:
         return True
     if key.endswith(".tok_s"):
         return "variants.slow" in key or "variants.fast_h8" in key
+    if ("goodput" in key or key.endswith(("ttft_p50", "ttft_p99",
+                                          "per_token_p50", "per_token_p99"))):
+        return True
     return key.endswith("tok_s_sharded") or key.endswith("tok_s_single")
 
 

@@ -1,0 +1,334 @@
+"""SLO goodput benchmark for the async streaming front-end.
+
+Two scenarios over the overload-safe server (``serving.AsyncServer`` +
+``AsyncClient`` retry loop), all in engine-tick time so the numbers are
+bit-deterministic for a seed and immune to CI wall noise:
+
+  * **QPS sweep** — an open-loop Poisson trace offered at each rate in the
+    sweep (arrivals never wait on completions), recording TTFT and
+    per-token p50/p99 plus **goodput-under-SLO** (completed ok AND met the
+    TTFT/per-token bounds) vs offered QPS. The acceptance shape is the
+    knee: goodput tracks offered load below saturation, then flattens and
+    degrades past it — and must NEVER collapse to zero while the circuit
+    breaker is shedding (the breaker + priority rungs keep admitted work
+    finishable instead of letting the queue death-spiral).
+  * **Chaos under load** — the same open-loop client fleet with a seeded
+    ``FaultPlan`` firing mid-load through the server's step hooks (page
+    exhaustion holds, cancels, NaN injections), pool invariants checked
+    after every step. Asserts: goodput degrades during the fault window
+    and recovers after it (per-arrival-window SLO fractions), ZERO leaked
+    pages once holds drain, and every unfaulted request's tokens
+    bit-identical to a fault-free twin run.
+
+Results persist to ``BENCH_slo.json``; the slo-smoke CI job regenerates the
+smoke variant and diffs it against ``BENCH_slo.smoke.json`` on the PR page.
+
+    PYTHONPATH=src python benchmarks/serve_slo.py          # full dims
+    PYTHONPATH=src python benchmarks/serve_slo.py --smoke  # CI smoke
+"""
+from __future__ import annotations
+
+import argparse
+import asyncio
+import dataclasses
+import json
+import pathlib
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import build_model
+from repro.serving import (
+    SLO,
+    AsyncClient,
+    AsyncServer,
+    ChaosReport,
+    CircuitBreaker,
+    FaultInjector,
+    FaultPlan,
+    RetryPolicy,
+    ServingEngine,
+    ShedPolicy,
+    assert_unfaulted_parity,
+    count_leaked_pages,
+    open_loop_trace,
+    run_open_loop,
+    summarize,
+)
+
+DEFAULT_JSON = pathlib.Path(__file__).resolve().parent / "BENCH_slo.json"
+
+
+def make_setup(smoke: bool) -> dict:
+    """Engine dims + sweep. The engine is the chaos-smoke config (4 slots,
+    paged pool) whose decode capacity is ~0.35 req/tick on the 4..16-token
+    trace, so the sweep brackets saturation from ~0.4x to ~2.5x."""
+    cfg = dataclasses.replace(
+        get_config("qwen2-0.5b", smoke=True),
+        name="qwen2-slo-bench" + ("-smoke" if smoke else ""),
+    )
+    base = {
+        "cfg": cfg,
+        "engine": dict(num_slots=4, max_len=48, prefill_chunk=8,
+                       decode_horizon=4, page_size=8, max_queue=8),
+        "prompt_lens": (4, 16), "gen_lens": (4, 16),
+        "slo": SLO(ttft=32.0, per_token=4.0),
+    }
+    if smoke:
+        base.update(rates=(0.15, 0.5, 2.0), n_requests=24,
+                    chaos_rate=0.15, chaos_n=24)
+    else:
+        base.update(rates=(0.1, 0.25, 0.5, 1.0, 2.0), n_requests=48,
+                    chaos_rate=0.15, chaos_n=36)
+    return base
+
+
+def _server(engine, **kw) -> AsyncServer:
+    return AsyncServer(
+        engine,
+        breaker=CircuitBreaker(window=16, failure_threshold=0.5,
+                               min_volume=4, cooldown=12.0),
+        shed=ShedPolicy(),
+        **kw,
+    )
+
+
+def _drive(model, params, setup, trace, *, seed, engine_kw=None,
+           pre_step=(), post_step=(), timeout=None):
+    """One open-loop run on a fresh engine; returns (outcomes, server,
+    engine results, wall seconds)."""
+    kw = dict(setup["engine"])
+    kw.update(engine_kw or {})
+    engine = ServingEngine(model, params, setup["cfg"], **kw)
+    server = _server(engine, pre_step=pre_step, post_step=post_step)
+    client = AsyncClient(server, RetryPolicy(max_attempts=4), seed=seed)
+    t0 = time.perf_counter()
+    outcomes = asyncio.run(run_open_loop(
+        server, client, [dataclasses.replace(r) for r in trace],
+        timeout=timeout))
+    dt = time.perf_counter() - t0
+    return outcomes, server, dict(engine.results), dt
+
+
+# ----------------------------------------------------------------- sweep
+def bench_sweep(model, params, setup: dict, *, seed: int = 0) -> list[dict]:
+    """Goodput / latency percentiles vs offered QPS, with the knee and
+    never-to-zero assertions from the module docstring."""
+    slo = setup["slo"]
+    points = []
+    for rate in setup["rates"]:
+        trace = open_loop_trace(
+            seed, setup["n_requests"], rate, vocab_size=setup["cfg"].vocab_size,
+            prompt_lens=setup["prompt_lens"], gen_lens=setup["gen_lens"],
+            priority_levels=2)
+        outcomes, server, _, dt = _drive(model, params, setup, trace,
+                                         seed=seed)
+        row = {"label": f"qps_{rate:g}", "offered_qps_nominal": rate,
+               "wall_seconds": dt,
+               **summarize(outcomes, slo=slo),
+               "breaker_opens": server.breaker.opens,
+               "admission": {k: v for k, v in server.stats.items()
+                             if k != "results"}}
+        points.append(row)
+        print(f"  qps {rate:g}: offered {row['offered_qps']:.3f} → goodput "
+              f"{row['goodput_qps']:.3f} req/tick "
+              f"({row['goodput_fraction']:.0%}), ttft p50/p99 "
+              f"{row['ttft_p50']:.1f}/{row['ttft_p99']:.1f}, per-token "
+              f"p50/p99 {row['per_token_p50']:.2f}/"
+              f"{row['per_token_p99']:.2f}, breaker opens "
+              f"{row['breaker_opens']}, attempts {row['mean_attempts']:.2f}")
+
+    # --- acceptance shape -------------------------------------------------
+    assert len(points) >= 3, "sweep needs >= 3 offered-QPS points"
+    first, last = points[0], points[-1]
+    assert first["goodput_fraction"] >= 0.9, (
+        f"below saturation goodput should track offered load, got "
+        f"{first['goodput_fraction']:.2f} at {first['label']}")
+    assert last["goodput_fraction"] < first["goodput_fraction"], (
+        "no knee: goodput fraction did not decline past saturation")
+    assert last["goodput_qps"] < 0.9 * last["offered_qps"], (
+        "no knee: goodput still tracks offered load at the top rate")
+    for row in points:
+        assert row["goodput_qps"] > 0, (
+            f"{row['label']}: goodput collapsed to zero"
+            + (" while the breaker was shedding"
+               if row["breaker_opens"] else ""))
+    peak = max(p["goodput_qps"] for p in points)
+    assert last["goodput_qps"] > 0.25 * peak, (
+        "past-saturation goodput collapsed to "
+        f"{last['goodput_qps']:.3f} vs peak {peak:.3f} — overload control "
+        "is supposed to degrade gracefully, not fall off a cliff")
+    return points
+
+
+# ----------------------------------------------------------- chaos-under-load
+def bench_chaos_under_load(model, params, setup: dict, *,
+                           seed: int = 0) -> dict:
+    """Seeded ``FaultPlan`` mid-load through the server's step hooks.
+
+    Victims are drawn (seeded) from the middle third of the trace by
+    arrival, so faults land inside the load and the pre/during/post
+    windows all carry traffic. The fault window is measured in engine
+    ticks from when exhaustion holds first activate to when the last one
+    releases; outcomes are bucketed by arrival tick."""
+    cfg, slo = setup["cfg"], setup["slo"]
+    trace = open_loop_trace(
+        seed + 1, setup["chaos_n"], setup["chaos_rate"],
+        vocab_size=cfg.vocab_size, prompt_lens=setup["prompt_lens"],
+        gen_lens=setup["gen_lens"], priority_levels=2)
+    # headroom run: unbounded queue, rate well under capacity — every
+    # unfaulted request must finish ok in BOTH runs for parity to be exact
+    engine_kw = dict(max_queue=None)
+
+    clean_outcomes, clean_server, clean_results, _ = _drive(
+        model, params, setup, trace, seed=seed, engine_kw=engine_kw)
+    assert all(o.ok for o in clean_outcomes), (
+        "chaos baseline must run fault-free below saturation")
+    total_steps = clean_server.steps
+
+    # the plan: one long page-exhaustion window opening a third of the way
+    # in (half the pool withheld), with seeded cancel + NaN victims from
+    # the middle third of arrivals firing inside it
+    rng = np.random.RandomState(seed)
+    by_arrival = sorted(trace, key=lambda r: r.arrival)
+    third = len(by_arrival) // 3
+    mid = [r.rid for r in by_arrival[third:2 * third]]
+    victims = [int(mid[i]) for i in
+               rng.choice(len(mid), size=min(4, len(mid)), replace=False)]
+    t0_step = max(1, total_steps // 3)
+    num_pages = (setup["engine"]["num_slots"]
+                 * setup["engine"]["max_len"] // setup["engine"]["page_size"])
+    plan = FaultPlan(
+        exhaust=[(t0_step, num_pages // 2, max(8, total_steps // 4))],
+        cancels=[(t0_step + 2, rid) for rid in victims[:2]],
+        nans=[(t0_step + 4, rid) for rid in victims[2:]],
+    )
+
+    window = {"start": None, "end": None}
+    injector_box = {}
+
+    def pre(step):
+        inj = injector_box["inj"]
+        inj.apply_due(step)
+        if inj.holds_active() and window["start"] is None:
+            window["start"] = injector_box["engine"].clock
+
+    def post(step):
+        inj = injector_box["inj"]
+        was = inj.holds_active()
+        inj.release_due(step)
+        if was and not inj.holds_active():
+            window["end"] = injector_box["engine"].clock
+        injector_box["engine"].check_invariants()
+
+    kw = dict(setup["engine"])
+    kw.update(engine_kw)
+    engine = ServingEngine(model, params, cfg, **kw)
+    injector_box["inj"] = FaultInjector(engine, plan)
+    injector_box["engine"] = engine
+    server = _server(engine, pre_step=[pre], post_step=[post])
+    client = AsyncClient(server, RetryPolicy(max_attempts=4), seed=seed)
+    outcomes = asyncio.run(run_open_loop(
+        server, client, [dataclasses.replace(r) for r in trace]))
+    injector_box["inj"].drain()
+    leaked = count_leaked_pages(engine)
+    assert leaked == 0, f"{leaked} pages leaked after the fault window"
+
+    faulted = plan.faulted_rids()
+    report = ChaosReport(results=dict(engine.results),
+                         outcomes={o.rid: o.status for o in outcomes},
+                         counts={}, steps=server.steps,
+                         leaked_pages=leaked, shed_rids=[])
+    compared = assert_unfaulted_parity(report, clean_results, faulted)
+
+    lo, hi = window["start"], window["end"]
+    assert lo is not None and hi is not None and hi > lo, (
+        f"fault window never materialized (start={lo}, end={hi})")
+
+    def bucket(preds):
+        rows = [o for o in outcomes if preds(o.arrival)]
+        met = sum(1 for o in rows if slo.met(o))
+        return {"n": len(rows), "n_slo_met": met,
+                "goodput_fraction": met / len(rows) if rows else float("nan")}
+
+    windows = {
+        "pre": bucket(lambda a: a < lo),
+        "during": bucket(lambda a: lo <= a <= hi),
+        "post": bucket(lambda a: a > hi),
+    }
+    for name, w in windows.items():
+        assert w["n"] > 0, f"no arrivals in the {name!r} window — the plan " \
+            f"must land mid-load (window [{lo:.0f}, {hi:.0f}] ticks)"
+    pre_f, dur_f, post_f = (windows[k]["goodput_fraction"]
+                            for k in ("pre", "during", "post"))
+    assert dur_f <= pre_f, (
+        f"goodput did not degrade inside the fault window "
+        f"(pre {pre_f:.2f} vs during {dur_f:.2f})")
+    assert post_f >= dur_f, (
+        f"goodput did not recover after the fault window "
+        f"(during {dur_f:.2f} vs post {post_f:.2f})")
+    assert post_f >= 0.9 * pre_f, (
+        f"post-fault goodput {post_f:.2f} never returned to the pre-fault "
+        f"level {pre_f:.2f}")
+
+    out = {
+        "n_requests": len(trace),
+        "offered_qps_nominal": setup["chaos_rate"],
+        "fault_window_ticks": [lo, hi],
+        "plan": {"exhaust": plan.exhaust, "cancels": plan.cancels,
+                 "nans": plan.nans},
+        "unfaulted_parity_compared": compared,
+        "leaked_pages": leaked,
+        "windows": windows,
+        "statuses": {s: sum(1 for o in outcomes if o.status == s)
+                     for s in {o.status for o in outcomes}},
+    }
+    print(f"  chaos: fault window [{lo:.0f}, {hi:.0f}] ticks, goodput "
+          f"pre/during/post {pre_f:.2f}/{dur_f:.2f}/{post_f:.2f}, "
+          f"{compared} unfaulted requests bit-identical, 0 leaked pages")
+    return out
+
+
+def main(argv=None) -> dict:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sweep for the CI slo-smoke job")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--json", default=str(DEFAULT_JSON), metavar="PATH")
+    args = ap.parse_args(argv)
+
+    setup = make_setup(args.smoke)
+    cfg = setup["cfg"]
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+
+    slo = setup["slo"]
+    print(f"SLO: ttft <= {slo.ttft:g} ticks, per-token <= "
+          f"{slo.per_token:g} ticks; sweep rates {setup['rates']} req/tick "
+          f"x {setup['n_requests']} requests")
+    sweep = bench_sweep(model, params, setup, seed=args.seed)
+    print(f"chaos under load ({setup['chaos_rate']:g} req/tick x "
+          f"{setup['chaos_n']} requests):")
+    chaos = bench_chaos_under_load(model, params, setup, seed=args.seed)
+
+    payload = {
+        "benchmark": "serve_slo",
+        "backend": jax.default_backend(),
+        "jax": jax.__version__,
+        "smoke": args.smoke,
+        "seed": args.seed,
+        "slo": {"ttft_ticks": slo.ttft, "per_token_ticks": slo.per_token},
+        "engine": setup["engine"],
+        "sweep": sweep,
+        "chaos": chaos,
+    }
+    p = pathlib.Path(args.json)
+    p.write_text(json.dumps(payload, indent=2, sort_keys=True) + "\n")
+    print(f"wrote {p}")
+    return payload
+
+
+if __name__ == "__main__":
+    main()

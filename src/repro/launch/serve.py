@@ -30,6 +30,7 @@ from ..serving import (
     QueueFull,
     Request,
     ServingEngine,
+    open_loop_trace,
     required_cache_len,
     synthetic_trace,
 )
@@ -108,6 +109,38 @@ def main(argv=None):
                     help="bound the admission queue: submissions beyond Q "
                          "shed with the retryable QueueFull error "
                          "(back-pressure). Default: unbounded")
+    ap.add_argument("--serve-async", action="store_true",
+                    help="serve the --trace through the overload-safe async "
+                         "front-end (serving.AsyncServer): per-request token "
+                         "streaming, client retry with backoff + jitter on "
+                         "the retryable taxonomy, circuit breaker, and "
+                         "priority-aware load shedding; reports the SLO view "
+                         "(TTFT / per-token percentiles, goodput)")
+    ap.add_argument("--qps", type=float, default=0.5, metavar="R",
+                    help="with --serve-async: offered Poisson arrival rate "
+                         "in requests per engine tick (open loop)")
+    ap.add_argument("--timeout", type=float, default=None, metavar="T",
+                    help="with --serve-async: per-request client timeout in "
+                         "engine ticks, enforced as the engine deadline "
+                         "(tighter of this and --deadline wins)")
+    ap.add_argument("--retry-attempts", type=int, default=4,
+                    help="with --serve-async: max submission attempts per "
+                         "request (retryable rejections back off with "
+                         "exponential backoff + full jitter)")
+    ap.add_argument("--breaker-cooldown", type=float, default=16.0,
+                    help="with --serve-async: circuit-breaker cooldown in "
+                         "engine ticks before a half-open probe")
+    ap.add_argument("--shed-pressure", type=float, default=0.5,
+                    help="with --serve-async: queue pressure (depth/bound) "
+                         "at which the lowest priority class is shed; "
+                         "deadlines tighten at 1.5x this value and all "
+                         "requests are refused at 2x (capped at 1.0)")
+    ap.add_argument("--straggler-threshold", type=float, default=None,
+                    metavar="X",
+                    help="flag an engine step as a straggler when its wall "
+                         "time exceeds X times the EMA of recent steps "
+                         "(surfaced as stats['straggler_threshold'] and in "
+                         "the final report). Default: the monitor's 2.0")
     ap.add_argument("--deadline", type=float, default=None, metavar="T",
                     help="give every request a deadline of T engine ticks "
                          "after its arrival; expired requests are shed "
@@ -130,6 +163,16 @@ def main(argv=None):
         ap.error("--deadline must be > 0 engine ticks")
     if args.no_prefix_reuse and args.page_size is None:
         ap.error("--no-prefix-reuse needs --page-size")
+    if args.serve_async and not args.trace:
+        ap.error("--serve-async needs --trace N (open-loop arrivals)")
+    if args.serve_async and args.qps <= 0:
+        ap.error("--qps must be > 0 requests/tick")
+    if args.serve_async and args.retry_attempts < 1:
+        ap.error("--retry-attempts must be >= 1")
+    if not 0.0 < args.shed_pressure <= 1.0:
+        ap.error("--shed-pressure must be in (0, 1]")
+    if args.straggler_threshold is not None and args.straggler_threshold <= 1:
+        ap.error("--straggler-threshold must be > 1 (a slowdown multiplier)")
     cli_shape = None
     if args.mesh:
         try:
@@ -254,17 +297,28 @@ def main(argv=None):
         if args.prompt_len < 1 or args.gen_len < 1:
             ap.error("--trace needs --prompt-len/--gen-len >= 1")
         p_lo, g_lo = min(4, args.prompt_len), min(4, args.gen_len)
-        requests = synthetic_trace(
-            args.trace_seed, args.trace, vocab_size=cfg.vocab_size,
-            prompt_lens=(p_lo, args.prompt_len), gen_lens=(g_lo, args.gen_len),
-            mean_interarrival=1.0,
-        )
+        if args.serve_async:
+            # two priority classes so the shedder's lowest-class rung has a
+            # victim population (class 1 survives rung 1)
+            requests = open_loop_trace(
+                args.trace_seed, args.trace, args.qps,
+                vocab_size=cfg.vocab_size,
+                prompt_lens=(p_lo, args.prompt_len),
+                gen_lens=(g_lo, args.gen_len), priority_levels=2,
+            )
+        else:
+            requests = synthetic_trace(
+                args.trace_seed, args.trace, vocab_size=cfg.vocab_size,
+                prompt_lens=(p_lo, args.prompt_len),
+                gen_lens=(g_lo, args.gen_len), mean_interarrival=1.0,
+            )
         if args.deadline is not None:
             requests = [dataclasses.replace(
                 r, deadline=r.arrival + args.deadline) for r in requests]
+        rate = f" at {args.qps:g} req/tick" if args.serve_async else ""
         print(f"trace: {len(requests)} requests, "
               f"prompt {p_lo}..{args.prompt_len}, "
-              f"gen {g_lo}..{args.gen_len}, Poisson arrivals")
+              f"gen {g_lo}..{args.gen_len}, Poisson arrivals{rate}")
     else:
         prompts = np.asarray(
             calibration_tokens(0, args.batch, args.prompt_len, cfg.vocab_size)
@@ -281,12 +335,18 @@ def main(argv=None):
         for r in requests
     )
     max_len = args.max_len or need
+    straggler = None
+    if args.straggler_threshold is not None:
+        from ..runtime.fault_tolerance import StragglerMonitor
+
+        straggler = StragglerMonitor(threshold=args.straggler_threshold)
     engine = ServingEngine(
         model, params, cfg, num_slots=args.slots, max_len=max_len,
         prefill_chunk=C, decode_horizon=args.decode_horizon,
         fast=not args.reference, kv_bits=args.kv_bits, mesh=mesh,
         page_size=args.page_size, num_pages=args.num_pages,
         prefix_reuse=not args.no_prefix_reuse, max_queue=args.max_queue,
+        straggler=straggler,
     )
     layout = (f"paged ({engine.pool.num_pages} pages x {engine.page_size} "
               f"positions, prefix reuse "
@@ -311,21 +371,77 @@ def main(argv=None):
 
     # SIGTERM → graceful drain: stop admitting, finish in-flight + parked,
     # report, exit 0 (modeled on runtime.fault_tolerance.FaultTolerantLoop).
-    prev_handler = signal.signal(
-        signal.SIGTERM, lambda *_: engine.request_drain())
     t0 = time.time()
-    try:
-        shed = []
-        for r in requests:
-            try:
-                engine.submit(r)
-            except QueueFull:
-                shed.append(r.rid)
-        results = engine.run()
-    finally:
-        signal.signal(signal.SIGTERM, prev_handler)
-    dt = time.time() - t0
-    if engine.draining:
+    sigterm: list = []   # the async path drains on normal close too, so the
+    #                      report needs to know whether SIGTERM actually fired
+    if args.serve_async:
+        import asyncio
+
+        from ..serving import (
+            SLO,
+            AsyncClient,
+            AsyncServer,
+            CircuitBreaker,
+            RetryPolicy,
+            ShedPolicy,
+            run_open_loop,
+            summarize,
+        )
+
+        sp = args.shed_pressure
+        server = AsyncServer(
+            engine,
+            breaker=CircuitBreaker(cooldown=args.breaker_cooldown),
+            shed=ShedPolicy(shed_pressure=sp,
+                            tighten_pressure=min(1.0, 1.5 * sp),
+                            refuse_pressure=min(1.0, 2.0 * sp)),
+        )
+        client = AsyncClient(
+            server, RetryPolicy(max_attempts=args.retry_attempts),
+            seed=args.trace_seed)
+        prev_handler = signal.signal(
+            signal.SIGTERM,
+            lambda *_: (sigterm.append(1), server.drain()))
+        try:
+            outcomes = asyncio.run(run_open_loop(
+                server, client, requests, timeout=args.timeout))
+        finally:
+            signal.signal(signal.SIGTERM, prev_handler)
+        dt = time.time() - t0
+        slo = SLO()
+        summary = summarize(outcomes, slo=slo)
+        print(f"async front-end: offered {summary['offered_qps']:.3f} "
+              f"req/tick, goodput {summary['goodput_qps']:.3f} req/tick "
+              f"({summary['goodput_fraction']:.0%} of offered; SLO: ttft <= "
+              f"{slo.ttft:g}, per-token <= {slo.per_token:g} ticks)")
+        print(f"  ttft p50/p99 {summary['ttft_p50']:.1f}/"
+              f"{summary['ttft_p99']:.1f} ticks, per-token p50/p99 "
+              f"{summary['per_token_p50']:.2f}/"
+              f"{summary['per_token_p99']:.2f} ticks, "
+              f"mean attempts {summary['mean_attempts']:.2f}")
+        srv = server.stats
+        print("  admission: " + ", ".join(
+            f"{k}={srv[k]}" for k in
+            ("submitted", "accepted", "shed_breaker", "shed_priority",
+             "shed_refused", "shed_queue", "deadlines_tightened"))
+            + f"; breaker opens={server.breaker.opens}")
+        results = engine.results
+    else:
+        prev_handler = signal.signal(
+            signal.SIGTERM,
+            lambda *_: (sigterm.append(1), engine.request_drain()))
+        try:
+            shed = []
+            for r in requests:
+                try:
+                    engine.submit(r)
+                except QueueFull:
+                    shed.append(r.rid)
+            results = engine.run()
+        finally:
+            signal.signal(signal.SIGTERM, prev_handler)
+        dt = time.time() - t0
+    if sigterm:
         print(f"drain: SIGTERM received — admission stopped, "
               f"{engine.scheduler.pending()} queued requests unserved")
     gen = engine.stats["generated_tokens"]
@@ -349,7 +465,9 @@ def main(argv=None):
     for res in results.values():
         by_status[res.status] = by_status.get(res.status, 0) + 1
     if any(faults.values()) or set(by_status) - {"ok"}:
-        print("faults: " + ", ".join(f"{k}={v}" for k, v in faults.items()))
+        print("faults: " + ", ".join(f"{k}={v}" for k, v in faults.items())
+              + f" (straggler threshold "
+                f"{engine.stats['straggler_threshold']:g}x step EMA)")
         print("results by status: " +
               ", ".join(f"{k}={v}" for k, v in sorted(by_status.items())))
     if not results:

@@ -3,28 +3,55 @@
     engine = ServingEngine.from_quantized(qm, num_slots=8, max_len=128)
     results = engine.run(synthetic_trace(0, 20, vocab_size=qm.cfg.vocab_size))
 
+Or stream per request through the overload-safe async front-end:
+
+    server = AsyncServer(engine)
+    client = AsyncClient(server, RetryPolicy(), seed=0)
+    outcomes = asyncio.run(run_open_loop(server, client, trace))
+
 See engine.py for the step loop, cache_pool.py for the slot lifecycle,
-errors.py for the typed admission taxonomy, and chaos.py for the
-deterministic fault-injection harness.
+errors.py for the typed admission taxonomy, server.py/client.py/loadgen.py
+for the async front-end (circuit breaker, shedding ladder, retry policy,
+open-loop Poisson load), and chaos.py for the deterministic fault-injection
+harness.
 """
 from .cache_pool import CachePool, PoolExhausted
-from .chaos import ChaosReport, FaultPlan, run_chaos
+from .chaos import (
+    ChaosReport,
+    FaultInjector,
+    FaultPlan,
+    assert_unfaulted_parity,
+    count_leaked_pages,
+    run_chaos,
+)
+from .client import AsyncClient, ClientOutcome, RetryPolicy
 from .engine import RequestResult, ServingEngine, required_cache_len
 from .errors import (
+    CircuitOpen,
     DeadlineExceeded,
     QueueFull,
     RequestCancelled,
     RequestTooLarge,
+    ServerOverloaded,
     ServingError,
+    taxonomy,
 )
+from .loadgen import SLO, open_loop_trace, run_open_loop, summarize
 from .scheduler import FIFOScheduler, PrefixIndex, Request
+from .server import AsyncServer, CircuitBreaker, RequestStream, ShedPolicy
 from .trace import synthetic_trace
 
 __all__ = [
+    "AsyncClient",
+    "AsyncServer",
     "CachePool",
     "ChaosReport",
+    "CircuitBreaker",
+    "CircuitOpen",
+    "ClientOutcome",
     "DeadlineExceeded",
     "FIFOScheduler",
+    "FaultInjector",
     "FaultPlan",
     "PoolExhausted",
     "PrefixIndex",
@@ -32,10 +59,21 @@ __all__ = [
     "Request",
     "RequestCancelled",
     "RequestResult",
+    "RequestStream",
     "RequestTooLarge",
+    "RetryPolicy",
+    "SLO",
+    "ServerOverloaded",
     "ServingEngine",
     "ServingError",
+    "ShedPolicy",
+    "assert_unfaulted_parity",
+    "count_leaked_pages",
+    "open_loop_trace",
     "required_cache_len",
     "run_chaos",
+    "run_open_loop",
+    "summarize",
     "synthetic_trace",
+    "taxonomy",
 ]

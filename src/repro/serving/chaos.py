@@ -104,6 +104,92 @@ class ChaosReport:
         return "\n".join(lines)
 
 
+class FaultInjector:
+    """Replays one ``FaultPlan`` against one engine, keyed by step index.
+
+    The harness half of the plan, factored out so two drivers share it
+    bit-for-bit: ``run_chaos`` (manual step loop, below) and the async
+    server's chaos-under-load scenario (``benchmarks/serve_slo.py``), which
+    wires ``apply_due`` / ``release_due`` into ``AsyncServer``'s
+    ``pre_step`` / ``post_step`` hooks. Call ``apply_due(step)`` BEFORE the
+    engine step with that index, ``release_due(step)`` after; ``drain()``
+    returns any still-held pages once the run is over (a plan whose last
+    hold outlives the work must not count as a leak)."""
+
+    def __init__(self, engine, plan: FaultPlan):
+        self.engine = engine
+        self._exhaust = sorted(plan.exhaust)
+        self._cancels = sorted(plan.cancels)
+        self._nans = sorted(plan.nans)
+        self._bursts = sorted(plan.bursts, key=lambda e: e[0])
+        self._holds: list = []    # (release_step, reserved_pages)
+        self.shed_rids: list = []  # burst requests rejected at submit
+
+    @staticmethod
+    def _due(events: list, now: int) -> list:
+        out = []
+        while events and events[0][0] <= now:
+            out.append(events.pop(0))
+        return out
+
+    def pending(self) -> bool:
+        """Whether any fault has yet to fire or any hold to release."""
+        return bool(self._exhaust or self._cancels or self._nans
+                    or self._bursts or self._holds)
+
+    def holds_active(self) -> bool:
+        return bool(self._holds)
+
+    def apply_due(self, step: int) -> None:
+        """Fire every fault scheduled at or before ``step`` (pre-step)."""
+        engine = self.engine
+        for _, n_pages, hold in self._due(self._exhaust, step):
+            if engine.paged:
+                self._holds.append((step + hold,
+                                    engine.pool.reserve_pages(n_pages)))
+        for _, rid in self._due(self._cancels, step):
+            engine.cancel(rid)
+        for _, rid in self._due(self._nans, step):
+            engine.inject_bad(rid)
+        for _, reqs in self._due(self._bursts, step):
+            for r in reqs:
+                try:
+                    # re-stamping arrival can push it past the request's
+                    # deadline — __post_init__ raises ValueError then
+                    engine.submit(dataclasses.replace(
+                        r, arrival=engine.clock))
+                except (ServingError, ValueError):
+                    self.shed_rids.append(r.rid)
+
+    def release_due(self, step: int) -> None:
+        """Return reserved pages whose hold window ended (post-step)."""
+        for release_step, pages in [h for h in self._holds
+                                    if h[0] <= step]:
+            self.engine.pool.release_reserved(pages)
+            self._holds.remove((release_step, pages))
+
+    def drain(self) -> None:
+        """Release every remaining hold unconditionally (end of run)."""
+        for _, pages in self._holds:
+            self.engine.pool.release_reserved(pages)
+        self._holds.clear()
+
+
+def count_leaked_pages(engine) -> int:
+    """Pages still referenced but neither slot-mapped-and-live nor pinned by
+    the ``PrefixIndex`` after a drain — must be zero; anything else is a
+    refcount leak. Contiguous (non-paged) engines trivially report 0."""
+    if not engine.paged:
+        return 0
+    pinned = (set(engine.prefix_index.pages())
+              if engine.prefix_index is not None else set())
+    leaked = 0
+    for p in range(engine.pool.num_pages):
+        if engine.pool.page_ref(p) > 0 and p not in pinned:
+            leaked += 1
+    return leaked
+
+
 def run_chaos(engine, requests: Sequence[Request], plan: FaultPlan, *,
               max_steps: int = 100_000) -> ChaosReport:
     """Serve ``requests`` under ``plan``, checking pool invariants after
@@ -116,61 +202,26 @@ def run_chaos(engine, requests: Sequence[Request], plan: FaultPlan, *,
         except ServingError:
             shed_rids.append(r.rid)
 
-    exhaust = sorted(plan.exhaust)
-    cancels = sorted(plan.cancels)
-    nans = sorted(plan.nans)
-    bursts = sorted(plan.bursts, key=lambda e: e[0])
-    holds: list = []          # (release_step, reserved_pages)
+    injector = FaultInjector(engine, plan)
     results: dict = {}
     step = 0
     base = dict(engine.stats)
 
-    def due(events, now):
-        out = []
-        while events and events[0][0] <= now:
-            out.append(events.pop(0))
-        return out
-
     while (engine._inflight or engine._parked
-           or engine.scheduler.pending() or holds
-           or exhaust or cancels or nans or bursts):
+           or engine.scheduler.pending() or injector.pending()):
         assert step < max_steps, (
             f"chaos run did not drain within {max_steps} steps"
         )
-        for _, n_pages, hold in due(exhaust, step):
-            if engine.paged:
-                holds.append((step + hold,
-                              engine.pool.reserve_pages(n_pages)))
-        for _, rid in due(cancels, step):
-            engine.cancel(rid)
-        for _, rid in due(nans, step):
-            engine.inject_bad(rid)
-        for _, reqs in due(bursts, step):
-            for r in reqs:
-                try:
-                    # re-stamping arrival can push it past the request's
-                    # deadline — __post_init__ raises ValueError then
-                    engine.submit(dataclasses.replace(
-                        r, arrival=engine.clock))
-                except (ServingError, ValueError):
-                    shed_rids.append(r.rid)
+        injector.apply_due(step)
         engine.step()
         step += 1
-        for release_step, pages in [h for h in holds
-                                    if h[0] <= step]:
-            engine.pool.release_reserved(pages)
-            holds.remove((release_step, pages))
+        injector.release_due(step)
         engine.check_invariants()
         results.update(engine.results)
         engine.results = {}
+    shed_rids.extend(injector.shed_rids)
 
-    leaked = 0
-    if engine.paged:
-        pinned = (set(engine.prefix_index.pages())
-                  if engine.prefix_index is not None else set())
-        for p in range(engine.pool.num_pages):
-            if engine.pool.page_ref(p) > 0 and p not in pinned:
-                leaked += 1
+    leaked = count_leaked_pages(engine)
     outcomes = {rid: res.status for rid, res in results.items()}
     for rid in shed_rids:
         outcomes[rid] = "shed"

@@ -306,7 +306,23 @@ class ServingEngine:
         (default) = unbounded.
     straggler: a ``runtime.fault_tolerance.StragglerMonitor`` observing
         per-engine-step wall time (steps slower than ``threshold ×`` the
-        EMA count into ``stats["straggler_steps"]``); None = defaults.
+        EMA count into ``stats["straggler_steps"]``); None = defaults. The
+        monitor's threshold is surfaced as ``stats["straggler_threshold"]``
+        so serve reports can show what "slow" meant.
+
+    **Streaming** (``set_stream_callbacks``): the engine exposes a
+    step-boundary token surface for the async front-end (serving/server.py)
+    — ``on_token(rid, tokens, tick)`` fires at every host sync that
+    materializes new tokens for a request (token ``i`` of the batch landed
+    at engine tick ``tick + i``; a fused horizon delivers its K tokens in
+    one call), and ``on_result(result)`` fires exactly once per request at
+    the moment its ``RequestResult`` is recorded, for EVERY terminal status
+    (ok / expired / cancelled / quarantined — including requests shed from
+    the queue or reaped while parked). A preempted-then-resumed request
+    streams each token exactly once: tokens generated before the preemption
+    were already delivered, and resumption streams only the continuation.
+    Callbacks run synchronously inside ``step()`` at syncs that happen
+    anyway, so streaming adds zero extra host round trips.
     """
 
     def __init__(self, model, params, cfg, *, num_slots: int = 4,
@@ -355,6 +371,10 @@ class ServingEngine:
         self.scheduler = FIFOScheduler(max_queue=max_queue)
         self.straggler = straggler or StragglerMonitor()
         self.clock = 0.0
+        # streaming surface (set_stream_callbacks): fired at existing host
+        # syncs — None (default) keeps the batch submit/run contract alone
+        self._on_token = None
+        self._on_result = None
         self._inflight: dict[int, _InFlight] = {}
         self._parked: collections.deque[_Parked] = collections.deque()
         # rids marked for cancellation while in flight (takes effect at the
@@ -385,6 +405,10 @@ class ServingEngine:
             "expired": 0,             # deadline reaps (queued or in flight)
             "quarantined": 0,         # non-finite rows retired
             "straggler_steps": 0,     # engine steps flagged by the monitor
+            # what "slow" means for the monitor above (a config echo, not a
+            # counter — serve reports print it next to the flagged count)
+            "straggler_threshold": float(getattr(self.straggler,
+                                                 "threshold", 0.0)),
         }
         # every jit donates the pooled cache (argnum 2): the KV pool is
         # updated in place instead of being copied on each call, mirroring
@@ -631,6 +655,25 @@ class ServingEngine:
             self.stats["shed"] += 1
             raise
 
+    def set_stream_callbacks(self, on_token=None, on_result=None) -> None:
+        """Wire the step-boundary streaming surface (see the class
+        docstring): ``on_token(rid, tokens, tick)`` per host sync that
+        materialized tokens, ``on_result(result)`` once per recorded
+        ``RequestResult``. Pass None to detach either."""
+        self._on_token = on_token
+        self._on_result = on_result
+
+    def _emit_tokens(self, fl: _InFlight, tokens: Sequence[int],
+                     tick: float) -> None:
+        if self._on_token is not None:
+            # a resumed request keeps its original rid (_resume_request), so
+            # the stream is continuous across preemption
+            self._on_token(fl.req.rid, list(tokens), tick)
+
+    def _emit_result(self, result: RequestResult) -> None:
+        if self._on_result is not None:
+            self._on_result(result)
+
     def _drop_result(self, req: Request, status: str,
                      tokens: Sequence[int] = (),
                      admitted_at: Optional[float] = None) -> None:
@@ -642,6 +685,7 @@ class ServingEngine:
             admitted_at=self.clock if admitted_at is None else admitted_at,
             finished_at=self.clock, status=status,
         )
+        self._emit_result(self.results[req.rid])
 
     def _next_admission(self) -> Optional[Request]:
         """The next admission candidate: the head of the queue once it has
@@ -830,6 +874,7 @@ class ServingEngine:
         )
         del self._inflight[fl.slot]
         self.pool.release(fl.slot)
+        self._emit_result(self.results[req.rid])
 
     def _quarantine(self, fl: _InFlight, at: Optional[float] = None) -> None:
         """Retire a row whose dispatch produced non-finite logits: its slot
@@ -987,6 +1032,7 @@ class ServingEngine:
         fl.generated.append(first)
         fl.cur_token = first
         self.stats["generated_tokens"] += 1
+        self._emit_tokens(fl, [first], self.clock)
         if fl.done:
             self._retire(fl)
 
@@ -1101,6 +1147,7 @@ class ServingEngine:
             fl.generated.append(tok)
             fl.cur_token = tok
             self.stats["generated_tokens"] += 1
+            self._emit_tokens(fl, [tok], self.clock)
             if fl.done:
                 self._retire(fl)
 
@@ -1170,6 +1217,7 @@ class ServingEngine:
             fl.generated.extend(new)
             fl.cur_token = new[-1]
             self.stats["generated_tokens"] += k
+            self._emit_tokens(fl, new, self.clock)
             if fl.done:
                 # the last token landed on the horizon's final tick — stamp
                 # completion with that tick, matching the stepwise timeline
@@ -1325,6 +1373,9 @@ class ServingEngine:
         snap_order = list(self.scheduler.admitted_order)
         snap_results = dict(self.results)
         snap_straggler, self.straggler = self.straggler, StragglerMonitor()
+        # throwaway warmup traffic must not stream into a wired front-end
+        snap_cbs = (self._on_token, self._on_result)
+        self._on_token = self._on_result = None
         # deep-copy the cache: every jit donates it, so warmup traffic would
         # otherwise overwrite the pre-warmup buffers in place
         snap_cache = jax.tree.map(jnp.copy, pool.cache)
@@ -1370,6 +1421,7 @@ class ServingEngine:
             self.stats, self.clock = snap_stats, snap_clock
             self.results = snap_results
             self.straggler = snap_straggler
+            self._on_token, self._on_result = snap_cbs
             self.scheduler.admitted_order.clear()
             self.scheduler.admitted_order.extend(snap_order)
 

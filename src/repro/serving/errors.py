@@ -53,3 +53,37 @@ class DeadlineExceeded(ServingError):
     """The request's ``deadline`` passed before it completed; the engine
     shed it (queued) or cut it short (in flight). Retryable only with a new
     deadline, so ``retryable`` stays False."""
+
+
+class CircuitOpen(ServingError, RuntimeError):
+    """The async front-end's circuit breaker is open: recent admissions
+    mostly failed, so the server sheds at its own door instead of hammering
+    the engine queue. Retryable — the breaker half-opens after its cooldown
+    and closes again once a probe admission succeeds."""
+
+    retryable = True
+
+
+class ServerOverloaded(ServingError, RuntimeError):
+    """The async front-end's priority-aware load shedder rejected the
+    request: queue pressure crossed a shedding rung for this priority class
+    (low-priority classes shed first; at the highest rung every new request
+    is refused). Retryable: resubmit after backoff — pressure is measured
+    per admission attempt."""
+
+    retryable = True
+
+
+def taxonomy() -> dict:
+    """{class name: retryable flag} for every error in the serving taxonomy
+    (all transitive ``ServingError`` subclasses). The contract test pins
+    this mapping EXACTLY, so a future error class cannot be added — or an
+    existing one change its ``retryable`` flag — without the pin failing
+    loudly and being updated deliberately."""
+    out = {}
+    stack = [ServingError]
+    while stack:
+        cls = stack.pop()
+        out[cls.__name__] = bool(cls.retryable)
+        stack.extend(cls.__subclasses__())
+    return out

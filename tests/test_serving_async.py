@@ -1,0 +1,272 @@
+"""Async streaming front-end tests: token streaming parity, timeouts wired
+to engine deadlines, retry round trips against a real bounded queue, the
+circuit breaker, the priority-aware shedding ladder, graceful drain, and
+whole-run determinism.
+
+Everything runs on the engine-tick clock (no wall-clock timers anywhere in
+the server), so every assertion here is exact — including the comparison of
+two complete open-loop runs, retries and all, byte for byte.
+"""
+import asyncio
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import build_model
+from repro.runtime.fault_tolerance import StragglerMonitor
+from repro.serving import (
+    AsyncClient,
+    AsyncServer,
+    CircuitBreaker,
+    CircuitOpen,
+    QueueFull,
+    Request,
+    RetryPolicy,
+    ServerOverloaded,
+    ServingEngine,
+    ShedPolicy,
+    open_loop_trace,
+    run_open_loop,
+)
+
+ARCH = "qwen2-0.5b"
+
+
+@pytest.fixture(scope="module")
+def fp32_setup():
+    cfg = get_config(ARCH, smoke=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return model, params, cfg
+
+
+def _engine(model, params, cfg, **kw):
+    kw.setdefault("num_slots", 2)
+    kw.setdefault("max_len", 32)
+    kw.setdefault("prefill_chunk", 8)
+    kw.setdefault("decode_horizon", 4)
+    return ServingEngine(model, params, cfg, **kw)
+
+
+def _req(rid, p, g, **kw):
+    rng = np.random.RandomState(100 + rid)
+    return Request(rid=rid, prompt=rng.randint(0, 64, size=p).astype(np.int32),
+                   max_new_tokens=g, **kw)
+
+
+# ------------------------------------------------------------ breaker (unit)
+
+def test_circuit_breaker_lifecycle():
+    br = CircuitBreaker(window=8, failure_threshold=0.5, min_volume=4,
+                        cooldown=10.0)
+    assert br.state == "closed"
+    # below min_volume nothing trips, even at 100% failures
+    for t in range(3):
+        assert br.allow(t)
+        br.record(False, t)
+    assert br.state == "closed"
+    br.record(False, 3.0)
+    assert br.state == "open" and br.opens == 1
+    # open: shed until the cooldown elapses
+    assert not br.allow(4.0) and not br.allow(12.9)
+    # cooldown over → half-open, the allowed submission is the probe
+    assert br.allow(13.0) and br.state == "half_open"
+    br.record(False, 13.0)               # failed probe → re-open
+    assert br.state == "open" and br.opens == 2
+    assert br.allow(23.0) and br.state == "half_open"
+    br.record(True, 23.0)                # successful probe → closed
+    assert br.state == "closed"
+    # the window was cleared: old failures don't linger into the new epoch
+    br.record(False, 24.0)
+    assert br.state == "closed"
+
+
+def test_breaker_trips_on_real_queue_rejections(fp32_setup):
+    """Sustained QueueFull from a bounded queue feeds the breaker window
+    until it opens; the server then sheds with CircuitOpen at its own door
+    (the engine queue is never touched while open)."""
+    model, params, cfg = fp32_setup
+    engine = _engine(model, params, cfg, max_queue=1)
+    server = AsyncServer(engine,
+                         breaker=CircuitBreaker(window=8,
+                                                failure_threshold=0.5,
+                                                min_volume=4, cooldown=16.0),
+                         shed=ShedPolicy(refuse_pressure=10.0,
+                                         shed_pressure=9.0,
+                                         tighten_pressure=9.5))
+    server.submit(_req(0, 4, 2))
+    rejected = 0
+    with pytest.raises(CircuitOpen):
+        for rid in range(1, 20):
+            try:
+                server.submit(_req(rid, 4, 2))
+            except QueueFull:
+                rejected += 1
+    assert rejected >= 3   # fails to fill min_volume alongside the 1 success
+    assert server.breaker.state == "open" and server.breaker.opens == 1
+    submits_before = server.stats["shed_queue"]
+    with pytest.raises(CircuitOpen):
+        server.submit(_req(99, 4, 2))
+    assert server.stats["shed_queue"] == submits_before  # breaker shed first
+
+
+# ------------------------------------------------------------ shedding ladder
+
+def test_priority_shedding_ladder(fp32_setup):
+    """Rungs in documented order as queue pressure climbs: shed the lowest
+    priority class, then tighten accepted deadlines, then refuse all."""
+    model, params, cfg = fp32_setup
+    engine = _engine(model, params, cfg, max_queue=4)
+    server = AsyncServer(engine, breaker=CircuitBreaker(min_volume=100),
+                         shed=ShedPolicy(shed_pressure=0.5,
+                                         tighten_pressure=0.75,
+                                         refuse_pressure=1.0,
+                                         tightened_slack=64.0))
+    server.submit(_req(0, 4, 2))
+    server.submit(_req(1, 4, 2))
+    # pressure now 0.5 — rung 1: lowest class shed, higher class admitted
+    with pytest.raises(ServerOverloaded):
+        server.submit(_req(2, 4, 2, priority=0))
+    assert server.stats["shed_priority"] == 1
+    server.submit(_req(3, 4, 2, priority=1))
+    # pressure 0.75 — rung 2: still admitted, deadline shrunk to now + slack
+    server.submit(_req(4, 4, 2, priority=1))
+    assert server.stats["deadlines_tightened"] == 1
+    queued = {r.rid: r for r in engine.scheduler._queue}
+    assert queued[4].deadline == engine.clock + 64.0
+    assert queued[3].deadline is None        # rung 2 hadn't engaged yet
+    # pressure 1.0 — rung 3: refuse everything, any priority
+    with pytest.raises(ServerOverloaded):
+        server.submit(_req(5, 4, 2, priority=5))
+    assert server.stats["shed_refused"] == 1
+
+
+# ----------------------------------------------------- streaming + timeouts
+
+def test_streaming_matches_batch_engine(fp32_setup):
+    """Per-token streams must be byte-identical (values AND order) to the
+    batch engine's results, with monotonically increasing token ticks."""
+    model, params, cfg = fp32_setup
+    trace = open_loop_trace(3, 8, 0.5, vocab_size=cfg.vocab_size,
+                            prompt_lens=(4, 12), gen_lens=(4, 12))
+    ref = _engine(model, params, cfg).run(
+        [dataclasses.replace(r) for r in trace])
+
+    engine = _engine(model, params, cfg)
+    server = AsyncServer(engine)
+    client = AsyncClient(server, RetryPolicy(), seed=0)
+    outcomes = asyncio.run(run_open_loop(
+        server, client, [dataclasses.replace(r) for r in trace]))
+    assert len(outcomes) == len(trace)
+    for o in outcomes:
+        assert o.ok
+        assert list(o.tokens) == list(ref[o.rid].tokens)
+        assert o.token_ticks == sorted(o.token_ticks)
+        assert o.ttft is not None and o.ttft >= 0
+        assert o.finished_tick >= o.token_ticks[-1]
+
+
+def test_timeout_wires_to_engine_deadline(fp32_setup):
+    """A client timeout becomes the engine's deadline: the request expires
+    tick-exactly inside the engine (status 'expired'), streams only the
+    tokens produced before the cut, and is NOT retried (DeadlineExceeded
+    semantics — the deadline does not reset)."""
+    model, params, cfg = fp32_setup
+    engine = _engine(model, params, cfg)
+    server = AsyncServer(engine)
+    client = AsyncClient(server, RetryPolicy(max_attempts=4), seed=0)
+
+    async def drive():
+        server.start()
+        out = await client.run(_req(0, 8, 20), timeout=6.0)
+        await server.aclose()
+        return out
+
+    out = asyncio.run(drive())
+    assert out.status == "expired"
+    assert out.attempts == 1                 # terminal, not retried
+    assert 0 < len(out.tokens) < 20
+    assert engine.results[0].status == "expired"
+    assert list(engine.results[0].tokens) == list(out.tokens)
+
+
+def test_queuefull_retry_roundtrip_real_engine(fp32_setup):
+    """Open-loop burst against a 1-deep queue: clients see real QueueFull,
+    back off in engine ticks, and every request still completes ok."""
+    model, params, cfg = fp32_setup
+    engine = _engine(model, params, cfg, max_queue=1)
+    server = AsyncServer(engine, breaker=CircuitBreaker(min_volume=1000),
+                         shed=ShedPolicy(shed_pressure=8.0,
+                                         tighten_pressure=9.0,
+                                         refuse_pressure=10.0))
+    client = AsyncClient(server, RetryPolicy(max_attempts=10,
+                                             base_backoff=2.0), seed=1)
+    trace = [_req(i, 4, 4) for i in range(5)]     # all arrive at tick 0
+    outcomes = asyncio.run(run_open_loop(server, client, trace))
+    assert all(o.ok for o in outcomes)
+    assert max(o.attempts for o in outcomes) > 1  # retries actually happened
+    assert server.stats["shed_queue"] > 0
+
+
+# ----------------------------------------------------------- drain + determinism
+
+def test_drain_finishes_inflight_rejects_new(fp32_setup):
+    model, params, cfg = fp32_setup
+    engine = _engine(model, params, cfg)
+    server = AsyncServer(engine)
+
+    async def drive():
+        server.start()
+        s1 = server.submit(_req(0, 8, 6))
+        await server.wait_ticks(1)           # let prefill begin
+        server.drain()
+        with pytest.raises(QueueFull):       # admission closed for good
+            server.submit(_req(1, 4, 2))
+        r1 = await s1.drain()
+        await server.aclose()
+        return r1
+
+    r1 = asyncio.run(drive())
+    assert r1.status == "ok" and len(r1.tokens) == 6
+    assert engine.draining
+
+
+def test_open_loop_run_is_deterministic(fp32_setup):
+    """Two full open-loop runs — arrivals, retries, backoff jitter, breaker
+    state, shed decisions, streamed ticks — must be bit-identical."""
+    model, params, cfg = fp32_setup
+
+    def run_once():
+        trace = open_loop_trace(7, 12, 1.5, vocab_size=cfg.vocab_size,
+                                prompt_lens=(4, 12), gen_lens=(4, 12),
+                                priority_levels=2)
+        engine = _engine(model, params, cfg, max_queue=4)
+        server = AsyncServer(engine,
+                             breaker=CircuitBreaker(window=8,
+                                                    failure_threshold=0.5,
+                                                    min_volume=4,
+                                                    cooldown=8.0))
+        client = AsyncClient(server, RetryPolicy(max_attempts=3), seed=2)
+        outcomes = asyncio.run(run_open_loop(server, client, trace))
+        stats = {k: v for k, v in server.stats.items() if k != "results"}
+        return ([(o.rid, o.status, o.attempts, tuple(o.tokens),
+                  tuple(o.token_ticks)) for o in outcomes],
+                stats, server.breaker.opens)
+
+    assert run_once() == run_once()
+
+
+# ------------------------------------------------------- straggler threshold
+
+def test_straggler_threshold_surfaced_in_stats(fp32_setup):
+    """The monitor's slow-step threshold is an engine constructor input
+    (wired from launch/serve.py --straggler-threshold) and echoes through
+    ``engine.stats`` for the final report."""
+    model, params, cfg = fp32_setup
+    eng = _engine(model, params, cfg,
+                  straggler=StragglerMonitor(threshold=3.5))
+    assert eng.stats["straggler_threshold"] == 3.5
+    assert _engine(model, params, cfg).stats["straggler_threshold"] == 2.0

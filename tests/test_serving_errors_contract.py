@@ -1,0 +1,165 @@
+"""End-to-end pin of the ``serving.errors`` retryable contract.
+
+The async client branches on exactly one bit — ``ServingError.retryable`` —
+so this file pins that bit for every class in the taxonomy and proves the
+client honors it: every retryable class round-trips through the retry path
+(rejection → backoff → resubmission → success), every non-retryable class
+fails fast on the first raise, and exhausted retries surface as a ``shed``
+outcome. A scripted in-memory server stands in for the engine so each error
+class can be injected directly at the admission surface; the real-engine
+round trips (QueueFull under a bounded queue, breaker trips, overload
+sheds) live in ``test_serving_async.py``.
+"""
+import asyncio
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.serving import (
+    AsyncClient,
+    CircuitOpen,
+    DeadlineExceeded,
+    PoolExhausted,
+    QueueFull,
+    Request,
+    RequestCancelled,
+    RequestStream,
+    RequestTooLarge,
+    RetryPolicy,
+    ServerOverloaded,
+    ServingError,
+    taxonomy,
+)
+
+# THE pin: adding an error class, or flipping a retryable flag, must fail
+# here and be updated deliberately — the client's behavior hangs off it
+EXPECTED_TAXONOMY = {
+    "ServingError": False,
+    "RequestTooLarge": False,
+    "QueueFull": True,
+    "PoolExhausted": True,
+    "RequestCancelled": False,
+    "DeadlineExceeded": False,
+    "CircuitOpen": True,
+    "ServerOverloaded": True,
+}
+
+BY_NAME = {
+    "ServingError": ServingError,
+    "RequestTooLarge": RequestTooLarge,
+    "QueueFull": QueueFull,
+    "PoolExhausted": PoolExhausted,
+    "RequestCancelled": RequestCancelled,
+    "DeadlineExceeded": DeadlineExceeded,
+    "CircuitOpen": CircuitOpen,
+    "ServerOverloaded": ServerOverloaded,
+}
+
+
+def test_taxonomy_pinned_exactly():
+    assert taxonomy() == EXPECTED_TAXONOMY
+
+
+def test_legacy_isa_compat():
+    """The pre-taxonomy engine raised bare builtins; the IS-A bridges are
+    load-bearing for external callers and old tests."""
+    assert issubclass(RequestTooLarge, ValueError)
+    assert issubclass(QueueFull, RuntimeError)
+    assert issubclass(PoolExhausted, RuntimeError)
+    assert issubclass(CircuitOpen, RuntimeError)
+    assert issubclass(ServerOverloaded, RuntimeError)
+    for cls in BY_NAME.values():
+        assert issubclass(cls, ServingError)
+
+
+# ------------------------------------------------------- scripted round trip
+@dataclasses.dataclass
+class _Result:
+    rid: int
+    status: str
+    tokens: list
+    finished_at: float
+
+
+class _ScriptedServer:
+    """Admission surface double: raises a scripted error sequence, then
+    serves a one-token stream. Tick bookkeeping mirrors AsyncServer's
+    (clock advances only through the wait_* calls the client makes)."""
+
+    def __init__(self, errors):
+        self.errors = list(errors)
+        self.clock = 0.0
+        self.submits = 0
+
+    def submit(self, request, *, timeout=None):
+        self.submits += 1
+        if self.errors:
+            raise self.errors.pop(0)
+        stream = RequestStream(request.rid)
+        stream._push(self.clock, 7)
+        stream._finish(_Result(rid=request.rid, status="ok", tokens=[7],
+                               finished_at=self.clock))
+        return stream
+
+    async def wait_until(self, tick):
+        self.clock = max(self.clock, tick)
+
+    async def wait_ticks(self, n):
+        assert n >= 0
+        self.clock += n
+
+
+def _req(rid=0):
+    return Request(rid=rid, prompt=np.arange(4, dtype=np.int32),
+                   max_new_tokens=1)
+
+
+@pytest.mark.parametrize("name", sorted(k for k, v in EXPECTED_TAXONOMY.items()
+                                        if v))
+def test_every_retryable_error_round_trips(name):
+    """reject once with the retryable class → the client backs off and
+    resubmits → success on attempt 2."""
+    server = _ScriptedServer([BY_NAME[name](f"scripted {name}")])
+    client = AsyncClient(server, RetryPolicy(max_attempts=3), seed=0)
+    out = asyncio.run(client.run(_req()))
+    assert out.ok and out.tokens == [7]
+    assert out.attempts == 2 and server.submits == 2
+    assert server.clock > 0.0    # a backoff sleep actually happened
+
+
+@pytest.mark.parametrize("name", sorted(k for k, v in EXPECTED_TAXONOMY.items()
+                                        if not v))
+def test_every_nonretryable_error_fails_fast(name):
+    """one raise of a non-retryable class → no resubmission, outcome
+    ``rejected`` carrying the class name."""
+    server = _ScriptedServer([BY_NAME[name](f"scripted {name}")])
+    client = AsyncClient(server, RetryPolicy(max_attempts=3), seed=0)
+    out = asyncio.run(client.run(_req()))
+    assert not out.ok
+    assert out.status == "rejected" and out.error == name
+    assert out.attempts == 1 and server.submits == 1
+    assert server.clock == 0.0   # fail fast: no backoff sleep
+
+
+def test_retries_exhausted_is_shed():
+    server = _ScriptedServer([QueueFull("full")] * 10)
+    client = AsyncClient(server, RetryPolicy(max_attempts=4), seed=0)
+    out = asyncio.run(client.run(_req()))
+    assert out.status == "shed" and out.error == "QueueFull"
+    assert out.attempts == 4 and server.submits == 4
+
+
+def test_backoff_is_seeded_and_capped():
+    """The jitter schedule depends only on (seed, rid) — never on wall clock
+    or interleaving — and every sleep respects the exponential cap."""
+    policy = RetryPolicy(max_attempts=8, base_backoff=4.0, multiplier=2.0,
+                         max_backoff=16.0)
+    a = AsyncClient(_ScriptedServer([]), policy, seed=3)
+    b = AsyncClient(_ScriptedServer([]), policy, seed=3)
+    sched_a = [policy.backoff(k, a._rng(5)) for k in range(6)]
+    sched_b = [policy.backoff(k, b._rng(5)) for k in range(6)]
+    assert sched_a == sched_b
+    assert sched_a != [policy.backoff(k, a._rng(6)) for k in range(6)]
+    for k, delay in enumerate(sched_a):
+        assert 0.0 <= delay <= min(4.0 * 2.0 ** k, 16.0)
