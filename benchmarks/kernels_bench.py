@@ -23,6 +23,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.analysis.roofline import HW_V5E
+from repro.kernels.dispatch import count_pallas_calls
 from repro.kernels.kv_attention.ref import kv_attention_ref, kv_attention_xla
 from repro.kernels.qmatmul_w8a8.ref import qmatmul_w8a8_ref
 from repro.kernels.qmatmul_w8a16.ref import qmatmul_w8a16_ref
@@ -113,6 +114,51 @@ def kernel_rows(smoke: bool = False):
                  cache_fp32 / cache_int8))
     vmem = 2 * 512 * H * hd * 1 + 2 * 512 * H * 4 + H * hd * 4
     rows.append(("kv_attention.vmem_working_set_kib", vmem / 1024))
+
+    # --- fused decode megakernel: append-quantize + attention + q8-out -----
+    # dispatch counts come from the traced jaxprs of the Pallas tier (exact
+    # on CPU); wall time regresses the XLA composition the CPU path serves
+    from repro.kernels.fused_decode.ops import fused_decode
+    from repro.kernels.kv_attention.ops import kv_attention_decode, quantize_kv
+    from repro.kernels.quantize_act.ops import quantize_act
+
+    B, S, Hq, Hkv, hd = ((2, 512, 4, 2, 64) if smoke
+                         else (8, 4096, 32, 8, 128))
+    kk = jax.random.split(jax.random.PRNGKey(1), 4)
+    qv = jax.random.normal(kk[0], (B, Hq, hd))
+    kq, ksc = quantize_kv(jax.random.normal(kk[1], (B, S, Hkv, hd)))
+    vq, vsc = quantize_kv(jax.random.normal(kk[2], (B, S, Hkv, hd)))
+    k_new = jax.random.normal(kk[3], (B, 1, Hkv, hd))
+    v_new = jax.random.normal(kk[0], (B, 1, Hkv, hd))
+    idx = jnp.full((B, 1), S // 2, jnp.int32)
+    valid = jnp.arange(S)[None, :] <= (S // 2)
+    valid = jnp.broadcast_to(valid, (B, S))
+    fused_n = count_pallas_calls(
+        fused_decode, qv, kq, ksc, vq, vsc, k_new, v_new, idx,
+        valid=valid, blk=min(512, S), backend="interpret", quantize_out=True)
+
+    def stepwise(q, kq, ksc, vq, vsc, kn, vn, idx):
+        out, upd = kv_attention_decode(q, kq, ksc, vq, vsc, kn, vn, idx,
+                                       valid=valid, blk=min(512, S),
+                                       backend="interpret")
+        oq, os_ = quantize_act(out.reshape(out.shape[0], -1),
+                               backend="interpret")
+        return out, oq, os_, upd
+
+    unfused_n = count_pallas_calls(stepwise, qv, kq, ksc, vq, vsc,
+                                   k_new, v_new, idx)
+    rows.append(("fused_decode.dispatches_per_step_fused", fused_n))
+    rows.append(("fused_decode.dispatches_per_step_unfused", unfused_n))
+    rows.append(("fused_decode.decode_dispatch_reduction",
+                 unfused_n / fused_n))
+    # q8 GEMM epilogue: the standalone quantize_act between a W8A8 GEMM and
+    # its consumer folds into the GEMM's own launch
+    rows.append(("qmatmul_q8_epilogue.dispatch_reduction", 2.0 / 1.0))
+    f = jax.jit(lambda *a: fused_decode(*a, valid=valid, blk=min(512, S),
+                                        backend="xla",
+                                        quantize_out=True)[0][0])
+    rows.append((f"fused_decode_{B}x{S}.xla_cpu_us",
+                 _time(f, qv, kq, ksc, vq, vsc, k_new, v_new, idx)))
     return rows
 
 

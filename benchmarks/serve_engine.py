@@ -376,6 +376,48 @@ def bench_prefix_capacity(label: str, model, params, setup: dict, *,
     return out
 
 
+def bench_decode_dispatches(model, params, setup: dict) -> dict:
+    """Kernel launches per decode step through the engine's OWN decode jit,
+    fused megakernel vs stepwise (``REPRO_FUSED_DECODE`` on/off), counted
+    from the traced jaxpr under the interpret tier — the exact ``pallas_call``
+    count the TPU tier dispatches, measurable on any host. Uses the full
+    int8 graph (w8a8 weights + int8 KV), where both the decode megakernel
+    and the q8 GEMM epilogue engage."""
+    import os
+
+    from repro.kernels.dispatch import ENV_VAR, count_pallas_calls
+
+    saved = {k: os.environ.get(k) for k in (ENV_VAR, "REPRO_FUSED_DECODE")}
+    counts = {}
+    try:
+        os.environ[ENV_VAR] = "interpret"   # every op on its Pallas twin
+        for mode, flag in (("fused", "1"), ("unfused", "0")):
+            os.environ["REPRO_FUSED_DECODE"] = flag
+            eng = ServingEngine(model, params, setup["cfg"],
+                                num_slots=setup["slots"],
+                                max_len=setup["max_len"],
+                                prefill_chunk=setup["prefill_chunk"],
+                                kv_bits=8)
+            _, impl, args, kw = eng.serve_jit_specs()["decode"]
+            counts[mode] = count_pallas_calls(impl, *args, **kw)
+            del eng
+    finally:
+        for k, v in saved.items():
+            if v is None:
+                os.environ.pop(k, None)
+            else:
+                os.environ[k] = v
+    out = {
+        "dispatches_per_decode_step_fused": counts["fused"],
+        "dispatches_per_decode_step_unfused": counts["unfused"],
+        "decode_dispatch_reduction": counts["unfused"] / counts["fused"],
+    }
+    print(f"decode dispatches/step (w8a8-kv8, trace-counted): "
+          f"{counts['unfused']} stepwise -> {counts['fused']} fused "
+          f"({out['decode_dispatch_reduction']:.2f}x fewer launches)")
+    return out
+
+
 def main(argv=None) -> list[dict]:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
@@ -404,6 +446,9 @@ def main(argv=None) -> list[dict]:
     # int8-KV engine (what the serve-w8a16-kv8 recipe produces)
     results.append(bench_variant("serve-w8a16-kv8", qm.model, qm.params,
                                  setup, kv_bits=8, full=False))
+
+    qm8 = repro.quantize(model, params=params, recipe="serve-w8a8-kv8")
+    dispatches = bench_decode_dispatches(qm8.model, qm8.params, setup)
 
     kv8 = _kv8_summary(results)
     for fp_label, row in kv8.items():
@@ -445,7 +490,8 @@ def main(argv=None) -> list[dict]:
               f"--smoke")
 
     write_bench_json(args.json, results, setup, kv8, sharded=sharded,
-                     capacity=capacity, smoke=args.smoke)
+                     capacity=capacity, dispatches=dispatches,
+                     smoke=args.smoke)
     return results
 
 
@@ -480,7 +526,8 @@ def _kv8_summary(results: list[dict]) -> dict:
 
 def write_bench_json(path, results: list[dict], setup: dict,
                      kv8: dict = None, sharded: list = None,
-                     capacity: list = None, smoke: bool = False) -> None:
+                     capacity: list = None, dispatches: dict = None,
+                     smoke: bool = False) -> None:
     payload = {
         "benchmark": "serve_engine",
         "backend": jax.default_backend(),
@@ -488,6 +535,7 @@ def write_bench_json(path, results: list[dict], setup: dict,
         "smoke": smoke,
         "sharded": sharded or [],
         "prefix_capacity": capacity or [],
+        "decode_dispatches": dispatches or {},
         "traces": {
             "mixed": {"n_requests": setup["n_requests"],
                       "prompt_lens": list(setup["prompt_lens"]),
@@ -510,8 +558,11 @@ def write_bench_json(path, results: list[dict], setup: dict,
 def serve_rows(json_path=None):
     """benchmarks.run harness adapter: (name, value) CSV rows; persists the
     full payload to BENCH_serve.json as a side effect."""
-    results = main(["--json", str(json_path)] if json_path else [])
+    path = pathlib.Path(json_path) if json_path else DEFAULT_JSON
+    results = main(["--json", str(path)])
     rows = []
+    for k, v in json.loads(path.read_text())["decode_dispatches"].items():
+        rows.append((f"fused_decode.{k}", v))
     for r in results:
         fast = r["variants"][f"fast_h{max(HORIZONS)}"]
         rows.append((f"{r['label']}.fast_tok_s_mixed",

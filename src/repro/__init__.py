@@ -2,10 +2,11 @@
 "Data-Free Quantization Through Weight Equalization and Bias Correction"
 (Nagel et al., ICCV 2019) and extending it to modern LM architectures on TPU.
 
-The public quantization surface is the pipeline API:
+The public surface is the pipeline API plus its serving peer:
 
     import repro
     qm = repro.quantize("qwen2-0.5b-smoke", recipe="dfq-int8")
+    repro.serve(repro.ServeConfig(arch="qwen2-0.5b", smoke=True, trace=20))
 """
 
 __version__ = "1.1.0"
@@ -23,4 +24,8 @@ def __getattr__(name):
         from . import pipeline
 
         return getattr(pipeline, name)
+    if name in {"serve", "ServeConfig", "ServeConfigError"}:
+        from .launch import serve as _serve
+
+        return getattr(_serve, name)
     raise AttributeError(f"module 'repro' has no attribute {name!r}")

@@ -1,81 +1,71 @@
 """Pallas TPU kernels for the INT8 deployment path DFQ enables.
 
-Three kernels (taxonomy B.12 — W8A8 / weight-only / dynamic-quant):
+Five ops (taxonomy B.12 — W8A8 / weight-only / dynamic-quant):
 
   * ``qmatmul_w8a8``  — int8×int8 → int32 MXU GEMM, dequant epilogue fused
                         with the DFQ bias-correction term (compute-bound
-                        prefill path; int8 doubles v5e MXU peak vs bf16),
+                        prefill path; int8 doubles v5e MXU peak vs bf16).
+                        ``quantize_out=True`` re-quantizes the output row in
+                        the epilogue (int8 + per-row scale out).
   * ``qmatmul_w8a16`` — bf16 activations × int8 weights dequantized in VMEM
                         (memory-bound decode path; halves HBM weight bytes),
+                        same ``quantize_out`` epilogue variant.
   * ``quantize_act``  — fused per-row absmax reduce + scale + round
                         (dynamic activation quantization),
   * ``kv_attention``  — single-token decode attention with the int8 KV cache
                         dequantized in VMEM (one HBM pass over the cache —
                         the EXPERIMENTS §Perf C5 roofline term, fused).
                         Handles GQA (q heads / kv heads via in-kernel
-                        reshape), ragged per-slot lengths through zero-scale
-                        masking, and ships ``quantize_kv`` /
-                        ``kv_attention_decode`` — the fused append-quantize
-                        step the serving engine's int8-KV mode decodes
-                        through (``ServingEngine(kv_bits=8)`` or a
-                        ``serve-*-kv8`` recipe).
+                        reshape) and ragged per-slot lengths through
+                        zero-scale masking.
+  * ``fused_decode``  — the decode megakernel: append-quantize + int8
+                        attention (+ optional W8A8 quantize-out epilogue)
+                        in ONE ``pallas_call`` with the cache leaves
+                        aliased in place — the ``kv_attention_decode``
+                        composition collapsed to a single dispatch.
 
-Each package: kernel.py (pl.pallas_call + BlockSpec), ops.py (jit'd public
-wrapper with padding + XLA fallback), ref.py (pure-jnp oracle).
-Kernels VALIDATE in interpret mode on CPU; TPU is the compile target.
+Each package: kernel.py (pl.pallas_call + BlockSpec), ops.py (public
+wrapper), ref.py (pure-jnp oracle). Kernels VALIDATE in interpret mode on
+CPU; TPU is the compile target.
 
-``serving_kernel_specs`` / ``lower_serving_kernels`` expose the standalone
-kernels to the graph linter (analysis/lint): representative smoke-shape
-argument sets, and the traced-but-never-run lowered modules built from them.
+Backend selection, padding policy, and the op registry all live in
+``dispatch.py`` — every op registers its pallas/xla/interpret/ref tiers
+with ``@register_impl`` and resolves through ``dispatch.resolve`` (env
+override ``REPRO_KERNEL_BACKEND``). ``serving_kernel_specs`` /
+``lower_serving_kernels`` enumerate the registry's ``@register_spec``
+entries, so the graph linter (analysis/lint) traces every registered
+serving op without a hand-maintained list.
 """
 from __future__ import annotations
+
+from . import dispatch
+
+
+def _import_ops():
+    """Importing the op packages populates the dispatch registry."""
+    from .fused_decode import ops as _fd          # noqa: F401
+    from .kv_attention import ops as _kv          # noqa: F401
+    from .qmatmul_w8a8 import ops as _w8a8        # noqa: F401
+    from .qmatmul_w8a16 import ops as _w8a16      # noqa: F401
+    from .quantize_act import ops as _qa          # noqa: F401
 
 
 def serving_kernel_specs(*, head_dim: int = 16, n_kv_heads: int = 2,
                          n_q_heads: int = 4, seq: int = 32, batch: int = 2,
                          d_in: int = 64, d_out: int = 128) -> dict:
-    """{name: (fn, args, kwargs)} for each standalone serving kernel at a
+    """{name: (fn, args, kwargs)} for each registered serving op at a
     representative smoke shape — everything the lint layer needs to trace
     (``jax.make_jaxpr``) or lower (``jax.jit(...).lower``) the kernels
     without running them. Shapes default to the smoke-config attention
     geometry so kernel contracts line up with the engine contracts."""
-    import jax.numpy as jnp
-
-    from .kv_attention.ops import kv_attention_decode
-    from .qmatmul_w8a8.ops import qmatmul_w8a8
-    from .qmatmul_w8a16.ops import qmatmul_w8a16
-    from .quantize_act.ops import quantize_act
-
-    B, S, Hq, Hkv, hd = batch, seq, n_q_heads, n_kv_heads, head_dim
-    M, K, N = 8, d_in, d_out
-    a = jnp.zeros((M, K), jnp.float32)
-    w_q = jnp.zeros((K, N), jnp.int8)
-    w_scale = jnp.ones((N,), jnp.float32)
-    a_q = jnp.zeros((M, K), jnp.int8)
-    a_scale = jnp.ones((M,), jnp.float32)
-    return {
-        "qmatmul_w8a16": (
-            qmatmul_w8a16, (a, w_q, w_scale), {"out_dtype": jnp.float32}),
-        "qmatmul_w8a8": (
-            qmatmul_w8a8, (a_q, w_q, a_scale, w_scale), {}),
-        "quantize_act": (quantize_act, (a,), {}),
-        "kv_attention_decode": (
-            kv_attention_decode,
-            (jnp.zeros((B, Hq, hd), jnp.float32),        # q
-             jnp.zeros((B, S, Hkv, hd), jnp.int8),       # cache_k
-             jnp.ones((B, S, Hkv), jnp.float32),         # cache_ks
-             jnp.zeros((B, S, Hkv, hd), jnp.int8),       # cache_v
-             jnp.ones((B, S, Hkv), jnp.float32),         # cache_vs
-             jnp.zeros((B, 1, Hkv, hd), jnp.float32),    # k_new
-             jnp.zeros((B, 1, Hkv, hd), jnp.float32),    # v_new
-             jnp.zeros((B, 1), jnp.int32)),              # idx
-            {"valid": jnp.ones((B, S), bool)},
-        ),
-    }
+    _import_ops()
+    return dispatch.iter_specs(
+        head_dim=head_dim, n_kv_heads=n_kv_heads, n_q_heads=n_q_heads,
+        seq=seq, batch=batch, d_in=d_in, d_out=d_out)
 
 
 def lower_serving_kernels(**shape_kw) -> dict:
-    """{name: jax.stages.Lowered} for every standalone serving kernel —
+    """{name: jax.stages.Lowered} for every registered serving op —
     traced and lowered (StableHLO), NOT compiled or run."""
     import jax
 

@@ -1,0 +1,200 @@
+"""The one kernel-dispatch registry every serving op resolves through.
+
+Before this module each ``kernels/*/ops.py`` carried its own copy of the
+backend selector (``default_backend()`` + ``interpret=(backend == ...)``)
+and its own ``_pad_to`` — four drifting copies of the same policy.  Now:
+
+  * ``@register_impl(op, backend, pad=...)`` registers one implementation
+    of ``op`` at one backend **tier** — ``pallas`` (the TPU kernel),
+    ``xla`` (pure-XLA fallback, the folded-scale production path off-TPU),
+    ``interpret`` (the Pallas kernel in interpret mode — bit-exact CPU
+    validation of the TPU lowering), ``ref`` (the blocked pure-jnp oracle
+    the tests pin against).
+  * ``resolve(op, backend=None)`` returns the implementation: an explicit
+    ``backend`` argument wins, else the ``REPRO_KERNEL_BACKEND`` env var,
+    else ``default_backend()`` (pallas on TPU, interpret elsewhere —
+    the validation default).
+  * ``serving_backend(pallas_ok=True)`` is the single copy of the
+    *production* ternary every hot call site used to inline ("pallas" on
+    TPU, folded-scale "xla" elsewhere); it honors the same env override.
+  * ``register_spec(op)`` registers the op's representative smoke-shape
+    argument builder, so ``kernels.serving_kernel_specs()`` (and through
+    it the QuantLint graph extractor) enumerates the registry instead of
+    a hand-maintained dict — a new kernel package registers itself and is
+    linted without touching the lint layer.
+
+Padding is policy too: ``_pad_to`` lives here (the previously copy-pasted
+helper), and every impl declares its pad convention — ``"zero"`` (GEMMs:
+zero rows/cols contribute exact zeros to the contraction) or
+``"zero-scale"`` (attention: padded positions carry scale 0, the "invalid"
+marker the masking keys on).  Registering two impls of one op under
+*different* conventions is an error at import time: silently mixing them is
+exactly the class of bug where one backend masks padding and another
+contracts over it.
+"""
+from __future__ import annotations
+
+import os
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+ENV_VAR = "REPRO_KERNEL_BACKEND"
+
+#: backend tiers in resolution-priority order (also the display order)
+TIERS = ("pallas", "xla", "interpret", "ref")
+
+#: pad/mask conventions an impl may declare (None = op never pads)
+PAD_CONVENTIONS = ("zero", "zero-scale")
+
+_REGISTRY: Dict[str, Dict[str, Callable]] = {}
+_PAD: Dict[str, str] = {}
+_SPECS: Dict[str, Callable] = {}
+
+
+def _pad_to(x, m: int, axis: int):
+    """Right-pad ``x`` along ``axis`` to a multiple of ``m`` (zeros)."""
+    pad = (-x.shape[axis]) % m
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def register_impl(op: str, backend: str, *, pad: Optional[str] = None):
+    """Decorator: register ``fn`` as ``op``'s implementation at ``backend``.
+
+    ``pad`` declares the impl's padding/masking convention; all impls of an
+    op must agree (or declare nothing) — a conflict raises immediately.
+    """
+    if backend not in TIERS:
+        raise ValueError(
+            f"register_impl({op!r}): unknown backend tier {backend!r}; "
+            f"tiers are {TIERS}")
+    if pad is not None and pad not in PAD_CONVENTIONS:
+        raise ValueError(
+            f"register_impl({op!r}, {backend!r}): unknown pad convention "
+            f"{pad!r}; conventions are {PAD_CONVENTIONS}")
+
+    def deco(fn: Callable) -> Callable:
+        impls = _REGISTRY.setdefault(op, {})
+        if backend in impls and impls[backend] is not fn:
+            raise ValueError(
+                f"register_impl: {op!r} already has a {backend!r} impl "
+                f"({impls[backend].__name__}); refusing to shadow it with "
+                f"{fn.__name__}")
+        if pad is not None:
+            prev = _PAD.get(op)
+            if prev is not None and prev != pad:
+                raise ValueError(
+                    f"register_impl: {op!r} impls disagree on the pad "
+                    f"convention — existing impls declare {prev!r}, "
+                    f"{fn.__name__} ({backend!r}) declares {pad!r}. One op "
+                    f"= one convention: a mixed op would mask padding on "
+                    f"one backend and contract over it on another.")
+            _PAD[op] = pad
+        impls[backend] = fn
+        return fn
+
+    return deco
+
+
+def ops() -> tuple:
+    """The registered op names, sorted."""
+    return tuple(sorted(_REGISTRY))
+
+
+def backends(op: str) -> tuple:
+    """The backend tiers ``op`` has implementations for, in tier order."""
+    impls = _registered(op)
+    return tuple(t for t in TIERS if t in impls)
+
+
+def pad_convention(op: str) -> Optional[str]:
+    """The pad convention ``op``'s impls declared (None = never pads)."""
+    _registered(op)
+    return _PAD.get(op)
+
+
+def _registered(op: str) -> Dict[str, Callable]:
+    try:
+        return _REGISTRY[op]
+    except KeyError:
+        raise KeyError(
+            f"unknown kernel op {op!r}; registered ops: "
+            f"{', '.join(sorted(_REGISTRY)) or '(none)'}") from None
+
+
+def default_backend() -> str:
+    """The *validation* default: the real kernel on TPU, its interpret-mode
+    twin elsewhere (bit-exact to the TPU lowering, slow)."""
+    return "pallas" if jax.default_backend() == "tpu" else "interpret"
+
+
+def serving_backend(pallas_ok: bool = True) -> str:
+    """The *production* default every serving call site resolves with: the
+    Pallas kernel on TPU, the folded-scale XLA op elsewhere (interpret mode
+    is far too slow to serve through).  ``pallas_ok=False`` forces the XLA
+    tier even on TPU — e.g. a feature only the XLA path implements (V-bias
+    correction).  The ``REPRO_KERNEL_BACKEND`` env override wins over both.
+    """
+    env = os.environ.get(ENV_VAR)
+    if env:
+        return env
+    return "pallas" if jax.default_backend() == "tpu" and pallas_ok else "xla"
+
+
+def resolve(op: str, backend: Optional[str] = None) -> Callable:
+    """Return ``op``'s implementation: explicit ``backend`` > the
+    ``REPRO_KERNEL_BACKEND`` env var > ``default_backend()``."""
+    impls = _registered(op)
+    chosen = backend or os.environ.get(ENV_VAR) or default_backend()
+    try:
+        return impls[chosen]
+    except KeyError:
+        raise ValueError(
+            f"op {op!r} has no {chosen!r} implementation; registered "
+            f"tiers: {', '.join(backends(op))}") from None
+
+
+def count_pallas_calls(fn: Callable, *args, **kwargs) -> int:
+    """Kernel launches in ``fn``'s traced jaxpr — the dispatch count a TPU
+    step would issue, counted from the trace so it is exact on any host
+    (recursing through scan/cond/pjit bodies). This is THE metric the
+    fused-decode megakernel exists to shrink."""
+
+    def walk(jaxpr) -> int:
+        n = 0
+        for eqn in jaxpr.eqns:
+            if eqn.primitive.name == "pallas_call":
+                n += 1
+            for v in eqn.params.values():
+                for sub in jax.tree_util.tree_leaves(
+                        v, is_leaf=lambda x: hasattr(x, "jaxpr")):
+                    if hasattr(sub, "jaxpr"):
+                        n += walk(sub.jaxpr)
+        return n
+
+    return walk(jax.make_jaxpr(lambda *a: fn(*a, **kwargs))(*args).jaxpr)
+
+
+def register_spec(op: str):
+    """Decorator: register ``op``'s smoke-shape spec builder — a callable
+    ``(**shape_kw) -> (fn, args, kwargs)`` the lint layer traces/lowers.
+    Ops without a spec (pure-composition wrappers) simply don't register.
+    """
+
+    def deco(build: Callable) -> Callable:
+        if op in _SPECS and _SPECS[op] is not build:
+            raise ValueError(f"register_spec: {op!r} already has a spec")
+        _SPECS[op] = build
+        return build
+
+    return deco
+
+
+def iter_specs(**shape_kw) -> Dict[str, Any]:
+    """{op: (fn, args, kwargs)} over every registered spec builder."""
+    return {op: _SPECS[op](**shape_kw) for op in sorted(_SPECS)}

@@ -19,9 +19,9 @@ from __future__ import annotations
 
 from typing import Optional
 
-import jax
 import jax.numpy as jnp
 
+from ..dispatch import register_impl, register_spec, resolve
 from .kernel import kv_attention_pallas
 from .ref import kv_attention_ref, kv_attention_xla, pad_to_block
 
@@ -38,6 +38,37 @@ def quantize_kv(t: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
     scale = jnp.maximum(amax, 1e-8) / 127.0
     q = jnp.clip(jnp.round(tf / scale[..., None]), -127, 127).astype(jnp.int8)
     return q, scale.astype(jnp.float32)
+
+
+def _pallas_impl(q, k_q, k_s, v_q, v_s, *, blk, out_dtype, interpret):
+    # zero-scale padding: padded positions are masked exactly inside the
+    # kernel's online softmax, so any S works (ragged serving rings)
+    k_q, k_s, v_q, v_s, blk_e = pad_to_block(k_q, k_s, v_q, v_s, blk)
+    return kv_attention_pallas(q, k_q, k_s, v_q, v_s, blk=blk_e,
+                               out_dtype=out_dtype, interpret=interpret)
+
+
+@register_impl("kv_attention", "pallas", pad="zero-scale")
+def _kv_pallas(q, k_q, k_s, v_q, v_s, *, blk, out_dtype):
+    return _pallas_impl(q, k_q, k_s, v_q, v_s, blk=blk, out_dtype=out_dtype,
+                        interpret=False)
+
+
+@register_impl("kv_attention", "interpret", pad="zero-scale")
+def _kv_interpret(q, k_q, k_s, v_q, v_s, *, blk, out_dtype):
+    return _pallas_impl(q, k_q, k_s, v_q, v_s, blk=blk, out_dtype=out_dtype,
+                        interpret=True)
+
+
+@register_impl("kv_attention", "xla", pad="zero-scale")
+def _kv_xla(q, k_q, k_s, v_q, v_s, *, blk, out_dtype):
+    return kv_attention_xla(q, k_q, k_s, v_q, v_s, out_dtype)
+
+
+@register_impl("kv_attention", "ref", pad="zero-scale")
+def _kv_ref(q, k_q, k_s, v_q, v_s, *, blk, out_dtype):
+    # the blocked oracle pads to the kernel's zero-scale convention itself
+    return kv_attention_ref(q, k_q, k_s, v_q, v_s, out_dtype, blk=blk)
 
 
 def kv_attention(q, k_q, k_s, v_q, v_s, *, blk: int = 512,
@@ -62,15 +93,8 @@ def kv_attention(q, k_q, k_s, v_q, v_s, *, blk: int = 512,
                 f"backend='xla' or drop v_err"
             )
         return kv_attention_xla(q, k_q, k_s, v_q, v_s, out_dtype, v_err=v_err)
-    backend = backend or ("pallas" if jax.default_backend() == "tpu" else "interpret")
-    if backend == "xla":
-        return kv_attention_xla(q, k_q, k_s, v_q, v_s, out_dtype)
-    # zero-scale padding: padded positions are masked exactly inside the
-    # kernel's online softmax, so any S works (ragged serving rings)
-    k_q, k_s, v_q, v_s, blk_e = pad_to_block(k_q, k_s, v_q, v_s, blk)
-    return kv_attention_pallas(q, k_q, k_s, v_q, v_s, blk=blk_e,
-                               out_dtype=out_dtype,
-                               interpret=(backend == "interpret"))
+    impl = resolve("kv_attention", backend)
+    return impl(q, k_q, k_s, v_q, v_s, blk=blk, out_dtype=out_dtype)
 
 
 def append_quantize(cache_k, cache_ks, cache_v, cache_vs, k_new, v_new, idx,
@@ -122,3 +146,19 @@ def kv_attention_decode(q, cache_k, cache_ks, cache_v, cache_vs, k_new, v_new,
     out = kv_attention(q, ck, ks_eff, cv, vs_eff, blk=blk,
                        out_dtype=out_dtype, backend=backend, v_err=verr_eff)
     return out, updated
+
+
+@register_spec("kv_attention_decode")
+def _spec(*, head_dim: int = 16, n_kv_heads: int = 2, n_q_heads: int = 4,
+          seq: int = 32, batch: int = 2, **_):
+    B, S, Hq, Hkv, hd = batch, seq, n_q_heads, n_kv_heads, head_dim
+    return (kv_attention_decode,
+            (jnp.zeros((B, Hq, hd), jnp.float32),        # q
+             jnp.zeros((B, S, Hkv, hd), jnp.int8),       # cache_k
+             jnp.ones((B, S, Hkv), jnp.float32),         # cache_ks
+             jnp.zeros((B, S, Hkv, hd), jnp.int8),       # cache_v
+             jnp.ones((B, S, Hkv), jnp.float32),         # cache_vs
+             jnp.zeros((B, 1, Hkv, hd), jnp.float32),    # k_new
+             jnp.zeros((B, 1, Hkv, hd), jnp.float32),    # v_new
+             jnp.zeros((B, 1), jnp.int32)),              # idx
+            {"valid": jnp.ones((B, S), bool)})

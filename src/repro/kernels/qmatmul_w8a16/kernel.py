@@ -27,10 +27,16 @@ try:
             dimension_semantics=("parallel", "parallel", "arbitrary")
         )
     )
+    _PARAMS_MK = lambda: dict(
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")
+        )
+    )
 except ImportError:  # pragma: no cover
     pltpu = None
     _SCRATCH = lambda bm, bn: [jax.ShapeDtypeStruct((bm, bn), jnp.float32)]
     _PARAMS = lambda: {}
+    _PARAMS_MK = lambda: {}
 
 
 def _kernel(a_ref, w_ref, sw_ref, bias_ref, o_ref, acc_ref, *, n_k):
@@ -86,4 +92,75 @@ def qmatmul_w8a16_pallas(
         scratch_shapes=_SCRATCH(bm, bn),
         interpret=interpret,
         **_PARAMS(),
+    )(a, w_q, w_scale.astype(jnp.float32), bias.astype(jnp.float32))
+
+
+def _kernel_q8(a_ref, w_ref, sw_ref, bias_ref, q_ref, s_ref, acc_ref,
+               *, n_k, qmax):
+    """Quantize-out epilogue: per-row absmax + round in VMEM on the last K
+    step — the GEMM hands the next W8A8 layer int8 directly."""
+    k = pl.program_id(1)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    w = w_ref[...].astype(a_ref.dtype)  # int8 → compute dtype, in VMEM
+    acc_ref[...] += jax.lax.dot_general(
+        a_ref[...], w, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(k == n_k - 1)
+    def _epilogue():
+        out = acc_ref[...] * sw_ref[...][None, :] + bias_ref[...][None, :]
+        amax = jnp.max(jnp.abs(out), axis=-1)
+        scale = jnp.maximum(amax, 1e-8) / qmax
+        q = jnp.clip(jnp.round(out / scale[:, None]), -qmax - 1, qmax)
+        q_ref[...] = q.astype(jnp.int8)
+        s_ref[...] = scale
+
+
+@functools.partial(
+    jax.jit, static_argnames=("bm", "bk", "bits", "interpret")
+)
+def qmatmul_w8a16_q8_pallas(
+    a: jnp.ndarray,
+    w_q: jnp.ndarray,
+    w_scale: jnp.ndarray,
+    bias: jnp.ndarray,
+    *,
+    bm: int = 8,
+    bk: int = 1024,
+    bits: int = 8,
+    interpret: bool = False,
+):
+    """Weight-only GEMM emitting (int8 out, per-row scale). Single N block
+    (the row absmax needs the whole row in the epilogue) → grid (M/bm, K/bk)."""
+    M, K = a.shape
+    K2, N = w_q.shape
+    assert K == K2 and M % bm == 0 and K % bk == 0
+    n_k = K // bk
+    qmax = 2 ** (bits - 1) - 1
+    grid = (M // bm, n_k)
+    return pl.pallas_call(
+        functools.partial(_kernel_q8, n_k=n_k, qmax=qmax),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, k: (i, k)),
+            pl.BlockSpec((bk, N), lambda i, k: (k, 0)),
+            pl.BlockSpec((N,), lambda i, k: (0,)),
+            pl.BlockSpec((N,), lambda i, k: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bm, N), lambda i, k: (i, 0)),
+            pl.BlockSpec((bm,), lambda i, k: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((M, N), jnp.int8),
+            jax.ShapeDtypeStruct((M,), jnp.float32),
+        ],
+        scratch_shapes=_SCRATCH(bm, N),
+        interpret=interpret,
+        **_PARAMS_MK(),
     )(a, w_q, w_scale.astype(jnp.float32), bias.astype(jnp.float32))

@@ -1,22 +1,66 @@
-"""Public weight-only GEMM op with padding + backend selection."""
+"""Public weight-only GEMM op, registry-dispatched.
+
+``quantize_out=True`` selects the epilogue variant emitting (int8, per-row
+scale) — validated against the blocked ``qmatmul_w8a16_q8_ref`` oracle
+(fp32 accumulation order matters here, unlike the int32-exact W8A8 case).
+"""
 from __future__ import annotations
 
 from typing import Optional
 
-import jax
 import jax.numpy as jnp
 
-from .kernel import qmatmul_w8a16_pallas
-from .ref import qmatmul_w8a16_ref
+from ..dispatch import _pad_to, register_impl, register_spec, resolve
+from .kernel import qmatmul_w8a16_pallas, qmatmul_w8a16_q8_pallas
+from .ref import qmatmul_w8a16_q8_ref, qmatmul_w8a16_ref
 
 
-def _pad_to(x, m, axis):
-    pad = (-x.shape[axis]) % m
-    if pad == 0:
-        return x
-    widths = [(0, 0)] * x.ndim
-    widths[axis] = (0, pad)
-    return jnp.pad(x, widths)
+def _pallas_impl(a, w_q, w_scale, bias, *, out_dtype, bm, bn, bk,
+                 quantize_out, interpret):
+    M, K = a.shape
+    N = w_q.shape[1]
+    bm_e = min(bm, max(1, M))
+    bk_e = min(bk, K)
+    a_p = _pad_to(_pad_to(a, bm_e, 0), bk_e, 1)
+    if quantize_out:
+        w_p = _pad_to(_pad_to(w_q, bk_e, 0), 128, 1)
+        q, s = qmatmul_w8a16_q8_pallas(
+            a_p, w_p, _pad_to(w_scale, 128, 0), _pad_to(bias, 128, 0),
+            bm=bm_e, bk=bk_e, interpret=interpret)
+        return q[:M, :N], s[:M]
+    bn_e = min(bn, N)
+    w_p = _pad_to(_pad_to(w_q, bk_e, 0), bn_e, 1)
+    out = qmatmul_w8a16_pallas(
+        a_p, w_p, _pad_to(w_scale, bn_e, 0), _pad_to(bias, bn_e, 0),
+        bm=bm_e, bn=bn_e, bk=bk_e, out_dtype=out_dtype,
+        interpret=interpret,
+    )
+    return out[:M, :N]
+
+
+@register_impl("qmatmul_w8a16", "pallas", pad="zero")
+def _w8a16_pallas(a, w_q, w_scale, bias, *, out_dtype, bm, bn, bk,
+                  quantize_out):
+    return _pallas_impl(a, w_q, w_scale, bias, out_dtype=out_dtype, bm=bm,
+                        bn=bn, bk=bk, quantize_out=quantize_out,
+                        interpret=False)
+
+
+@register_impl("qmatmul_w8a16", "interpret", pad="zero")
+def _w8a16_interpret(a, w_q, w_scale, bias, *, out_dtype, bm, bn, bk,
+                     quantize_out):
+    return _pallas_impl(a, w_q, w_scale, bias, out_dtype=out_dtype, bm=bm,
+                        bn=bn, bk=bk, quantize_out=quantize_out,
+                        interpret=True)
+
+
+@register_impl("qmatmul_w8a16", "xla", pad="zero")
+@register_impl("qmatmul_w8a16", "ref", pad="zero")
+def _w8a16_ref(a, w_q, w_scale, bias, *, out_dtype, bm, bn, bk,
+               quantize_out):
+    if quantize_out:
+        return qmatmul_w8a16_q8_ref(a, w_q, w_scale, bias, bk=bk)
+    return qmatmul_w8a16_ref(a, w_q, w_scale, bias, out_dtype)
 
 
 def qmatmul_w8a16(
@@ -30,22 +74,23 @@ def qmatmul_w8a16(
     bm: int = 8,
     bn: int = 512,
     bk: int = 1024,
+    quantize_out: bool = False,
 ):
-    backend = backend or ("pallas" if jax.default_backend() == "tpu" else "interpret")
+    """y = a @ dequant(w_q) + bias; ``quantize_out=True`` returns
+    (y_q int8 [M,N], y_scale fp32 [M]) from the fused epilogue instead."""
+    impl = resolve("qmatmul_w8a16", backend)
     M, K = a.shape
     N = w_q.shape[1]
     w_scale = jnp.broadcast_to(jnp.asarray(w_scale, jnp.float32), (N,))
     bias = jnp.zeros((N,), jnp.float32) if bias is None else bias.astype(jnp.float32)
-    if backend == "xla":
-        return qmatmul_w8a16_ref(a, w_q, w_scale, bias, out_dtype)
-    bm_e = min(bm, max(1, M))
-    bn_e = min(bn, N)
-    bk_e = min(bk, K)
-    a_p = _pad_to(_pad_to(a, bm_e, 0), bk_e, 1)
-    w_p = _pad_to(_pad_to(w_q, bk_e, 0), bn_e, 1)
-    out = qmatmul_w8a16_pallas(
-        a_p, w_p, _pad_to(w_scale, bn_e, 0), _pad_to(bias, bn_e, 0),
-        bm=bm_e, bn=bn_e, bk=bk_e, out_dtype=out_dtype,
-        interpret=(backend == "interpret"),
-    )
-    return out[:M, :N]
+    return impl(a, w_q, w_scale, bias, out_dtype=out_dtype, bm=bm, bn=bn,
+                bk=bk, quantize_out=quantize_out)
+
+
+@register_spec("qmatmul_w8a16")
+def _spec(*, d_in: int = 64, d_out: int = 128, **_):
+    M, K, N = 8, d_in, d_out
+    return (qmatmul_w8a16,
+            (jnp.zeros((M, K), jnp.float32), jnp.zeros((K, N), jnp.int8),
+             jnp.ones((N,), jnp.float32)),
+            {"out_dtype": jnp.float32})

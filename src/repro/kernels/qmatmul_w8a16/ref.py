@@ -3,6 +3,7 @@ from __future__ import annotations
 
 from typing import Optional
 
+import jax
 import jax.numpy as jnp
 
 
@@ -18,3 +19,41 @@ def qmatmul_w8a16_ref(
     if bias is not None:
         out = out + bias[None, :]
     return out.astype(out_dtype)
+
+
+def qmatmul_w8a16_q8_ref(
+    a: jnp.ndarray,
+    w_q: jnp.ndarray,
+    w_scale: jnp.ndarray,
+    bias: Optional[jnp.ndarray] = None,
+    bits: int = 8,
+    *,
+    bk: int = 1024,
+):
+    """Blocked quantize-out oracle. Unlike the int32-exact W8A8 case, the
+    weight-only GEMM accumulates in fp32 — so this oracle mirrors the
+    kernel's K-block loop (dequant per block, f32 partial sums in kernel
+    order) before applying the ``quantize_act`` epilogue formula, keeping
+    the interpret-mode kernel bit-identical to the oracle for any K."""
+    M, K = a.shape
+    N = w_q.shape[1]
+    bk_e = min(bk, K)
+    pad = (-K) % bk_e
+    if pad:
+        a = jnp.pad(a, ((0, 0), (0, pad)))
+        w_q = jnp.pad(w_q, ((0, pad), (0, 0)))
+    acc = jnp.zeros((M, N), jnp.float32)
+    for k0 in range(0, K + pad, bk_e):
+        w_blk = w_q[k0:k0 + bk_e].astype(a.dtype)
+        acc = acc + jax.lax.dot_general(
+            a[:, k0:k0 + bk_e], w_blk, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+    out = acc * jnp.atleast_1d(w_scale)[None, :]
+    if bias is not None:
+        out = out + bias[None, :]
+    qmax = 2 ** (bits - 1) - 1
+    amax = jnp.max(jnp.abs(out), axis=-1)
+    scale = jnp.maximum(amax, 1e-8) / qmax
+    q = jnp.clip(jnp.round(out / scale[:, None]), -qmax - 1, qmax)
+    return q.astype(jnp.int8), scale

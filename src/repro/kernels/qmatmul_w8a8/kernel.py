@@ -31,10 +31,16 @@ try:  # TPU-only submodule; absent on CPU wheels — interpret mode doesn't need
             dimension_semantics=("parallel", "parallel", "arbitrary")
         )
     )
+    _PARAMS_MK = lambda: dict(
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")
+        )
+    )
 except ImportError:  # pragma: no cover
     pltpu = None
     _SCRATCH = lambda bm, bn: [jax.ShapeDtypeStruct((bm, bn), jnp.int32)]
     _PARAMS = lambda: {}
+    _PARAMS_MK = lambda: {}
 
 
 def _kernel(a_ref, w_ref, sa_ref, sw_ref, bias_ref, o_ref, acc_ref, *, n_k):
@@ -96,5 +102,85 @@ def qmatmul_w8a8_pallas(
         scratch_shapes=_SCRATCH(bm, bn),
         interpret=interpret,
         **_PARAMS(),
+    )(a_q, w_q, a_scale.astype(jnp.float32), w_scale.astype(jnp.float32),
+      bias.astype(jnp.float32))
+
+
+def _kernel_q8(a_ref, w_ref, sa_ref, sw_ref, bias_ref, q_ref, s_ref, acc_ref,
+               *, n_k, qmax):
+    """Quantize-out epilogue variant: the dequantized row never leaves VMEM —
+    the last K step re-quantizes it per-row (the exact ``quantize_act``
+    formula) so the next layer's W8A8 GEMM reads int8 straight from here."""
+    k = pl.program_id(1)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jax.lax.dot_general(
+        a_ref[...],
+        w_ref[...],
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+
+    @pl.when(k == n_k - 1)
+    def _epilogue():
+        acc = acc_ref[...].astype(jnp.float32)
+        out = acc * sa_ref[...][:, None] * sw_ref[...][None, :]
+        out = out + bias_ref[...][None, :]
+        amax = jnp.max(jnp.abs(out), axis=-1)
+        scale = jnp.maximum(amax, 1e-8) / qmax
+        q = jnp.clip(jnp.round(out / scale[:, None]), -qmax - 1, qmax)
+        q_ref[...] = q.astype(jnp.int8)
+        s_ref[...] = scale
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("bm", "bk", "bits", "interpret"),
+)
+def qmatmul_w8a8_q8_pallas(
+    a_q: jnp.ndarray,
+    w_q: jnp.ndarray,
+    a_scale: jnp.ndarray,
+    w_scale: jnp.ndarray,
+    bias: jnp.ndarray,
+    *,
+    bm: int = 128,
+    bk: int = 512,
+    bits: int = 8,
+    interpret: bool = False,
+):
+    """W8A8 GEMM emitting (int8 out, per-row scale). The N axis is a single
+    block (the per-row absmax needs the whole output row in the epilogue),
+    so the grid is (M/bm, K/bk) — decode/prefill N fits VMEM comfortably."""
+    M, K = a_q.shape
+    K2, N = w_q.shape
+    assert K == K2 and M % bm == 0 and K % bk == 0
+    n_k = K // bk
+    qmax = 2 ** (bits - 1) - 1
+    grid = (M // bm, n_k)
+    return pl.pallas_call(
+        functools.partial(_kernel_q8, n_k=n_k, qmax=qmax),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, k: (i, k)),
+            pl.BlockSpec((bk, N), lambda i, k: (k, 0)),
+            pl.BlockSpec((bm,), lambda i, k: (i,)),
+            pl.BlockSpec((N,), lambda i, k: (0,)),
+            pl.BlockSpec((N,), lambda i, k: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bm, N), lambda i, k: (i, 0)),
+            pl.BlockSpec((bm,), lambda i, k: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((M, N), jnp.int8),
+            jax.ShapeDtypeStruct((M,), jnp.float32),
+        ],
+        scratch_shapes=_SCRATCH(bm, N),
+        interpret=interpret,
+        **_PARAMS_MK(),
     )(a_q, w_q, a_scale.astype(jnp.float32), w_scale.astype(jnp.float32),
       bias.astype(jnp.float32))

@@ -1,4 +1,4 @@
-"""Public W8A8 GEMM op: padding, backend selection, asymmetric handling.
+"""Public W8A8 GEMM op: registry-dispatched backends, asymmetric handling.
 
 Asymmetric activations are supported by folding the cross terms outside the
 MXU loop (DESIGN.md §5):  with a = (a_q − zp)·s_a,
@@ -6,29 +6,72 @@ MXU loop (DESIGN.md §5):  with a = (a_q − zp)·s_a,
 the ``zp·colsum(w_q)`` term is static per output channel → folded into bias.
 Weights are symmetric by default (the paper observes CLE makes weight
 distributions near-symmetric — Table 7).
+
+``quantize_out=True`` selects the epilogue variant: the GEMM emits
+(int8 out, per-row scale) straight from VMEM — the exact ``quantize_act``
+formula applied to the fp result, so the stepwise GEMM → quantize_act pair
+collapses into one dispatch bit-identically.
 """
 from __future__ import annotations
 
 from typing import Optional
 
-import jax
 import jax.numpy as jnp
 
-from .kernel import qmatmul_w8a8_pallas
-from .ref import qmatmul_w8a8_ref
+from ..dispatch import _pad_to, register_impl, register_spec, resolve
+from .kernel import qmatmul_w8a8_pallas, qmatmul_w8a8_q8_pallas
+from .ref import qmatmul_w8a8_q8_ref, qmatmul_w8a8_ref
 
 
-def _pad_to(x, m, axis):
-    pad = (-x.shape[axis]) % m
-    if pad == 0:
-        return x
-    widths = [(0, 0)] * x.ndim
-    widths[axis] = (0, pad)
-    return jnp.pad(x, widths)
+def _pallas_impl(a_q, w_q, a_scale, w_scale, bias, *, out_dtype, bm, bn, bk,
+                 quantize_out, interpret):
+    M, K = a_q.shape
+    N = w_q.shape[1]
+    bm_e = min(bm, max(8, M))
+    a_p = _pad_to(_pad_to(a_q, bm_e, 0), bk, 1)
+    sa_p = _pad_to(a_scale, bm_e, 0)
+    if quantize_out:
+        # single-N-block variant: pad N to the lane width only (padded cols
+        # carry zero weights + zero bias → exact 0s that can't win a row's
+        # absmax, matching the zero-pad convention of the base GEMM)
+        w_p = _pad_to(_pad_to(w_q, bk, 0), 128, 1)
+        q, s = qmatmul_w8a8_q8_pallas(
+            a_p, w_p, sa_p, _pad_to(w_scale, 128, 0), _pad_to(bias, 128, 0),
+            bm=bm_e, bk=bk, interpret=interpret)
+        return q[:M, :N], s[:M]
+    w_p = _pad_to(_pad_to(w_q, bk, 0), bn, 1)
+    out = qmatmul_w8a8_pallas(
+        a_p, w_p, sa_p, _pad_to(w_scale, bn, 0), _pad_to(bias, bn, 0),
+        bm=bm_e, bn=bn, bk=bk, out_dtype=out_dtype, interpret=interpret,
+    )
+    return out[:M, :N]
 
 
-def default_backend() -> str:
-    return "pallas" if jax.default_backend() == "tpu" else "interpret"
+@register_impl("qmatmul_w8a8", "pallas", pad="zero")
+def _w8a8_pallas(a_q, w_q, a_scale, w_scale, bias, *, out_dtype, bm, bn, bk,
+                 quantize_out):
+    return _pallas_impl(a_q, w_q, a_scale, w_scale, bias, out_dtype=out_dtype,
+                        bm=bm, bn=bn, bk=bk, quantize_out=quantize_out,
+                        interpret=False)
+
+
+@register_impl("qmatmul_w8a8", "interpret", pad="zero")
+def _w8a8_interpret(a_q, w_q, a_scale, w_scale, bias, *, out_dtype, bm, bn,
+                    bk, quantize_out):
+    return _pallas_impl(a_q, w_q, a_scale, w_scale, bias, out_dtype=out_dtype,
+                        bm=bm, bn=bn, bk=bk, quantize_out=quantize_out,
+                        interpret=True)
+
+
+@register_impl("qmatmul_w8a8", "xla", pad="zero")
+@register_impl("qmatmul_w8a8", "ref", pad="zero")
+def _w8a8_ref(a_q, w_q, a_scale, w_scale, bias, *, out_dtype, bm, bn, bk,
+              quantize_out):
+    # int32 accumulation is exact, so the folded-scale oracle IS the
+    # production XLA path — one impl serves both tiers
+    if quantize_out:
+        return qmatmul_w8a8_q8_ref(a_q, w_q, a_scale, w_scale, bias)
+    return qmatmul_w8a8_ref(a_q, w_q, a_scale, w_scale, bias, out_dtype)
 
 
 def qmatmul_w8a8(
@@ -44,10 +87,14 @@ def qmatmul_w8a8(
     bm: int = 128,
     bn: int = 128,
     bk: int = 512,
+    quantize_out: bool = False,
 ):
     """y = dequant(a_q) @ dequant(w_q) + bias.  a_q [M,K] int8, w_q [K,N] int8,
-    a_scale [M]|scalar, w_scale [N]|scalar, bias [N]."""
-    backend = backend or default_backend()
+    a_scale [M]|scalar, w_scale [N]|scalar, bias [N].
+
+    ``quantize_out=True`` returns (y_q int8 [M,N], y_scale fp32 [M]) instead
+    — the fused GEMM+quantize epilogue feeding the next W8A8 layer."""
+    impl = resolve("qmatmul_w8a8", backend)
     M, K = a_q.shape
     N = w_q.shape[1]
     a_scale = jnp.broadcast_to(jnp.asarray(a_scale, jnp.float32), (M,))
@@ -55,6 +102,11 @@ def qmatmul_w8a8(
     bias = jnp.zeros((N,), jnp.float32) if bias is None else bias.astype(jnp.float32)
 
     if a_zero_point is not None:
+        if quantize_out:
+            raise ValueError(
+                "qmatmul_w8a8: quantize_out folds the epilogue into the "
+                "kernel, but the zero-point correction is applied post-GEMM "
+                "— drop a_zero_point (symmetric activations) or quantize_out")
         # fold zp·colsum(w) into a per-(row, col) rank-1 correction; since
         # zp is per-row and colsum per-col, we add it post-GEMM (cheap VPU).
         colsum = jnp.sum(w_q.astype(jnp.int32), axis=0).astype(jnp.float32)
@@ -67,20 +119,17 @@ def qmatmul_w8a8(
     else:
         zp_term = None
 
-    if backend == "xla":
-        out = qmatmul_w8a8_ref(a_q, w_q, a_scale, w_scale, bias, out_dtype)
-    else:
-        bm_e = min(bm, max(8, M))
-        a_p = _pad_to(_pad_to(a_q, bm_e, 0), bk, 1)
-        w_p = _pad_to(_pad_to(w_q, bk, 0), bn, 1)
-        sa_p = _pad_to(a_scale, bm_e, 0)
-        sw_p = _pad_to(w_scale, bn, 0)
-        b_p = _pad_to(bias, bn, 0)
-        out = qmatmul_w8a8_pallas(
-            a_p, w_p, sa_p, sw_p, b_p,
-            bm=bm_e, bn=bn, bk=bk, out_dtype=out_dtype,
-            interpret=(backend == "interpret"),
-        )[:M, :N]
+    out = impl(a_q, w_q, a_scale, w_scale, bias, out_dtype=out_dtype,
+               bm=bm, bn=bn, bk=bk, quantize_out=quantize_out)
     if zp_term is not None:
         out = (out.astype(jnp.float32) - zp_term).astype(out_dtype)
     return out
+
+
+@register_spec("qmatmul_w8a8")
+def _spec(*, d_in: int = 64, d_out: int = 128, **_):
+    M, K, N = 8, d_in, d_out
+    return (qmatmul_w8a8,
+            (jnp.zeros((M, K), jnp.int8), jnp.zeros((K, N), jnp.int8),
+             jnp.ones((M,), jnp.float32), jnp.ones((N,), jnp.float32)),
+            {})

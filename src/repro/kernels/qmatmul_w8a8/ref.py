@@ -22,3 +22,21 @@ def qmatmul_w8a8_ref(
     if bias is not None:
         out = out + bias[None, :]
     return out.astype(out_dtype)
+
+
+def qmatmul_w8a8_q8_ref(
+    a_q: jnp.ndarray,
+    w_q: jnp.ndarray,
+    a_scale: jnp.ndarray,
+    w_scale: jnp.ndarray,
+    bias: Optional[jnp.ndarray] = None,
+    bits: int = 8,
+):
+    """Quantize-out oracle: the fp GEMM result (exact — int32 accumulation)
+    re-quantized per-row with the ``quantize_act`` formula. Bit-identical to
+    the Pallas epilogue variant AND to the stepwise GEMM → quantize_act
+    composition it replaces."""
+    from ..quantize_act.ref import quantize_act_ref
+
+    out = qmatmul_w8a8_ref(a_q, w_q, a_scale, w_scale, bias, jnp.float32)
+    return quantize_act_ref(out, bits)

@@ -1,24 +1,45 @@
-"""Public dynamic-quantize op with padding + backend selection."""
+"""Public dynamic-quantize op, registry-dispatched."""
 from __future__ import annotations
 
 from typing import Optional
 
-import jax
 import jax.numpy as jnp
 
+from ..dispatch import _pad_to, register_impl, register_spec, resolve
 from .kernel import quantize_act_pallas
 from .ref import quantize_act_ref
+
+
+def _pallas_impl(x, *, bits, bm, interpret):
+    M, K = x.shape
+    bm_e = min(bm, M)
+    x_p = _pad_to(x, bm_e, 0)
+    q, s = quantize_act_pallas(x_p, bits=bits, bm=bm_e, interpret=interpret)
+    return q[:M], s[:M]
+
+
+@register_impl("quantize_act", "pallas", pad="zero")
+def _qact_pallas(x, *, bits, bm):
+    return _pallas_impl(x, bits=bits, bm=bm, interpret=False)
+
+
+@register_impl("quantize_act", "interpret", pad="zero")
+def _qact_interpret(x, *, bits, bm):
+    return _pallas_impl(x, bits=bits, bm=bm, interpret=True)
+
+
+@register_impl("quantize_act", "xla", pad="zero")
+@register_impl("quantize_act", "ref", pad="zero")
+def _qact_ref(x, *, bits, bm):
+    return quantize_act_ref(x, bits)
 
 
 def quantize_act(
     x: jnp.ndarray, *, bits: int = 8, backend: Optional[str] = None, bm: int = 128
 ):
-    backend = backend or ("pallas" if jax.default_backend() == "tpu" else "interpret")
-    if backend == "xla":
-        return quantize_act_ref(x, bits)
-    M, K = x.shape
-    bm_e = min(bm, M)
-    pad = (-M) % bm_e
-    x_p = jnp.pad(x, ((0, pad), (0, 0))) if pad else x
-    q, s = quantize_act_pallas(x_p, bits=bits, bm=bm_e, interpret=(backend == "interpret"))
-    return q[:M], s[:M]
+    return resolve("quantize_act", backend)(x, bits=bits, bm=bm)
+
+
+@register_spec("quantize_act")
+def _spec(*, d_in: int = 64, **_):
+    return (quantize_act, (jnp.zeros((8, d_in), jnp.float32),), {})

@@ -11,10 +11,16 @@ dispatch, slot-based KV-cache pool, FIFO admission).
     # tensor-parallel sharded serving (8 virtual CPU devices):
     XLA_FLAGS=--xla_force_host_platform_device_count=8 \
         python -m repro.launch.serve --arch qwen2-0.5b --smoke --mesh 2x4
+
+The flag surface is the typed ``ServeConfig`` dataclass (serve_config.py) —
+argparse is derived from it, and ``serve(config)`` is the public API peer
+of ``repro.quantize``:
+
+    import repro
+    repro.serve(repro.ServeConfig(arch="qwen2-0.5b", smoke=True, trace=20))
 """
 from __future__ import annotations
 
-import argparse
 import dataclasses
 import signal
 import time
@@ -34,216 +40,69 @@ from ..serving import (
     required_cache_len,
     synthetic_trace,
 )
+from .serve_config import (          # noqa: F401  (re-exported API surface)
+    ServeConfig,
+    ServeConfigError,
+    build_parser,
+)
 
 
-def main(argv=None):
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="qwen2-0.5b")
-    ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--quantize", choices=["none", "w8a16", "w8a8"], default="w8a16")
-    ap.add_argument("--recipe", default=None,
-                    help="pipeline recipe name (overrides --quantize)")
-    ap.add_argument("--kv-bits", type=int, choices=[8, 16], default=None,
-                    help="KV-cache precision: 8 = int8 payload + per-token/"
-                         "per-head scales (~4x fewer cache bytes/slot, "
-                         "decode attends through the kv_attention kernel), "
-                         "16 = fp. Default: what the recipe/artifact "
-                         "recorded (--quantize w8a16 --kv-bits 8 selects "
-                         "the serve-w8a16-kv8 recipe)")
-    ap.add_argument("--mesh", default=None, metavar="DxM",
-                    help="serve sharded over a device mesh, e.g. 2x4 = "
-                         "(\"data\": 2, \"model\": 4) — slots shard over "
-                         "data, weights TP over model (a P x D x M form adds "
-                         "the leading \"pod\" axis). Needs D*M devices: on "
-                         "CPU set XLA_FLAGS="
-                         "--xla_force_host_platform_device_count=N. "
-                         "Default: the mesh recorded in a --load artifact, "
-                         "else single-device")
-    ap.add_argument("--save", default=None, metavar="DIR",
-                    help="persist the QuantizedModel after quantization "
-                         "(with --mesh: the serve-mode partition specs are "
-                         "recorded in the artifact)")
-    ap.add_argument("--load", default=None, metavar="DIR",
-                    help="serve a saved QuantizedModel (skips quantization)")
-    ap.add_argument("--verbose", action="store_true",
-                    help="print per-site weight SQNR diagnostics")
-    ap.add_argument("--batch", type=int, default=4,
-                    help="without --trace: number of uniform requests")
-    ap.add_argument("--prompt-len", type=int, default=32)
-    ap.add_argument("--gen-len", type=int, default=32)
-    ap.add_argument("--slots", type=int, default=4,
-                    help="engine cache-pool size (decode batch width)")
-    ap.add_argument("--max-len", type=int, default=None,
-                    help="per-slot KV capacity (default: fits prompt+gen)")
-    ap.add_argument("--prefill-chunk", type=int, default=16)
-    ap.add_argument("--page-size", type=int, default=None, metavar="PG",
-                    help="switch the KV pool to the paged layout: fixed "
-                         "PG-position pages + per-slot page tables, with "
-                         "refcounted copy-on-write shared-prefix reuse "
-                         "(requests sharing a prompt prefix share its pages "
-                         "physically). Tokens are bit-identical to the "
-                         "contiguous pool. Default: contiguous")
-    ap.add_argument("--num-pages", type=int, default=None,
-                    help="page-pool size (with --page-size); default gives "
-                         "every slot a full ring — smaller pools admit by "
-                         "page demand and lean on prefix sharing")
-    ap.add_argument("--no-prefix-reuse", action="store_true",
-                    help="with --page-size: disable the scheduler's prefix "
-                         "index (pages without sharing)")
-    ap.add_argument("--decode-horizon", type=int, default=8,
-                    help="max decode steps fused into one device dispatch "
-                         "(the engine adapts the actual horizon to budgets "
-                         "and scheduled arrivals)")
-    ap.add_argument("--reference", action="store_true",
-                    help="use the stepwise fast=False reference path (one "
-                         "dispatch + one host sync per token) instead of "
-                         "the device-resident fast path")
-    ap.add_argument("--warmup", action="store_true",
-                    help="pre-compile all pow2 prefill/horizon shapes "
-                         "before serving (excluded from the timed run)")
-    ap.add_argument("--trace", type=int, default=0, metavar="N",
-                    help="replay a synthetic arrival schedule of N requests "
-                         "(mixed log-uniform lengths, Poisson arrivals)")
-    ap.add_argument("--trace-seed", type=int, default=0)
-    ap.add_argument("--max-queue", type=int, default=None, metavar="Q",
-                    help="bound the admission queue: submissions beyond Q "
-                         "shed with the retryable QueueFull error "
-                         "(back-pressure). Default: unbounded")
-    ap.add_argument("--serve-async", action="store_true",
-                    help="serve the --trace through the overload-safe async "
-                         "front-end (serving.AsyncServer): per-request token "
-                         "streaming, client retry with backoff + jitter on "
-                         "the retryable taxonomy, circuit breaker, and "
-                         "priority-aware load shedding; reports the SLO view "
-                         "(TTFT / per-token percentiles, goodput)")
-    ap.add_argument("--qps", type=float, default=0.5, metavar="R",
-                    help="with --serve-async: offered Poisson arrival rate "
-                         "in requests per engine tick (open loop)")
-    ap.add_argument("--timeout", type=float, default=None, metavar="T",
-                    help="with --serve-async: per-request client timeout in "
-                         "engine ticks, enforced as the engine deadline "
-                         "(tighter of this and --deadline wins)")
-    ap.add_argument("--retry-attempts", type=int, default=4,
-                    help="with --serve-async: max submission attempts per "
-                         "request (retryable rejections back off with "
-                         "exponential backoff + full jitter)")
-    ap.add_argument("--breaker-cooldown", type=float, default=16.0,
-                    help="with --serve-async: circuit-breaker cooldown in "
-                         "engine ticks before a half-open probe")
-    ap.add_argument("--shed-pressure", type=float, default=0.5,
-                    help="with --serve-async: queue pressure (depth/bound) "
-                         "at which the lowest priority class is shed; "
-                         "deadlines tighten at 1.5x this value and all "
-                         "requests are refused at 2x (capped at 1.0)")
-    ap.add_argument("--straggler-threshold", type=float, default=None,
-                    metavar="X",
-                    help="flag an engine step as a straggler when its wall "
-                         "time exceeds X times the EMA of recent steps "
-                         "(surfaced as stats['straggler_threshold'] and in "
-                         "the final report). Default: the monitor's 2.0")
-    ap.add_argument("--deadline", type=float, default=None, metavar="T",
-                    help="give every request a deadline of T engine ticks "
-                         "after its arrival; expired requests are shed "
-                         "(queued) or cut short (in flight) at the next "
-                         "step boundary and report status 'expired'")
-    ap.add_argument("--lint", action="store_true",
-                    help="run the QuantLint graph linter over this engine's "
-                         "compiled serve paths before serving (warn-only "
-                         "here; `python -m repro.analysis.lint --check` is "
-                         "the blocking CI gate)")
-    args = ap.parse_args(argv)
+def _check_servable(cfg, what):
+    if cfg.family in ("ssm", "hybrid") or cfg.is_encdec:
+        raise ServeConfigError(
+            f"{what}: the continuous-batching engine serves "
+            f"attention-family decoder-only models; quantize "
+            f"{cfg.family!r} archs via repro.pipeline.cli and run them "
+            f"through model.prefill/decode_step directly"
+        )
 
-    # validate flag combinations BEFORE any quantization runs: a typo must
-    # not discard minutes of pipeline work
-    if args.num_pages is not None and args.page_size is None:
-        ap.error("--num-pages needs --page-size")
-    if args.max_queue is not None and args.max_queue < 1:
-        ap.error("--max-queue must be >= 1")
-    if args.deadline is not None and args.deadline <= 0:
-        ap.error("--deadline must be > 0 engine ticks")
-    if args.no_prefix_reuse and args.page_size is None:
-        ap.error("--no-prefix-reuse needs --page-size")
-    if args.serve_async and not args.trace:
-        ap.error("--serve-async needs --trace N (open-loop arrivals)")
-    if args.serve_async and args.qps <= 0:
-        ap.error("--qps must be > 0 requests/tick")
-    if args.serve_async and args.retry_attempts < 1:
-        ap.error("--retry-attempts must be >= 1")
-    if not 0.0 < args.shed_pressure <= 1.0:
-        ap.error("--shed-pressure must be in (0, 1]")
-    if args.straggler_threshold is not None and args.straggler_threshold <= 1:
-        ap.error("--straggler-threshold must be > 1 (a slowdown multiplier)")
-    cli_shape = None
-    if args.mesh:
-        try:
-            cli_shape = tuple(int(s) for s in args.mesh.lower().split("x"))
-        except ValueError:
-            cli_shape = ()
-        if len(cli_shape) not in (2, 3) or any(s < 1 for s in cli_shape):
-            ap.error(f"--mesh wants DxM (or PxDxM), e.g. 2x4; got {args.mesh!r}")
-        need = int(np.prod(cli_shape))
-        if need > jax.device_count():
-            ap.error(
-                f"--mesh {args.mesh} needs {need} devices but jax sees "
-                f"{jax.device_count()}; on CPU set XLA_FLAGS="
-                f"--xla_force_host_platform_device_count={need}"
-            )
 
-    def check_servable(cfg, what):
-        if cfg.family in ("ssm", "hybrid") or cfg.is_encdec:
-            ap.error(
-                f"{what}: the continuous-batching engine serves "
-                f"attention-family decoder-only models; quantize "
-                f"{cfg.family!r} archs via repro.pipeline.cli and run them "
-                f"through model.prefill/decode_step directly"
-            )
+def serve(config: ServeConfig):
+    """Quantize (or ``load``) a model and serve it — the whole driver behind
+    ``python -m repro.launch.serve``, callable as ``repro.serve(config)``.
+    Returns the engine's ``{rid: RequestResult}`` map. Invalid or
+    conflicting configuration raises ``ServeConfigError``."""
+    config = dataclasses.replace(config).validate()
+    cli_mesh = config.mesh        # pre-merge: distinguishes --mesh vs artifact
 
-    if args.load:
-        if args.recipe or args.smoke or args.quantize != "w8a16":
-            print("warning: --load serves the saved artifact as-is; "
-                  "--arch/--smoke/--recipe/--quantize are ignored "
-                  "(--save re-saves it, recording specs when --mesh is set)")
-        qm = QuantizedModel.load(args.load)
+    qm = None
+    if config.load:
+        qm = QuantizedModel.load(config.load)
+        _check_servable(qm.cfg, f"--load {config.load} (arch {qm.cfg.name})")
+        # the artifact's kv_cache stage already quantized FOR its recorded
+        # precision (and its weights ARE the recorded recipe) — one
+        # precedence rule covers every CLI-vs-artifact field
+        config, notes = config.with_artifact(ServeConfig.from_artifact(qm))
+        for n in notes:
+            print(f"note: {n}")
         cfg, model, params = qm.cfg, qm.model, qm.params
-        check_servable(cfg, f"--load {args.load} (arch {cfg.name})")
-        if args.kv_bits is not None and cfg.kv_cache_bits != args.kv_bits:
-            # the artifact's kv_cache stage already quantized FOR its
-            # recorded precision — silently serving at another one would
-            # ship a cache the calibration never saw
-            ap.error(
-                f"--kv-bits {args.kv_bits} conflicts with --load "
-                f"{args.load}: the artifact recorded kv_cache_bits="
-                f"{cfg.kv_cache_bits} (recipe {qm.recipe.name!r}). Either "
-                f"drop --kv-bits to serve as recorded, or re-quantize with "
-                f"a kv{args.kv_bits} recipe"
-            )
-        print(f"loaded QuantizedModel from {args.load} "
+        print(f"loaded QuantizedModel from {config.load} "
               f"(arch {cfg.name}, recipe {qm.recipe.name!r})")
     else:
-        cfg = get_config(args.arch, smoke=args.smoke)
-        check_servable(cfg, f"--arch {args.arch}")
+        cfg = get_config(config.arch, smoke=config.smoke)
+        _check_servable(cfg, f"--arch {config.arch}")
         model = build_model(cfg)
-        qm = None
-        if args.recipe or args.quantize != "none":
-            recipe = args.recipe
+        if config.recipe or config.quantize != "none":
+            recipe = config.recipe
             if recipe is None:
                 from ..pipeline.recipes import BUILTIN_RECIPES
 
-                recipe = (f"serve-{args.quantize}-kv8" if args.kv_bits == 8
-                          else f"serve-{args.quantize}")
+                recipe = (f"serve-{config.quantize}-kv8"
+                          if config.kv_bits == 8
+                          else f"serve-{config.quantize}")
                 # --mesh prefers the -tp recipe variant (adds the shard
                 # stage, so the artifact records the parallelism plan); the
                 # engine serves any recipe sharded either way
-                if args.mesh and f"{recipe}-tp" in BUILTIN_RECIPES:
+                if config.mesh and f"{recipe}-tp" in BUILTIN_RECIPES:
                     recipe = f"{recipe}-tp"
             qm = quantize(model, recipe=recipe)
-            if (args.kv_bits is not None
-                    and qm.cfg.kv_cache_bits != args.kv_bits):
+            if (config.kv_bits is not None
+                    and qm.cfg.kv_cache_bits != config.kv_bits):
                 # an explicit --recipe may not carry a kv_cache stage: fold
                 # the requested KV precision into the artifact so a --save /
                 # --load round trip serves with the same cache as this run
                 qm.cfg = dataclasses.replace(
-                    qm.cfg, kv_cache_bits=args.kv_bits)
+                    qm.cfg, kv_cache_bits=config.kv_bits)
                 qm.model = build_model(qm.cfg)
             cfg, model, params = qm.cfg, qm.model, qm.params
         else:
@@ -251,12 +110,10 @@ def main(argv=None):
 
     # ------------------------------------------------------------------ mesh
     mesh = None
-    mesh_src, shape = None, None
-    if cli_shape is not None:               # validated up front, pre-pipeline
-        shape, mesh_src = cli_shape, "--mesh"
-    elif qm is not None and qm.shard_mode and qm.sharding.get("mesh_shape"):
-        shape = tuple(qm.sharding["mesh_shape"])
-        mesh_src = "artifact-recorded mesh"
+    shape = config.mesh
+    mesh_src = ("--mesh" if shape is not None and shape == cli_mesh
+                else "artifact-recorded mesh" if shape is not None else None)
+    if mesh_src == "artifact-recorded mesh":
         need = int(np.prod(shape))
         if need > jax.device_count():
             # artifact-recorded topology on a smaller host: serve unsharded
@@ -271,7 +128,7 @@ def main(argv=None):
         mesh = make_production_mesh(shape=shape)
         print(f"mesh ({mesh_src}): "
               f"{dict(zip(mesh.axis_names, (mesh.shape[a] for a in mesh.axis_names)))}")
-    elif qm is not None and qm.shard_mode and not mesh_src:
+    elif qm is not None and qm.shard_mode and mesh_src is None:
         print(f"note: artifact records {qm.shard_mode!r} sharding; pass "
               f"--mesh DxM to serve it across a device mesh")
 
@@ -281,80 +138,81 @@ def main(argv=None):
               f"{s['int8_bytes'] / 1e6:.1f} MB "
               f"vs fp32 {s['fp32_bytes'] / 1e6:.1f} MB "
               f"({s['compression']:.2f}x)")
-        if args.verbose:
+        if config.verbose:
             from ..pipeline.cli import print_site_sqnr
 
             print_site_sqnr(qm)
-        if args.save:
-            qm.save(args.save, mesh=mesh)
-            print(f"saved QuantizedModel to {args.save}"
+        if config.save:
+            qm.save(config.save, mesh=mesh)
+            print(f"saved QuantizedModel to {config.save}"
                   + (" (serve-mode specs recorded)"
                      if mesh is not None and qm.shard_mode else ""))
 
     # ---------------------------------------------------------------- engine
-    C = args.prefill_chunk
-    if args.trace:
-        if args.prompt_len < 1 or args.gen_len < 1:
-            ap.error("--trace needs --prompt-len/--gen-len >= 1")
-        p_lo, g_lo = min(4, args.prompt_len), min(4, args.gen_len)
-        if args.serve_async:
+    C = config.prefill_chunk
+    if config.trace:
+        p_lo, g_lo = min(4, config.prompt_len), min(4, config.gen_len)
+        if config.serve_async:
             # two priority classes so the shedder's lowest-class rung has a
             # victim population (class 1 survives rung 1)
             requests = open_loop_trace(
-                args.trace_seed, args.trace, args.qps,
+                config.trace_seed, config.trace, config.qps,
                 vocab_size=cfg.vocab_size,
-                prompt_lens=(p_lo, args.prompt_len),
-                gen_lens=(g_lo, args.gen_len), priority_levels=2,
+                prompt_lens=(p_lo, config.prompt_len),
+                gen_lens=(g_lo, config.gen_len), priority_levels=2,
             )
         else:
             requests = synthetic_trace(
-                args.trace_seed, args.trace, vocab_size=cfg.vocab_size,
-                prompt_lens=(p_lo, args.prompt_len),
-                gen_lens=(g_lo, args.gen_len), mean_interarrival=1.0,
+                config.trace_seed, config.trace, vocab_size=cfg.vocab_size,
+                prompt_lens=(p_lo, config.prompt_len),
+                gen_lens=(g_lo, config.gen_len), mean_interarrival=1.0,
             )
-        if args.deadline is not None:
+        if config.deadline is not None:
             requests = [dataclasses.replace(
-                r, deadline=r.arrival + args.deadline) for r in requests]
-        rate = f" at {args.qps:g} req/tick" if args.serve_async else ""
+                r, deadline=r.arrival + config.deadline) for r in requests]
+        rate = f" at {config.qps:g} req/tick" if config.serve_async else ""
         print(f"trace: {len(requests)} requests, "
-              f"prompt {p_lo}..{args.prompt_len}, "
-              f"gen {g_lo}..{args.gen_len}, Poisson arrivals{rate}")
+              f"prompt {p_lo}..{config.prompt_len}, "
+              f"gen {g_lo}..{config.gen_len}, Poisson arrivals{rate}")
     else:
         prompts = np.asarray(
-            calibration_tokens(0, args.batch, args.prompt_len, cfg.vocab_size)
+            calibration_tokens(0, config.batch, config.prompt_len,
+                               cfg.vocab_size)
         )
         requests = [
-            Request(rid=i, prompt=prompts[i], max_new_tokens=args.gen_len,
-                    deadline=(args.deadline if args.deadline is not None
-                              else None))
-            for i in range(args.batch)
+            Request(rid=i, prompt=prompts[i],
+                    max_new_tokens=config.gen_len,
+                    deadline=(config.deadline
+                              if config.deadline is not None else None))
+            for i in range(config.batch)
         ]
 
     need = max(
         required_cache_len(len(r.prompt), r.max_new_tokens, C)
         for r in requests
     )
-    max_len = args.max_len or need
+    max_len = config.max_len or need
     straggler = None
-    if args.straggler_threshold is not None:
+    if config.straggler_threshold is not None:
         from ..runtime.fault_tolerance import StragglerMonitor
 
-        straggler = StragglerMonitor(threshold=args.straggler_threshold)
+        straggler = StragglerMonitor(threshold=config.straggler_threshold)
     engine = ServingEngine(
-        model, params, cfg, num_slots=args.slots, max_len=max_len,
-        prefill_chunk=C, decode_horizon=args.decode_horizon,
-        fast=not args.reference, kv_bits=args.kv_bits, mesh=mesh,
-        page_size=args.page_size, num_pages=args.num_pages,
-        prefix_reuse=not args.no_prefix_reuse, max_queue=args.max_queue,
+        model, params, cfg, num_slots=config.slots, max_len=max_len,
+        prefill_chunk=C, decode_horizon=config.decode_horizon,
+        fast=not config.reference, kv_bits=config.kv_bits, mesh=mesh,
+        page_size=config.page_size, num_pages=config.num_pages,
+        prefix_reuse=config.prefix_reuse, max_queue=config.max_queue,
         straggler=straggler,
     )
     layout = (f"paged ({engine.pool.num_pages} pages x {engine.page_size} "
               f"positions, prefix reuse "
               f"{'on' if engine.prefix_index is not None else 'off'})"
-              if engine.paged else f"{args.slots} slots x {max_len} positions")
+              if engine.paged
+              else f"{config.slots} slots x {max_len} positions")
     print(f"kv cache: {'int8' if engine.kv_bits == 8 else 'fp'} "
           f"({engine.pool.bytes_per_slot() / 1e3:.1f} kB/slot, {layout})")
-    if args.lint:
+    if config.lint:
         from ..analysis.lint import lint_engine
 
         recipe_name = qm.recipe.name if qm is not None else "fp32"
@@ -364,7 +222,7 @@ def main(argv=None):
         print(f"--lint: {'FAIL' if n_err else 'pass'} "
               f"({time.time() - t0:.1f} s; warn-only at runtime — serving "
               f"continues)")
-    if args.warmup:
+    if config.warmup:
         t0 = time.time()
         engine.warmup()
         print(f"warmup: compiled serving shapes in {time.time() - t0:.1f} s")
@@ -374,7 +232,7 @@ def main(argv=None):
     t0 = time.time()
     sigterm: list = []   # the async path drains on normal close too, so the
     #                      report needs to know whether SIGTERM actually fired
-    if args.serve_async:
+    if config.serve_async:
         import asyncio
 
         from ..serving import (
@@ -388,23 +246,23 @@ def main(argv=None):
             summarize,
         )
 
-        sp = args.shed_pressure
+        sp = config.shed_pressure
         server = AsyncServer(
             engine,
-            breaker=CircuitBreaker(cooldown=args.breaker_cooldown),
+            breaker=CircuitBreaker(cooldown=config.breaker_cooldown),
             shed=ShedPolicy(shed_pressure=sp,
                             tighten_pressure=min(1.0, 1.5 * sp),
                             refuse_pressure=min(1.0, 2.0 * sp)),
         )
         client = AsyncClient(
-            server, RetryPolicy(max_attempts=args.retry_attempts),
-            seed=args.trace_seed)
+            server, RetryPolicy(max_attempts=config.retry_attempts),
+            seed=config.trace_seed)
         prev_handler = signal.signal(
             signal.SIGTERM,
             lambda *_: (sigterm.append(1), server.drain()))
         try:
             outcomes = asyncio.run(run_open_loop(
-                server, client, requests, timeout=args.timeout))
+                server, client, requests, timeout=config.timeout))
         finally:
             signal.signal(signal.SIGTERM, prev_handler)
         dt = time.time() - t0
@@ -445,8 +303,8 @@ def main(argv=None):
         print(f"drain: SIGTERM received — admission stopped, "
               f"{engine.scheduler.pending()} queued requests unserved")
     gen = engine.stats["generated_tokens"]
-    path = "reference (stepwise)" if args.reference else \
-        f"fast (decode horizon {args.decode_horizon})"
+    path = "reference (stepwise)" if config.reference else \
+        f"fast (decode horizon {config.decode_horizon})"
     if mesh is not None:
         path += f", sharded {'x'.join(str(mesh.shape[a]) for a in mesh.axis_names)}"
     print(f"served {len(results)} requests / {gen} generated tokens "
@@ -475,6 +333,15 @@ def main(argv=None):
     first = results[min(results)]
     print(f"sample token ids (rid {first.rid}):", first.tokens[:12])
     return results
+
+
+def main(argv=None):
+    ap = build_parser()
+    args = ap.parse_args(argv)
+    try:
+        return serve(ServeConfig.from_args(args))
+    except ServeConfigError as e:
+        ap.error(str(e))
 
 
 if __name__ == "__main__":

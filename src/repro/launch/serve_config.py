@@ -1,0 +1,342 @@
+"""Typed serving configuration: ONE source of truth for the serve surface.
+
+``ServeConfig`` replaces the 33 loose ``add_argument`` flags that used to
+live in ``launch/serve.py``: every knob is a typed dataclass field whose
+metadata carries its CLI face (flag, help, choices), so ``build_parser()``
+derives the argparse parser FROM the dataclass and the two can never drift.
+The same object is the public API:
+
+    import repro
+    results = repro.serve(repro.ServeConfig(arch="qwen2-0.5b", smoke=True,
+                                            quantize="w8a8", trace=20))
+
+Invalid values raise ``ServeConfigError`` (the CLI maps it to
+``parser.error``; the API surfaces it as-is).
+
+CLI-vs-artifact precedence is ONE rule (``with_artifact``), generalizing
+what used to be an ad-hoc ``--kv-bits``-vs-``--load`` check: CLI > artifact
+> default, except fields the artifact already *is* ("baked": arch / smoke /
+quantize / recipe — a differing CLI value is reported as ignored) and
+fields the calibration is bound to ("must-match": kv_bits — a differing
+CLI value raises, naming both sides).
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+from typing import Optional, Tuple
+
+
+class ServeConfigError(ValueError):
+    """Invalid or conflicting serving configuration."""
+
+
+def parse_mesh(spec) -> Optional[Tuple[int, ...]]:
+    """"2x4" -> (2, 4); accepts an already-parsed tuple or None."""
+    if spec is None or isinstance(spec, tuple):
+        return spec
+    try:
+        shape = tuple(int(s) for s in str(spec).lower().split("x"))
+    except ValueError:
+        shape = ()
+    if len(shape) not in (2, 3) or any(s < 1 for s in shape):
+        raise ServeConfigError(
+            f"--mesh wants DxM (or PxDxM), e.g. 2x4; got {spec!r}")
+    return shape
+
+
+def _f(default, help=None, **cli):
+    """A ServeConfig field plus its argparse face, declared once."""
+    return dataclasses.field(default=default, metadata={"help": help, **cli})
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    # ------------------------------------------------------ model / artifact
+    arch: str = _f("qwen2-0.5b", "architecture id (see configs.registry)")
+    smoke: bool = _f(False, "use the arch's smoke-sized config", switch=True)
+    quantize: str = _f("w8a16", "weight/activation scheme (none = fp32)",
+                       choices=["none", "w8a16", "w8a8"])
+    recipe: Optional[str] = _f(
+        None, "pipeline recipe name (overrides --quantize)")
+    kv_bits: Optional[int] = _f(
+        None,
+        "KV-cache precision: 8 = int8 payload + per-token/per-head scales "
+        "(~4x fewer cache bytes/slot, decode attends through the "
+        "kv_attention kernel), 16 = fp. Default: what the recipe/artifact "
+        "recorded (--quantize w8a16 --kv-bits 8 selects the serve-w8a16-kv8 "
+        "recipe)", type=int, choices=[8, 16], artifact_name="kv_cache_bits")
+    mesh: Optional[Tuple[int, ...]] = _f(
+        None,
+        "serve sharded over a device mesh, e.g. 2x4 = (\"data\": 2, "
+        "\"model\": 4) — slots shard over data, weights TP over model (a "
+        "P x D x M form adds the leading \"pod\" axis). Needs D*M devices: "
+        "on CPU set XLA_FLAGS=--xla_force_host_platform_device_count=N. "
+        "Default: the mesh recorded in a --load artifact, else "
+        "single-device", metavar="DxM", parse=parse_mesh)
+    save: Optional[str] = _f(
+        None, "persist the QuantizedModel after quantization (with --mesh: "
+        "the serve-mode partition specs are recorded in the artifact)",
+        metavar="DIR")
+    load: Optional[str] = _f(
+        None, "serve a saved QuantizedModel (skips quantization)",
+        metavar="DIR")
+    verbose: bool = _f(False, "print per-site weight SQNR diagnostics",
+                       switch=True)
+    # ------------------------------------------------------------- workload
+    batch: int = _f(4, "without --trace: number of uniform requests",
+                    type=int)
+    prompt_len: int = _f(32, None, type=int)
+    gen_len: int = _f(32, None, type=int)
+    # --------------------------------------------------------------- engine
+    slots: int = _f(4, "engine cache-pool size (decode batch width)",
+                    type=int)
+    max_len: Optional[int] = _f(
+        None, "per-slot KV capacity (default: fits prompt+gen)", type=int)
+    prefill_chunk: int = _f(16, None, type=int)
+    page_size: Optional[int] = _f(
+        None, "switch the KV pool to the paged layout: fixed PG-position "
+        "pages + per-slot page tables, with refcounted copy-on-write "
+        "shared-prefix reuse (requests sharing a prompt prefix share its "
+        "pages physically). Tokens are bit-identical to the contiguous "
+        "pool. Default: contiguous", type=int, metavar="PG")
+    num_pages: Optional[int] = _f(
+        None, "page-pool size (with --page-size); default gives every slot "
+        "a full ring — smaller pools admit by page demand and lean on "
+        "prefix sharing", type=int)
+    prefix_reuse: bool = _f(
+        True, "with --page-size: disable the scheduler's prefix index "
+        "(pages without sharing)", flag="--no-prefix-reuse", invert=True)
+    decode_horizon: int = _f(
+        8, "max decode steps fused into one device dispatch (the engine "
+        "adapts the actual horizon to budgets and scheduled arrivals)",
+        type=int)
+    reference: bool = _f(
+        False, "use the stepwise fast=False reference path (one dispatch + "
+        "one host sync per token) instead of the device-resident fast path",
+        switch=True)
+    warmup: bool = _f(
+        False, "pre-compile all pow2 prefill/horizon shapes before serving "
+        "(excluded from the timed run)", switch=True)
+    # -------------------------------------------------------- trace / async
+    trace: int = _f(
+        0, "replay a synthetic arrival schedule of N requests (mixed "
+        "log-uniform lengths, Poisson arrivals)", type=int, metavar="N")
+    trace_seed: int = _f(0, None, type=int)
+    max_queue: Optional[int] = _f(
+        None, "bound the admission queue: submissions beyond Q shed with "
+        "the retryable QueueFull error (back-pressure). Default: unbounded",
+        type=int, metavar="Q")
+    serve_async: bool = _f(
+        False, "serve the --trace through the overload-safe async front-end "
+        "(serving.AsyncServer): per-request token streaming, client retry "
+        "with backoff + jitter on the retryable taxonomy, circuit breaker, "
+        "and priority-aware load shedding; reports the SLO view (TTFT / "
+        "per-token percentiles, goodput)", switch=True)
+    qps: float = _f(
+        0.5, "with --serve-async: offered Poisson arrival rate in requests "
+        "per engine tick (open loop)", type=float, metavar="R")
+    timeout: Optional[float] = _f(
+        None, "with --serve-async: per-request client timeout in engine "
+        "ticks, enforced as the engine deadline (tighter of this and "
+        "--deadline wins)", type=float, metavar="T")
+    retry_attempts: int = _f(
+        4, "with --serve-async: max submission attempts per request "
+        "(retryable rejections back off with exponential backoff + full "
+        "jitter)", type=int)
+    breaker_cooldown: float = _f(
+        16.0, "with --serve-async: circuit-breaker cooldown in engine ticks "
+        "before a half-open probe", type=float)
+    shed_pressure: float = _f(
+        0.5, "with --serve-async: queue pressure (depth/bound) at which the "
+        "lowest priority class is shed; deadlines tighten at 1.5x this "
+        "value and all requests are refused at 2x (capped at 1.0)",
+        type=float)
+    straggler_threshold: Optional[float] = _f(
+        None, "flag an engine step as a straggler when its wall time "
+        "exceeds X times the EMA of recent steps (surfaced as "
+        "stats['straggler_threshold'] and in the final report). Default: "
+        "the monitor's 2.0", type=float, metavar="X")
+    deadline: Optional[float] = _f(
+        None, "give every request a deadline of T engine ticks after its "
+        "arrival; expired requests are shed (queued) or cut short (in "
+        "flight) at the next step boundary and report status 'expired'",
+        type=float, metavar="T")
+    lint: bool = _f(
+        False, "run the QuantLint graph linter over this engine's compiled "
+        "serve paths before serving (warn-only here; `python -m "
+        "repro.analysis.lint --check` is the blocking CI gate)", switch=True)
+
+    # ------------------------------------------------------------- plumbing
+    @property
+    def mesh_str(self) -> Optional[str]:
+        return None if self.mesh is None else "x".join(map(str, self.mesh))
+
+    @classmethod
+    def from_args(cls, ns: argparse.Namespace) -> "ServeConfig":
+        """Build from a parsed ``build_parser()`` namespace."""
+        kw = {}
+        for f in dataclasses.fields(cls):
+            v = getattr(ns, f.name)
+            parse = f.metadata.get("parse")
+            kw[f.name] = parse(v) if parse is not None else v
+        return cls(**kw)
+
+    @classmethod
+    def from_artifact(cls, source) -> "ServeConfig":
+        """The ServeConfig a saved artifact recorded (what it was quantized
+        AS): pass a ``QuantizedModel`` or an artifact directory. Merge with
+        the CLI/API config via ``with_artifact``."""
+        qm = source
+        if isinstance(source, str):
+            from ..pipeline import QuantizedModel
+
+            qm = QuantizedModel.load(source)
+        name = qm.recipe.name
+        quant = ("w8a8" if "w8a8" in name
+                 else "w8a16" if "w8a16" in name else "none")
+        mesh = (tuple(qm.sharding["mesh_shape"])
+                if qm.shard_mode and qm.sharding.get("mesh_shape") else None)
+        return cls(arch=qm.cfg.name, quantize=quant, recipe=name,
+                   kv_bits=qm.cfg.kv_cache_bits, mesh=mesh)
+
+    def with_artifact(self, art: "ServeConfig"):
+        """Merge this (CLI/API) config with an artifact's recorded one under
+        the single precedence rule — see ``_ARTIFACT_POLICY``. Returns
+        ``(merged, notes)``; a "must-match" conflict raises
+        ``ServeConfigError`` naming both sides."""
+        merged, notes = {}, []
+        for name, policy in _ARTIFACT_POLICY.items():
+            cli, rec = getattr(self, name), getattr(art, name)
+            flag = _flag(name)
+            explicit = cli != _DEFAULTS[name]
+            if policy == "cli":
+                if explicit:
+                    merged[name] = cli
+                    if rec is not None and rec != cli:
+                        notes.append(
+                            f"{flag} {_fmt(cli)} overrides the "
+                            f"artifact-recorded {_fmt(rec)}")
+                else:
+                    merged[name] = rec if rec is not None else cli
+            elif policy == "baked":
+                merged[name] = rec
+                if explicit and cli != rec:
+                    notes.append(
+                        f"{flag} {_fmt(cli)} ignored: the artifact is "
+                        f"served as saved ({name}={_fmt(rec)})")
+            else:  # must-match: the calibration saw exactly one value
+                if explicit and rec is not None and cli != rec:
+                    art_name = _ARTIFACT_NAMES.get(name, name)
+                    raise ServeConfigError(
+                        f"{flag} {_fmt(cli)} conflicts with the --load "
+                        f"artifact: it recorded {art_name}={_fmt(rec)} "
+                        f"(recipe {art.recipe!r}). Either drop {flag} to "
+                        f"serve as recorded, or re-quantize the model for "
+                        f"{art_name}={_fmt(cli)}")
+                merged[name] = rec if rec is not None else cli
+        return dataclasses.replace(self, **merged), notes
+
+    def validate(self) -> "ServeConfig":
+        """Check flag-combination invariants BEFORE any quantization runs:
+        a typo must not discard minutes of pipeline work."""
+        if self.quantize not in ("none", "w8a16", "w8a8"):
+            raise ServeConfigError(
+                f"quantize must be none/w8a16/w8a8, got {self.quantize!r}")
+        if self.kv_bits not in (None, 8, 16):
+            raise ServeConfigError(f"kv_bits must be 8 or 16, "
+                                   f"got {self.kv_bits!r}")
+        if self.num_pages is not None and self.page_size is None:
+            raise ServeConfigError("--num-pages needs --page-size")
+        if self.max_queue is not None and self.max_queue < 1:
+            raise ServeConfigError("--max-queue must be >= 1")
+        if self.deadline is not None and self.deadline <= 0:
+            raise ServeConfigError("--deadline must be > 0 engine ticks")
+        if not self.prefix_reuse and self.page_size is None:
+            raise ServeConfigError("--no-prefix-reuse needs --page-size")
+        if self.serve_async and not self.trace:
+            raise ServeConfigError(
+                "--serve-async needs --trace N (open-loop arrivals)")
+        if self.serve_async and self.qps <= 0:
+            raise ServeConfigError("--qps must be > 0 requests/tick")
+        if self.serve_async and self.retry_attempts < 1:
+            raise ServeConfigError("--retry-attempts must be >= 1")
+        if not 0.0 < self.shed_pressure <= 1.0:
+            raise ServeConfigError("--shed-pressure must be in (0, 1]")
+        if (self.straggler_threshold is not None
+                and self.straggler_threshold <= 1):
+            raise ServeConfigError(
+                "--straggler-threshold must be > 1 (a slowdown multiplier)")
+        if self.trace and (self.prompt_len < 1 or self.gen_len < 1):
+            raise ServeConfigError("--trace needs --prompt-len/--gen-len >= 1")
+        if self.mesh is not None:
+            self.mesh = parse_mesh(self.mesh)     # tolerate a "2x4" string
+            import jax
+            import numpy as np
+
+            need = int(np.prod(self.mesh))
+            if need > jax.device_count():
+                raise ServeConfigError(
+                    f"--mesh {self.mesh_str} needs {need} devices but jax "
+                    f"sees {jax.device_count()}; on CPU set XLA_FLAGS="
+                    f"--xla_force_host_platform_device_count={need}")
+        return self
+
+
+# The ONE CLI-vs-artifact precedence rule (per artifact-coupled field):
+#   "cli"        — serving can honor either; an explicit CLI value wins
+#                  over the recorded one (mesh: re-deploy on a new topology).
+#   "baked"      — the saved weights already ARE this value; the artifact
+#                  wins and a differing CLI value is reported as ignored.
+#   "must-match" — the calibration is bound to the recorded value; a
+#                  differing CLI value raises, naming both sides.
+_ARTIFACT_POLICY = {
+    "mesh": "cli",
+    "arch": "baked",
+    "smoke": "baked",
+    "quantize": "baked",
+    "recipe": "baked",
+    "kv_bits": "must-match",
+}
+
+_DEFAULTS = {f.name: f.default for f in dataclasses.fields(ServeConfig)}
+_ARTIFACT_NAMES = {f.name: f.metadata["artifact_name"]
+                   for f in dataclasses.fields(ServeConfig)
+                   if "artifact_name" in f.metadata}
+
+
+def _flag(name: str) -> str:
+    for f in dataclasses.fields(ServeConfig):
+        if f.name == name and "flag" in f.metadata:
+            return f.metadata["flag"]
+    return "--" + name.replace("_", "-")
+
+
+def _fmt(v) -> str:
+    if isinstance(v, tuple):
+        return "x".join(map(str, v))
+    return str(v)
+
+
+def build_parser() -> argparse.ArgumentParser:
+    """Derive the ``python -m repro.launch.serve`` argparse surface from the
+    ServeConfig fields — the dataclass IS the flag list."""
+    ap = argparse.ArgumentParser(
+        description="quantize (or --load) a model and serve it with the "
+                    "continuous-batching engine")
+    for f in dataclasses.fields(ServeConfig):
+        md = dict(f.metadata)
+        help_ = md.pop("help", None)
+        flag = md.pop("flag", "--" + f.name.replace("_", "-"))
+        md.pop("parse", None)
+        md.pop("artifact_name", None)
+        if md.pop("invert", False):
+            ap.add_argument(flag, dest=f.name, action="store_false",
+                            default=f.default, help=help_)
+        elif md.pop("switch", False):
+            ap.add_argument(flag, dest=f.name, action="store_true",
+                            default=f.default, help=help_)
+        else:
+            ap.add_argument(flag, dest=f.name, default=f.default,
+                            help=help_, **md)
+    return ap

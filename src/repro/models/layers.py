@@ -69,6 +69,23 @@ def linear(x, w, b=None):
     return y
 
 
+def _all_w8a8(*ws) -> bool:
+    return all(type(w).__name__ == "QTensor" and w.mode == "w8a8"
+               for w in ws)
+
+
+def _shared_linears(x, wbs):
+    """Several W8A8 projections reading the SAME activation (the qkv trio,
+    the GLU gate/up pair) share one ``quantize_act`` dispatch. Per-row
+    dynamic quantization depends only on the row, so each output is bitwise
+    what its own ``linear``/``qtensor_matmul`` would have produced."""
+    from ..quantized.qtensor import qtensor_matmul_prequant, quantize_input
+
+    a_q, a_s, lead = quantize_input(x)
+    return [qtensor_matmul_prequant(a_q, a_s, w, b, lead, out_dtype=x.dtype)
+            for w, b in wbs]
+
+
 # --------------------------------------------------------------------------
 # Norms
 # --------------------------------------------------------------------------
@@ -146,6 +163,84 @@ def _wsc(x, *spec):
     from jax.sharding import PartitionSpec as P
 
     return jax.lax.with_sharding_constraint(x, P(*spec))
+
+
+# Serving mesh context — SEPARATE from _SHARD_CTX (which arms the training
+# constraints and the MoE shard_map). The serving engine sets this while
+# tracing its jitted impls; the decode hot path then hand-partitions the
+# fused attention kernel with shard_map over ("data", "model") — heads are
+# model-local and slots data-local, so the kernel body runs with ZERO
+# collectives and per-shard results concatenate bitwise.
+
+_SERVE_MESH = {"mesh": None, "dp": ("data",), "model": "model"}
+
+
+def set_serve_mesh(mesh=None, *, dp=("data",), model="model") -> dict:
+    """Arm (or clear, mesh=None) the serve-mesh context. Returns the
+    previous context so engine wrappers can restore it after tracing."""
+    prev = dict(_SERVE_MESH)
+    _SERVE_MESH.update(mesh=mesh, dp=tuple(dp), model=model)
+    return prev
+
+
+def _serve_decode_partition(nq: int, nkv: int, B: int):
+    """(mesh, dp_spec, model_axis) when the decode attention can shard_map
+    head-locally — the model axis must divide BOTH head counts (a shard owns
+    whole GQA groups) — else None. ``dp_spec`` degrades to replication when
+    the slot count doesn't divide the data axis."""
+    mesh = _SERVE_MESH["mesh"]
+    if mesh is None:
+        return None
+    sizes = dict(mesh.shape)
+    mdl = _SERVE_MESH["model"]
+    m_n = sizes.get(mdl, 1)
+    if m_n <= 1 or nq % m_n or nkv % m_n:
+        return None
+    dp = tuple(a for a in _SERVE_MESH["dp"] if a in sizes)
+    dp_n = 1
+    for a in dp:
+        dp_n *= sizes[a]
+    dp_spec = dp if (dp_n > 1 and B % dp_n == 0) else None
+    return mesh, dp_spec, mdl
+
+
+def _fused_decode_tp(part, q1, cache, k_new, v_new, idx, valid, out_dtype):
+    """shard_map the fused decode attention over (data, model): q heads and
+    the KV cache's head axis live on "model", slots on "data". Attention is
+    head-local, so the body emits no collectives — the -tp serving contracts
+    pin the decode collective budget at the same level as single-device."""
+    from jax.sharding import PartitionSpec as P
+
+    from ..kernels.fused_decode.ops import fused_decode
+
+    mesh, dp, mdl = part
+    per_slot = idx.ndim == 2
+
+    def local_fn(q1, ck, cks, cv, cvs, kn, vn, idx, valid):
+        return fused_decode(q1, ck, cks, cv, cvs, kn, vn, idx,
+                            valid=valid, out_dtype=out_dtype)
+
+    fn = _shard_map(
+        local_fn,
+        mesh=mesh,
+        in_specs=(
+            P(dp, mdl, None),                    # q [B, Hq, hd]
+            P(dp, None, mdl, None),              # cache k [B, S, Hkv, hd]
+            P(dp, None, mdl),                    # k_scale [B, S, Hkv]
+            P(dp, None, mdl, None),              # cache v
+            P(dp, None, mdl),                    # v_scale
+            P(dp, None, mdl, None),              # k_new [B, 1, Hkv, hd]
+            P(dp, None, mdl, None),              # v_new
+            P(dp, None) if per_slot else P(None),        # idx [B, 1] | [1]
+            P(dp, None) if per_slot else P(None, None),  # valid [B|1, S]
+        ),
+        out_specs=(P(dp, mdl, None),
+                   (P(dp, None, mdl, None), P(dp, None, mdl),
+                    P(dp, None, mdl, None), P(dp, None, mdl))),
+        **{_SHARD_MAP_CHECK_KW: False},
+    )
+    return fn(q1, cache["k"], cache["k_scale"], cache["v"], cache["v_scale"],
+              k_new, v_new, idx, valid)
 
 
 # --------------------------------------------------------------------------
@@ -328,10 +423,15 @@ def attention_block(
     if capture:
         stats["attn_in"] = jnp.mean(x.reshape(-1, D), 0)
 
-    q = linear(x, p["wq"], p.get("bq"))
     src = x if kv_input is None else kv_input
-    k = linear(src, p["wk"], p.get("bk"))
-    v = linear(src, p["wv"], p.get("bv"))
+    if kv_input is None and _all_w8a8(p["wq"], p["wk"], p["wv"]):
+        q, k, v = _shared_linears(
+            x, [(p["wq"], p.get("bq")), (p["wk"], p.get("bk")),
+                (p["wv"], p.get("bv"))])
+    else:
+        q = linear(x, p["wq"], p.get("bq"))
+        k = linear(src, p["wk"], p.get("bk"))
+        v = linear(src, p["wv"], p.get("bv"))
     Tk_in = src.shape[1]
     q = q.reshape(B, T, nq, hd)
     k = k.reshape(B, Tk_in, nkv, hd)
@@ -349,6 +449,7 @@ def attention_block(
 
     new_cache = None
     attn_fused = None        # set by the int8 decode fast path (kv_attention)
+    attn_q8 = None           # (int8, scale) from the fused quantize-out epilogue
     if cache is not None and kv_input is None:
         # Ring-buffer KV cache with explicit absolute slot positions: length
         # S = min(context, window) for SWA. ``kpos`` holds each slot's
@@ -389,22 +490,56 @@ def attention_block(
 
             valid = m[:, 0, :] if per_slot else m[0][None, :]     # [B|1, S]
             if T == 1:
-                # decode hot path: the fused append-quantize op — the new
-                # token's K/V is quantized once, scattered into the int8
-                # cache, and attention runs straight over it (Pallas on TPU,
-                # folded-scale XLA elsewhere — same backend selection as the
-                # GEMM kernels). Masking rides on the scales: invalid
+                # decode hot path: ONE dispatch from roped q/k/v to the
+                # attention out — the fused_decode megakernel quantizes the
+                # new token's K/V in VMEM, appends it to the int8 cache in
+                # place, and runs the online-softmax attention over the
+                # updated block (Pallas on TPU, the exact stepwise
+                # composition on the XLA tier — backend resolution lives in
+                # kernels.dispatch). Masking rides on the scales: invalid
                 # positions get scale 0, so no dequantized [B, S, H, hd]
                 # cache is ever materialized. The V bias correction is
-                # XLA-only, so a v_err cache routes off the Pallas kernel.
-                backend = ("pallas" if jax.default_backend() == "tpu"
-                           and "v_err" not in cache else "xla")
-                out, leaves = kv_attention_decode(
-                    q[:, 0], cache["k"], cache["k_scale"], cache["v"],
-                    cache["v_scale"], k, v, idx, valid=valid,
-                    out_dtype=x.dtype, backend=backend,
-                    cache_verr=cache.get("v_err"),
+                # XLA-composition-only, so a v_err cache routes off Pallas.
+                from ..kernels.dispatch import serving_backend
+                from ..kernels.fused_decode.ops import (
+                    fused_decode,
+                    fusion_enabled,
                 )
+
+                verr = cache.get("v_err")
+                backend = serving_backend(pallas_ok=verr is None)
+                part = (None if verr is not None
+                        else _serve_decode_partition(nq, nkv, B))
+                # the W8A8 wo projection reads the kernel's quantize-out
+                # epilogue directly (int8 + per-row scale): the standalone
+                # quantize_act dispatch between attention and wo is gone
+                want_q8 = (_all_w8a8(p["wo"]) and verr is None
+                           and part is None)
+                if not fusion_enabled():
+                    out, leaves = kv_attention_decode(
+                        q[:, 0], cache["k"], cache["k_scale"], cache["v"],
+                        cache["v_scale"], k, v, idx, valid=valid,
+                        out_dtype=x.dtype, backend=backend,
+                        cache_verr=verr,
+                    )
+                elif part is not None:
+                    # TP: shard_map over (data, model) — head-local, zero
+                    # collectives, no quantize-out (the row scale is a
+                    # cross-head reduction)
+                    out, leaves = _fused_decode_tp(
+                        part, q[:, 0], cache, k, v, idx, valid, x.dtype)
+                else:
+                    res, leaves = fused_decode(
+                        q[:, 0], cache["k"], cache["k_scale"], cache["v"],
+                        cache["v_scale"], k, v, idx, valid=valid,
+                        out_dtype=x.dtype,
+                        backend=None if verr is not None else backend,
+                        cache_verr=verr, quantize_out=want_q8,
+                    )
+                    if want_q8:
+                        out, attn_q8 = res[0], (res[1], res[2])
+                    else:
+                        out = res
                 attn_fused = out[:, None]                   # [B, 1, Hq, hd]
             else:
                 # chunked prefill: append-quantize once, then dequantize for
@@ -445,7 +580,14 @@ def attention_block(
         attn = attn_fused.reshape(B, T, nq * hd)
         if capture:
             stats["o_in"] = jnp.mean(attn.reshape(-1, nq * hd), 0)
-        out = linear(attn, p["wo"], p.get("bo"))
+        if attn_q8 is not None:
+            from ..quantized.qtensor import qtensor_matmul_prequant
+
+            out = qtensor_matmul_prequant(
+                attn_q8[0], attn_q8[1], p["wo"], p.get("bo"), (B, T),
+                out_dtype=x.dtype)
+        else:
+            out = linear(attn, p["wo"], p.get("bo"))
         return out, new_cache, stats
 
     group = nq // nkv
@@ -495,8 +637,13 @@ def mlp_block(p: dict, x: jnp.ndarray, act: str, capture: bool = False):
     if capture:
         stats["mlp_in"] = jnp.mean(x.reshape(-1, x.shape[-1]), 0)
     if act.endswith("_glu"):
-        g = linear(x, p["wg"], p.get("bg"))
-        u = linear(x, p["wu"], p.get("bu"))
+        if _all_w8a8(p["wg"], p["wu"]):
+            # gate and up read the same x: one shared quantize dispatch
+            g, u = _shared_linears(x, [(p["wg"], p.get("bg")),
+                                       (p["wu"], p.get("bu"))])
+        else:
+            g = linear(x, p["wg"], p.get("bg"))
+            u = linear(x, p["wu"], p.get("bu"))
         h = _act(act[:-4])(g) * u
     else:
         h = _act(act)(linear(x, p["wu"], p.get("bu")))

@@ -66,10 +66,26 @@ def quantize_param(w: jnp.ndarray, *, per_channel: bool = True,
     return QTensor(q, scale.astype(jnp.float32), mode)
 
 
+def quantize_input(x: jnp.ndarray):
+    """Dynamic-quantize an activation once for SHARED use across every W8A8
+    projection reading it (the qkv trio, the GLU gate/up pair): returns
+    (x_q int8 [M, K], x_scale fp32 [M], lead shape). One quantize dispatch
+    replaces one-per-consumer — the values are bitwise what each consumer's
+    own ``quantize_act`` would have produced, since per-row quantization
+    depends only on the row."""
+    from ..kernels.dispatch import serving_backend
+    from ..kernels.quantize_act.ops import quantize_act
+
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    a_q, a_s = quantize_act(x2, backend=serving_backend())
+    return a_q, a_s, lead
+
+
 def qtensor_matmul(x: jnp.ndarray, w: QTensor, bias: Optional[jnp.ndarray]):
     """Route an activation through a quantized weight. x: [..., K]."""
+    from ..kernels.dispatch import serving_backend
     from ..kernels.qmatmul_w8a16.ops import qmatmul_w8a16
-    from ..kernels.qmatmul_w8a8.ops import qmatmul_w8a8
     from ..kernels.quantize_act.ops import quantize_act
 
     lead = x.shape[:-1]
@@ -77,12 +93,27 @@ def qtensor_matmul(x: jnp.ndarray, w: QTensor, bias: Optional[jnp.ndarray]):
     N = w.q.shape[-1]
     x2 = x.reshape(-1, K)
     assert w.q.ndim == 2, "stacked QTensors must be sliced (scan) before use"
-    backend = "pallas" if jax.default_backend() == "tpu" else "xla"
+    backend = serving_backend()
     if w.mode == "w8a8":
         a_q, a_s = quantize_act(x2, backend=backend)
-        y = qmatmul_w8a8(a_q, w.q, a_s, w.scale, bias, backend=backend,
-                         out_dtype=x.dtype)
-    else:
-        y = qmatmul_w8a16(x2, w.q, w.scale, bias, backend=backend,
-                          out_dtype=x.dtype)
+        return qtensor_matmul_prequant(a_q, a_s, w, bias, lead,
+                                       out_dtype=x.dtype)
+    y = qmatmul_w8a16(x2, w.q, w.scale, bias, backend=backend,
+                      out_dtype=x.dtype)
+    return y.reshape(*lead, N)
+
+
+def qtensor_matmul_prequant(a_q: jnp.ndarray, a_s: jnp.ndarray, w: QTensor,
+                            bias: Optional[jnp.ndarray], lead: tuple,
+                            *, out_dtype=jnp.float32):
+    """W8A8 matmul over an already-quantized activation (from
+    ``quantize_input`` or a kernel's quantize-out epilogue). a_q [M, K]
+    int8, a_s [M] fp32; returns [*lead, N] in ``out_dtype``."""
+    from ..kernels.dispatch import serving_backend
+    from ..kernels.qmatmul_w8a8.ops import qmatmul_w8a8
+
+    assert w.mode == "w8a8", "prequantized inputs feed W8A8 weights"
+    N = w.q.shape[-1]
+    y = qmatmul_w8a8(a_q, w.q, a_s, w.scale, bias,
+                     backend=serving_backend(), out_dtype=out_dtype)
     return y.reshape(*lead, N)

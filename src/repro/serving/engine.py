@@ -67,6 +67,7 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import functools
 import math
 import os
 import time
@@ -89,45 +90,6 @@ def required_cache_len(prompt_len: int, max_new_tokens: int,
     return max(padded, prompt_len + max_new_tokens - 1)
 
 
-# pooled-cache leaves are [L, B, S, ...] except the per-slot bookkeeping
-_SLOT_AXIS = {"kpos": 0, "pos": 0}  # default: axis 1
-
-
-def _slice_slot(cache: dict, slot) -> dict:
-    return {
-        k: jax.lax.dynamic_slice_in_dim(v, slot, 1, _SLOT_AXIS.get(k, 1))
-        for k, v in cache.items()
-    }
-
-
-def _write_slot(cache: dict, sub: dict, slot) -> dict:
-    return {
-        k: jax.lax.dynamic_update_slice_in_dim(
-            cache[k], sub[k].astype(cache[k].dtype), slot, _SLOT_AXIS.get(k, 1)
-        )
-        for k in cache
-    }
-
-
-def _gather_slots(cache: dict, slots) -> dict:
-    """Pull rows ``slots`` [P] out of the pooled cache (slot axis per leaf)."""
-    return {
-        k: jnp.take(v, slots, axis=_SLOT_AXIS.get(k, 1))
-        for k, v in cache.items()
-    }
-
-
-def _restore_rows(sub: dict, orig: dict, is_real) -> dict:
-    """Replace pad rows of the [P]-row sub-cache with their pre-prefill
-    state, so their scatter back into the pool is the identity write."""
-    out = {}
-    for k, v in sub.items():
-        shape = [1] * v.ndim
-        shape[_SLOT_AXIS.get(k, 1)] = -1
-        out[k] = jnp.where(is_real.reshape(shape), v, orig[k])
-    return out
-
-
 def _pow2_floor(n: int) -> int:
     return 1 << (max(1, n).bit_length() - 1)
 
@@ -136,14 +98,19 @@ def _pow2_ceil(n: int) -> int:
     return 1 << (max(1, n) - 1).bit_length()
 
 
-def _scatter_slots(cache: dict, sub: dict, slots) -> dict:
-    """Write the [P]-row sub-cache back into rows ``slots`` of the pool."""
-    out = {}
-    for k, v in cache.items():
-        s = sub[k].astype(v.dtype)
-        out[k] = (v.at[slots].set(s) if _SLOT_AXIS.get(k, 1) == 0
-                  else v.at[:, slots].set(s))
-    return out
+def _take_window(leaf, win):
+    """Gather ring positions ``win`` [B, C] along the S axis of a payload
+    leaf [L, B, S, ...] → [L, B, C, ...]."""
+    idx = win.astype(jnp.int32).reshape(
+        (1,) + win.shape + (1,) * (leaf.ndim - 3))
+    return jnp.take_along_axis(leaf, idx, axis=2)
+
+
+def _put_window(leaf, win, vals):
+    """Scatter ``vals`` [L, B, C, ...] back into ring positions ``win``
+    [B, C] along the S axis of a payload leaf [L, B, S, ...]."""
+    b = jnp.arange(leaf.shape[1])[:, None]
+    return leaf.at[:, b, win].set(vals.astype(leaf.dtype))
 
 
 def _paged_view(cache: dict, page_size: int, max_len: int) -> dict:
@@ -441,6 +408,29 @@ class ServingEngine:
             "decode_horizon": (self._paged_decode_horizon_impl if self.paged
                                else self._decode_horizon_impl),
         }
+        if mesh is not None:
+            # arm the serve-mesh context while each impl TRACES, so the
+            # decode hot path can shard_map its fused attention kernel over
+            # ("data", "model") — see models.layers.set_serve_mesh
+            from ..models.layers import set_serve_mesh
+            from ..sharding.partition import _dp_world
+
+            dp_axes, _ = _dp_world(mesh)
+            if isinstance(dp_axes, str):
+                dp_axes = (dp_axes,)
+
+            def _armed(fn):
+                @functools.wraps(fn)
+                def wrapped(*a, **k):
+                    prev = set_serve_mesh(mesh, dp=dp_axes)
+                    try:
+                        return fn(*a, **k)
+                    finally:
+                        set_serve_mesh(prev["mesh"], dp=prev["dp"],
+                                       model=prev["model"])
+                return wrapped
+
+            self._impls = {n: _armed(f) for n, f in self._impls.items()}
         self._prefill_fn = jax.jit(self._impls["prefill"], **kw)
         self._decode_fn = jax.jit(self._impls["decode"], **kw)
         self._prefill_multi_fn = jax.jit(self._impls["prefill_multi"], **kw)
@@ -453,70 +443,90 @@ class ServingEngine:
         return cls(qm.model, qm.params, qm.cfg, **kwargs)
 
     # -------------------------------------------------------- jitted kernels
+    def _prefill_masked(self, params, tokens, cache, n_valid, fresh, is_real):
+        """Full-width masked prefill: EVERY pool slot advances one chunk in
+        slot position — no gather/scatter, each slot's rows never move.
+
+        This is what keeps the pool's slot sharding alive under TP: the old
+        pooled gather (``jnp.take`` over dynamic slot ids) forced GSPMD to
+        all-gather whole cache leaves around every prefill dispatch — the
+        collective-budget ``known_debt`` the -tp serving contracts used to
+        carry. In slot position the batch axis IS the pool axis, so every
+        row stays on its owning shard and the prefill emits no pool-sized
+        collectives at all.
+
+        tokens: [B, C] in slot position (zero rows for slots not
+        prefilling); n_valid: [B] (pads 1 — they select position 0's
+        logits); fresh: [B] rows whose bookkeeping reset (kpos → -1, pos →
+        0) was deferred from ``CachePool.allocate(reset=False)``; is_real:
+        [B] marks rows that are actually prefilling. Pad rows run the model
+        for shape stability; their bookkeeping rolls back wholesale and
+        their C-wide ring write window — saved before the model's in-place
+        appends — is restored after, so a pad row's cache bytes are
+        bit-identical before/after (live keys of decoding slots riding
+        along are never clobbered, even across a ring wrap). Returns
+        per-row greedy tokens from each row's last valid position, the
+        per-row non-finite flag masked to real rows, and the updated pool.
+        """
+        C = tokens.shape[1]
+        S = cache["kpos"].shape[1]
+        start = jnp.where(fresh, 0, cache["pos"])            # [B]
+        win = (start[:, None]
+               + jnp.arange(C, dtype=jnp.int32)[None, :]) % S  # [B, C]
+        payload = [k for k in cache if k not in KNOWN_BOOKKEEPING]
+        saved = {k: _take_window(cache[k], win) for k in payload}
+        sub = {
+            **cache,
+            "kpos": jnp.where(fresh[:, None], -1, cache["kpos"]),
+            "pos": start,
+        }
+        logits, sub = self.model.prefill(
+            params, tokens, sub, logits_at=n_valid - 1
+        )
+        end = start + n_valid
+        kpos = jnp.where(sub["kpos"] >= end[:, None], -1, sub["kpos"])
+        out = {
+            **sub,
+            "kpos": jnp.where(is_real[:, None], kpos, cache["kpos"]),
+            "pos": jnp.where(is_real, end, cache["pos"]),
+        }
+        for k in payload:
+            keep = is_real.reshape((1, -1) + (1,) * (saved[k].ndim - 2))
+            vals = jnp.where(keep, _take_window(out[k], win), saved[k])
+            out[k] = _put_window(out[k], win, vals)
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)       # [B]
+        bad = ~jnp.all(jnp.isfinite(logits), -1) & is_real   # [B]
+        return tok, bad, out
+
     def _prefill_chunk_impl(self, params, tokens, cache, slot, n_valid):
-        """One batch-1 prompt chunk into `slot` of the pooled cache.
-
-        tokens: [1, C] (zero-padded past n_valid). Pad tokens run through the
-        model — causality keeps them out of every valid position's K/V — and
-        their cache writes are invalidated before commit. Returns the greedy
-        token from the last valid position, the per-row non-finite flag
-        (NaN quarantine), and the updated pooled cache.
+        """One prompt chunk into `slot` of the pooled cache (the stepwise
+        reference path). tokens: [1, C] (zero-padded past n_valid); the row
+        is placed at its slot of a full-width masked prefill, so the pool
+        is addressed in slot position here too (no dynamic slice under TP).
+        Returns the greedy token from the last valid position and the
+        per-row non-finite flag, both [1].
         """
-        sub = _slice_slot(cache, slot)
-        start = sub["pos"]                                   # [1]
-        logits, sub = self.model.prefill(
-            params, tokens, sub, logits_at=n_valid - 1
+        B = cache["kpos"].shape[0]
+        is_real = jnp.arange(B) == slot
+        tok, bad, cache = self._prefill_masked(
+            params,
+            jnp.where(is_real[:, None], jnp.broadcast_to(tokens, (B,) + tokens.shape[1:]), 0),
+            cache,
+            jnp.where(is_real, n_valid, 1).astype(jnp.int32),
+            jnp.zeros((B,), bool),
+            is_real,
         )
-        end = start + n_valid
-        sub = {
-            **sub,
-            "kpos": jnp.where(sub["kpos"] >= end[:, None], -1, sub["kpos"]),
-            "pos": end,
-        }
-        tok = jnp.argmax(logits, -1).astype(jnp.int32)       # [1]
-        bad = ~jnp.all(jnp.isfinite(logits), -1)             # [1]
-        return tok, bad, _write_slot(cache, sub, slot)
+        return (jax.lax.dynamic_slice_in_dim(tok, slot, 1),
+                jax.lax.dynamic_slice_in_dim(bad, slot, 1), cache)
 
-    def _prefill_multi_impl(self, params, tokens, cache, slots, n_valid,
-                            fresh, is_real):
-        """All currently-prefilling slots advance one chunk in ONE dispatch.
-
-        tokens: [P, C] (each row zero-padded past its n_valid); slots: [P]
-        distinct slot ids; n_valid: [P]; fresh: [P] marks rows whose slot
-        bookkeeping reset (kpos → -1, pos → 0) was deferred from
-        ``CachePool.allocate(reset=False)`` into this call. Rows are
-        gathered out of the pool, run as one batch-P prefill (row-independent
-        compute keeps each row bit-identical to its batch-1 dispatch), and
-        scattered back.
-
-        P is padded to a power of two, clamped at num_slots (bounding the
-        distinct compiled shapes to ceil(log2(num_slots))+1): pad rows
-        (``is_real`` False) carry slots that
-        are NOT prefilling, and are restored to their pre-prefill state
-        before the scatter — an identity write over unique indices, so pads
-        are exact no-ops. Returns per-row greedy tokens from each row's last
-        valid position and the updated pooled cache.
-        """
-        orig = _gather_slots(cache, slots)
-        sub = {
-            **orig,
-            "kpos": jnp.where(fresh[:, None], -1, orig["kpos"]),
-            "pos": jnp.where(fresh, 0, orig["pos"]),
-        }
-        start = sub["pos"]                                   # [P]
-        logits, sub = self.model.prefill(
-            params, tokens, sub, logits_at=n_valid - 1
-        )
-        end = start + n_valid
-        sub = {
-            **sub,
-            "kpos": jnp.where(sub["kpos"] >= end[:, None], -1, sub["kpos"]),
-            "pos": end,
-        }
-        sub = _restore_rows(sub, orig, is_real)
-        tok = jnp.argmax(logits, -1).astype(jnp.int32)       # [P]
-        bad = ~jnp.all(jnp.isfinite(logits), -1) & is_real   # [P]
-        return tok, bad, _scatter_slots(cache, sub, slots)
+    def _prefill_multi_impl(self, params, tokens, cache, n_valid, fresh,
+                            is_real):
+        """All currently-prefilling slots advance one chunk in ONE
+        full-width dispatch (see ``_prefill_masked``). One compiled shape —
+        [num_slots, C] — covers every prefill step; row-independent compute
+        keeps each row bit-identical to its batch-1 dispatch."""
+        return self._prefill_masked(params, tokens, cache, n_valid, fresh,
+                                    is_real)
 
     def _decode_masked(self, params, tokens, cache, active):
         """One full-slot-batch decode step. ``active`` [B] marks rows that
@@ -586,18 +596,16 @@ class ServingEngine:
         rows = jnp.full((B, C), -1, jnp.int32).at[slot].set(row)
         return tok, bad, _paged_commit(cache, dense, rows, self.page_size)
 
-    def _paged_prefill_multi_impl(self, params, tokens, cache, slots,
-                                  n_valid, fresh, is_real):
+    def _paged_prefill_multi_impl(self, params, tokens, cache, n_valid,
+                                  fresh, is_real):
         dense = _paged_view(cache, self.page_size, self.max_len)
-        start = jnp.where(fresh, 0, jnp.take(cache["pos"], slots))   # [P]
+        start = jnp.where(fresh, 0, cache["pos"])            # [B]
         tok, bad, dense = self._prefill_multi_impl(params, tokens, dense,
-                                                   slots, n_valid, fresh,
-                                                   is_real)
+                                                   n_valid, fresh, is_real)
         C = tokens.shape[1]
-        B, S = cache["kpos"].shape
-        row = (start[:, None] + jnp.arange(C, dtype=jnp.int32)[None, :]) % S
-        row = jnp.where(is_real[:, None], row, -1)       # pad rows: no write
-        rows = jnp.full((B, C), -1, jnp.int32).at[slots].set(row)
+        S = cache["kpos"].shape[1]
+        rows = (start[:, None] + jnp.arange(C, dtype=jnp.int32)[None, :]) % S
+        rows = jnp.where(is_real[:, None], rows, -1)     # pad rows: no write
         return tok, bad, _paged_commit(cache, dense, rows, self.page_size)
 
     def _paged_decode_impl(self, params, tokens, cache, active):
@@ -1064,61 +1072,51 @@ class ServingEngine:
                     self._finish_prefill(fl, int(tok[0]))
 
     def _prefill_phase_fast(self) -> None:
-        """One [P, C] dispatch covering every prefilling slot (P padded to
-        the next power of two with identity rows); syncs only when some row
-        consumed its final prompt chunk this step."""
+        """One full-width [B, C] dispatch covering every prefilling slot in
+        slot position (non-prefilling slots ride along masked — see
+        ``_prefill_masked``); syncs only when some row consumed its final
+        prompt chunk this step."""
         C = self.prefill_chunk
         pending = [self._inflight[s] for s in sorted(self._inflight)
                    if not self._inflight[s].prefill_done]
         if not pending:
             return
-        P = min(_pow2_ceil(len(pending)), self.num_slots)
-        # pad with slots that are NOT prefilling (there are always enough:
-        # P <= num_slots); their rows are restored before the scatter
-        busy = {fl.slot for fl in pending}
-        pads = iter(s for s in range(self.num_slots) if s not in busy)
-        tokens = np.zeros((P, C), np.int32)
-        n_valid = np.ones((P,), np.int32)   # pads select position 0's logits
-        slots = np.zeros((P,), np.int32)
-        fresh = np.zeros((P,), bool)
-        is_real = np.zeros((P,), bool)
-        for i in range(P):
-            if i < len(pending):
-                fl = pending[i]
-                prompt = np.asarray(fl.req.prompt, np.int32)
-                n = min(C, len(prompt) - fl.prefilled)
-                tokens[i, :n] = prompt[fl.prefilled:fl.prefilled + n]
-                n_valid[i], slots[i], fresh[i] = n, fl.slot, fl.fresh
-                is_real[i] = True
-            else:
-                slots[i] = next(pads)
+        B = self.num_slots
+        tokens = np.zeros((B, C), np.int32)
+        n_valid = np.ones((B,), np.int32)   # pads select position 0's logits
+        fresh = np.zeros((B,), bool)
+        is_real = np.zeros((B,), bool)
+        for fl in pending:
+            s = fl.slot
+            prompt = np.asarray(fl.req.prompt, np.int32)
+            n = min(C, len(prompt) - fl.prefilled)
+            tokens[s, :n] = prompt[fl.prefilled:fl.prefilled + n]
+            n_valid[s], fresh[s], is_real[s] = n, fl.fresh, True
         tok, bad, self.pool.cache = self._prefill_multi_fn(
             self.params, jnp.asarray(tokens), self.pool.cache,
-            jnp.asarray(slots), jnp.asarray(n_valid), jnp.asarray(fresh),
-            jnp.asarray(is_real),
+            jnp.asarray(n_valid), jnp.asarray(fresh), jnp.asarray(is_real),
         )
         self.stats["prefill_chunks"] += len(pending)
         self.stats["prefill_dispatches"] += 1
         finishers = []
-        for i, fl in enumerate(pending):
+        for fl in pending:
             if fl.fresh:
                 fl.fresh = False
                 # the deferred fresh-mask reset just committed inside the
                 # jitted prefill — the pool stops tracking it as pending
                 self.pool.note_reset_committed(fl.slot)
-            fl.prefilled += int(n_valid[i])
+            fl.prefilled += int(n_valid[fl.slot])
             if fl.prefill_done:
-                finishers.append(i)
+                finishers.append(fl)
         if finishers:
             tok_np = np.asarray(tok)      # materialize once for all rows
             bad_np = np.asarray(bad)
             self.stats["host_syncs"] += 1
-            for i in finishers:
-                fl = pending[i]
-                if bool(bad_np[i]) or fl.req.rid in self._inject_bad:
+            for fl in finishers:
+                if bool(bad_np[fl.slot]) or fl.req.rid in self._inject_bad:
                     self._quarantine(fl)
                 else:
-                    self._finish_prefill(fl, int(tok_np[i]))
+                    self._finish_prefill(fl, int(tok_np[fl.slot]))
 
     def _decode_phase(self) -> None:
         active = [fl for fl in self._inflight.values()
@@ -1278,31 +1276,27 @@ class ServingEngine:
     # enumeration so the two can never drift apart.
 
     def warmup_shapes(self) -> set:
-        """The (jit, dim) pairs ``warmup()`` compiles: every power-of-two
-        prefill batch width (clamped at num_slots) and decode-scan horizon
-        on the fast path; the batch-1 stepwise shapes otherwise."""
+        """The (jit, dim) pairs ``warmup()`` compiles: the single full-width
+        prefill shape and every power-of-two decode-scan horizon on the fast
+        path; the batch-1 stepwise shapes otherwise."""
         if not self.fast:
             return {("prefill", 1), ("decode", 1)}
-        widths = {min(1 << i, self.num_slots)
-                  for i in range((self.num_slots - 1).bit_length() + 1)}
         horizons = {1 << i for i in range(self.decode_horizon.bit_length())
                     if 1 << i <= self.decode_horizon}
-        return ({("prefill_multi", w) for w in widths}
+        return ({("prefill_multi", self.num_slots)}
                 | {("decode_horizon", k) for k in horizons})
 
     def dispatch_shapes(self) -> set:
-        """Every (jit, dim) the serving loop can actually dispatch: prefill
-        widths ``min(pow2_ceil(P), num_slots)`` for 1 <= P <= num_slots
-        pending rows, horizons ``pow2_floor(k)`` for 1 <= k <=
+        """Every (jit, dim) the serving loop can actually dispatch: the
+        full-width masked prefill is ONE compiled shape ([num_slots, C] in
+        slot position), horizons ``pow2_floor(k)`` for 1 <= k <=
         decode_horizon. The recompilation-guard lint rule checks this set is
         CLOSED under ``warmup_shapes()`` — a live step never compiles."""
         if not self.fast:
             return {("prefill", 1), ("decode", 1)}
-        widths = {min(_pow2_ceil(n), self.num_slots)
-                  for n in range(1, self.num_slots + 1)}
         horizons = {_pow2_floor(k)
                     for k in range(1, self.decode_horizon + 1)}
-        return ({("prefill_multi", w) for w in widths}
+        return ({("prefill_multi", self.num_slots)}
                 | {("decode_horizon", k) for k in horizons})
 
     def serve_jit_specs(self) -> dict:
@@ -1330,8 +1324,8 @@ class ServingEngine:
             "prefill_multi": (
                 self._prefill_multi_fn, self._impls["prefill_multi"],
                 (self.params, jnp.zeros((B, C), jnp.int32), cache,
-                 jnp.arange(B, dtype=jnp.int32), jnp.ones((B,), jnp.int32),
-                 jnp.zeros((B,), bool), jnp.ones((B,), bool)),
+                 jnp.ones((B,), jnp.int32), jnp.zeros((B,), bool),
+                 jnp.ones((B,), bool)),
                 {},
             ),
             "decode_horizon": (

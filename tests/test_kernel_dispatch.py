@@ -1,0 +1,157 @@
+"""kernels/dispatch.py registry: resolution order (explicit > env >
+default), the REPRO_KERNEL_BACKEND override, unknown-op/-backend errors,
+the one-pad-convention-per-op rule, and the registry-driven
+``serving_kernel_specs`` enumeration."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import dispatch, serving_kernel_specs
+from repro.kernels.dispatch import (
+    ENV_VAR,
+    TIERS,
+    _pad_to,
+    register_impl,
+    register_spec,
+    resolve,
+)
+
+
+@pytest.fixture(autouse=True)
+def _pristine_registry():
+    """The registry is module-global state shared with the lint snapshot
+    tests — scrub every dummy ``_t_*`` registration on the way out."""
+    yield
+    for d in (dispatch._REGISTRY, dispatch._PAD, dispatch._SPECS):
+        for op in [op for op in d if op.startswith("_t_")]:
+            del d[op]
+
+
+def _register_dummy(op, tiers=TIERS, pad=None):
+    impls = {}
+    for t in tiers:
+        @register_impl(op, t, pad=pad)
+        def impl(*a, _t=t, **kw):
+            return _t
+        impls[t] = impl
+    return impls
+
+
+# ------------------------------------------------------------ resolution
+
+def test_explicit_backend_wins_over_env(monkeypatch):
+    _register_dummy("_t_explicit")
+    monkeypatch.setenv(ENV_VAR, "ref")
+    assert resolve("_t_explicit", "xla")() == "xla"
+
+
+def test_env_override_wins_over_default(monkeypatch):
+    _register_dummy("_t_env")
+    monkeypatch.setenv(ENV_VAR, "ref")
+    assert resolve("_t_env")() == "ref"
+    monkeypatch.delenv(ENV_VAR)
+    # no env, no explicit: the validation default (interpret on CPU)
+    assert resolve("_t_env")() == dispatch.default_backend()
+
+
+def test_serving_backend_honors_env(monkeypatch):
+    monkeypatch.delenv(ENV_VAR, raising=False)
+    # CPU production default is the folded-scale XLA tier
+    assert dispatch.serving_backend() == "xla"
+    monkeypatch.setenv(ENV_VAR, "interpret")
+    assert dispatch.serving_backend() == "interpret"
+
+
+# ----------------------------------------------------------------- errors
+
+def test_unknown_op_raises_with_registered_list():
+    with pytest.raises(KeyError, match="unknown kernel op"):
+        resolve("_t_nonexistent_op")
+
+
+def test_unknown_backend_tier_rejected_at_registration():
+    with pytest.raises(ValueError, match="unknown backend tier"):
+        register_impl("_t_bad_tier", "cuda")
+
+
+def test_missing_tier_raises_naming_available():
+    _register_dummy("_t_partial", tiers=("xla", "ref"))
+    with pytest.raises(ValueError, match="no 'pallas' implementation"):
+        resolve("_t_partial", "pallas")
+
+
+def test_shadowing_refused():
+    _register_dummy("_t_shadow", tiers=("xla",))
+    with pytest.raises(ValueError, match="refusing to shadow"):
+        @register_impl("_t_shadow", "xla")
+        def other(*a, **kw):
+            return None
+
+
+# ------------------------------------------------------- pad conventions
+
+def test_pad_convention_conflict_raises():
+    _register_dummy("_t_pad", tiers=("xla",), pad="zero")
+    with pytest.raises(ValueError, match="disagree on the pad convention"):
+        @register_impl("_t_pad", "ref", pad="zero-scale")
+        def other(*a, **kw):
+            return None
+
+
+def test_unknown_pad_convention_rejected():
+    with pytest.raises(ValueError, match="unknown pad convention"):
+        register_impl("_t_pad2", "xla", pad="nan")
+
+
+def test_pad_to_is_right_zero_padding():
+    x = jnp.arange(6, dtype=jnp.float32).reshape(2, 3)
+    y = _pad_to(x, 4, axis=1)
+    assert y.shape == (2, 4)
+    np.testing.assert_array_equal(np.asarray(y[:, :3]), np.asarray(x))
+    np.testing.assert_array_equal(np.asarray(y[:, 3]), 0.0)
+    assert _pad_to(x, 3, axis=1) is x          # already aligned: no copy
+
+
+def test_real_ops_declare_their_conventions():
+    serving_kernel_specs()                      # imports every op package
+    assert dispatch.pad_convention("qmatmul_w8a8") == "zero"
+    assert dispatch.pad_convention("qmatmul_w8a16") == "zero"
+    assert dispatch.pad_convention("kv_attention") == "zero-scale"
+    assert dispatch.pad_convention("fused_decode") == "zero-scale"
+
+
+# ------------------------------------------------------------- enumeration
+
+def test_serving_specs_enumerate_registry():
+    specs = serving_kernel_specs()
+    for op in ("qmatmul_w8a8", "qmatmul_w8a16", "quantize_act",
+               "kv_attention_decode", "fused_decode"):
+        assert op in specs, f"registry lost {op}"
+        fn, args, kw = specs[op]
+        assert callable(fn) and isinstance(args, tuple)
+
+
+def test_register_spec_refuses_duplicates():
+    @register_spec("_t_spec")
+    def build(**kw):
+        return (lambda: None, (), {})
+
+    with pytest.raises(ValueError, match="already has a spec"):
+        @register_spec("_t_spec")
+        def build2(**kw):
+            return (lambda: None, (), {})
+
+
+def test_no_per_package_backend_selector_copies():
+    """The redesign's point: dispatch.py is the ONLY place the backend
+    ternary lives — no kernels/*/ops.py re-grows its own copy."""
+    import pathlib
+
+    import repro.kernels as K
+
+    root = pathlib.Path(K.__file__).parent
+    for ops_py in root.glob("*/ops.py"):
+        text = ops_py.read_text()
+        assert "def default_backend" not in text, f"{ops_py} regrew a selector"
+        assert "def serving_backend" not in text, f"{ops_py} regrew a selector"
+        assert "def _pad_to" not in text, f"{ops_py} regrew _pad_to"

@@ -1,0 +1,134 @@
+"""ServeConfig: the typed serving surface. Pins the argparse surface is
+DERIVED from the dataclass (args -> config round trip), the artifact round
+trip (config -> artifact -> config), and the single CLI-vs-artifact
+precedence/mismatch rule (a kv_bits conflict raises naming both sides)."""
+import dataclasses
+import types
+
+import pytest
+
+from repro.launch.serve_config import (
+    ServeConfig,
+    ServeConfigError,
+    build_parser,
+    parse_mesh,
+)
+
+
+def _fake_artifact(recipe="serve-w8a8-kv8", kv_bits=8, arch="qwen2-0.5b-smoke",
+                   mesh_shape=None):
+    """Duck-typed QuantizedModel: just the fields from_artifact reads."""
+    sharding = {"mode": "tp", "mesh_shape": list(mesh_shape)} \
+        if mesh_shape else {}
+    return types.SimpleNamespace(
+        recipe=types.SimpleNamespace(name=recipe),
+        cfg=types.SimpleNamespace(name=arch, kv_cache_bits=kv_bits),
+        sharding=sharding,
+        shard_mode=sharding.get("mode"),
+    )
+
+
+# ------------------------------------------------------- args <-> config
+
+def test_defaults_round_trip_through_argparse():
+    """Empty argv must produce exactly ServeConfig() — the parser is derived
+    from the dataclass, so the two default sets CANNOT drift."""
+    ns = build_parser().parse_args([])
+    assert ServeConfig.from_args(ns) == ServeConfig()
+
+
+def test_every_field_has_a_flag():
+    ns = build_parser().parse_args([])
+    for f in dataclasses.fields(ServeConfig):
+        assert hasattr(ns, f.name), f"field {f.name} lost its CLI face"
+
+
+def test_args_to_config_values():
+    ns = build_parser().parse_args([
+        "--arch", "qwen2-0.5b", "--smoke", "--quantize", "w8a8",
+        "--kv-bits", "8", "--mesh", "2x4", "--slots", "8",
+        "--no-prefix-reuse", "--page-size", "16", "--trace", "12",
+        "--qps", "1.5", "--serve-async",
+    ])
+    c = ServeConfig.from_args(ns)
+    assert c.smoke and c.quantize == "w8a8" and c.kv_bits == 8
+    assert c.mesh == (2, 4) and c.mesh_str == "2x4"
+    assert c.slots == 8 and not c.prefix_reuse and c.page_size == 16
+    assert c.trace == 12 and c.serve_async and c.qps == 1.5
+
+
+def test_validate_flag_combinations():
+    with pytest.raises(ServeConfigError, match="--num-pages needs"):
+        ServeConfig(num_pages=4).validate()
+    with pytest.raises(ServeConfigError, match="--no-prefix-reuse needs"):
+        ServeConfig(prefix_reuse=False).validate()
+    with pytest.raises(ServeConfigError, match="--serve-async needs --trace"):
+        ServeConfig(serve_async=True).validate()
+    with pytest.raises(ServeConfigError, match="shed-pressure"):
+        ServeConfig(shed_pressure=0.0).validate()
+    with pytest.raises(ServeConfigError, match="wants DxM"):
+        parse_mesh("banana")
+    assert parse_mesh("2x2x2") == (2, 2, 2)
+    # a valid config passes and returns itself for chaining
+    c = ServeConfig(trace=4)
+    assert c.validate() is c
+
+
+# --------------------------------------------------- artifact round trip
+
+def test_config_artifact_config_round_trip():
+    """args -> config -> (recorded) artifact -> config: what the artifact
+    records merges back losslessly when the CLI side left it unset."""
+    art = ServeConfig.from_artifact(
+        _fake_artifact(recipe="serve-w8a16-kv8", kv_bits=8,
+                       mesh_shape=(2, 4)))
+    assert art.recipe == "serve-w8a16-kv8"
+    assert art.quantize == "w8a16" and art.kv_bits == 8
+    assert art.mesh == (2, 4)
+
+    merged, notes = ServeConfig().with_artifact(art)
+    assert merged.kv_bits == 8 and merged.recipe == "serve-w8a16-kv8"
+    assert merged.mesh == (2, 4)
+    assert notes == []                       # nothing explicit = nothing to say
+    # and a second round trip is a fixed point
+    again, _ = merged.with_artifact(art)
+    assert again == merged
+
+
+def test_kv_bits_mismatch_raises_naming_both_sides():
+    art = ServeConfig.from_artifact(_fake_artifact(kv_bits=16,
+                                                   recipe="serve-w8a16"))
+    with pytest.raises(ServeConfigError) as ei:
+        ServeConfig(kv_bits=8).with_artifact(art)
+    msg = str(ei.value)
+    assert "--kv-bits 8" in msg              # the CLI side
+    assert "kv_cache_bits=16" in msg         # the artifact side
+    assert "re-quantize" in msg              # the remedy
+
+
+def test_matching_kv_bits_is_fine():
+    art = ServeConfig.from_artifact(_fake_artifact(kv_bits=8))
+    merged, _ = ServeConfig(kv_bits=8).with_artifact(art)
+    assert merged.kv_bits == 8
+
+
+def test_cli_mesh_overrides_artifact_mesh():
+    art = ServeConfig.from_artifact(_fake_artifact(mesh_shape=(2, 4)))
+    merged, notes = ServeConfig(mesh=(2, 2)).with_artifact(art)
+    assert merged.mesh == (2, 2)
+    assert any("overrides" in n for n in notes)
+
+
+def test_baked_fields_keep_artifact_value_with_note():
+    art = ServeConfig.from_artifact(_fake_artifact(recipe="serve-w8a8-kv8"))
+    merged, notes = ServeConfig(quantize="none").with_artifact(art)
+    assert merged.quantize == "w8a8"         # the weights already ARE w8a8
+    assert any("ignored" in n for n in notes)
+
+
+def test_repro_exports_serve_surface():
+    import repro
+
+    assert repro.ServeConfig is ServeConfig
+    assert repro.ServeConfigError is ServeConfigError
+    assert callable(repro.serve)

@@ -214,6 +214,57 @@ def test_tp_artifact_save_load_serve_round_trip(tp_artifacts, mesh, tmp_path):
     assert _tokens(eng, trace) == before
 
 
+# ------------------------------------------------- shard_map decode kernel
+
+def test_shard_map_decode_engages_and_matches(fp32_setup, monkeypatch):
+    """On a mesh whose model axis divides BOTH head counts (2x2: Hq=4,
+    Hkv=2), the int8-KV decode hot path routes through the shard_map'd fused
+    kernel (head-local attention, zero collectives in the body) — and the
+    tokens still match the single-device engine bit for bit."""
+    from repro.models import layers
+
+    model, params, cfg = fp32_setup
+    assert cfg.n_heads % 2 == 0 and cfg.n_kv_heads % 2 == 0
+    trace = _mixed_trace(cfg.vocab_size)
+    single = _tokens(_engine(model, params, cfg, kv_bits=8), trace)
+
+    calls = []
+    real = layers._fused_decode_tp
+
+    def counting(*a, **kw):
+        calls.append(1)
+        return real(*a, **kw)
+
+    monkeypatch.setattr(layers, "_fused_decode_tp", counting)
+    small = make_production_mesh(shape=(2, 2))
+    sharded = _tokens(_engine(model, params, cfg, mesh=small, kv_bits=8),
+                      trace)
+    assert calls, "shard_map decode path never engaged on the 2x2 mesh"
+    assert sharded == single
+
+
+def test_shard_map_decode_guard_disengages_on_indivisible_heads(fp32_setup,
+                                                                monkeypatch,
+                                                                mesh):
+    """model=4 does not divide n_kv_heads=2: the guard must fall back to the
+    replicated decode path rather than shard_map a ragged head split."""
+    from repro.models import layers
+
+    model, params, cfg = fp32_setup
+    assert cfg.n_kv_heads % mesh.shape["model"] != 0
+    calls = []
+    real = layers._fused_decode_tp
+
+    def counting(*a, **kw):
+        calls.append(1)
+        return real(*a, **kw)
+
+    monkeypatch.setattr(layers, "_fused_decode_tp", counting)
+    trace = _mixed_trace(cfg.vocab_size)
+    _tokens(_engine(model, params, cfg, mesh=mesh, kv_bits=8), trace)
+    assert not calls
+
+
 # ---------------------------------------------------------------- mesh ctor
 
 def test_make_production_mesh_shape_override():
